@@ -1,0 +1,12 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  table1_dse       -- Table I  (DSE reuse requirements)
+  table2_resources -- Table II (resource budget analog: VMEM/MXU per engine)
+  table3_e2e       -- Table III (end-to-end CNN throughput + ratios)
+  table4_mlperf    -- Table IV (ResNet50 latency/throughput + low-channel)
+  fig8_dwc         -- Fig. 8  (DWC CTC vs kernel/stride)
+  roofline         -- EXPERIMENTS.md roofline table from dry-run artifacts
+
+`python -m benchmarks.run` executes all and prints `name,us_per_call,derived`
+CSV rows.
+"""

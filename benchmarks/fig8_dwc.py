@@ -1,0 +1,42 @@
+"""Fig. 8 reproduction: DWC PE load-vs-MAC time across kernel/stride, plus a
+measured sweep of the actual DWC kernels (CPU relative numbers)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dse
+from repro.core.config import EngineConfig
+from repro.kernels import ops
+
+
+def run(measure: bool = True):
+    rows = []
+    for p in dse.fig8_sweep():
+        rows.append((
+            f"fig8/model/k{p.kernel}s{p.stride}", 0.0,
+            f"load_cycles={p.load_cycles:.0f},mac_cycles={p.mac_cycles},"
+            f"ctc={p.ctc:.2f}"))
+    best = max(dse.fig8_sweep(), key=lambda p: p.ctc)
+    rows.append(("fig8/best", 0.0,
+                 f"k={best.kernel},s={best.stride} (paper: 7x7 highest)"))
+
+    if measure:
+        eng = EngineConfig(quant="none", backend="ref")
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(1, 64, 64, 128)).astype(np.float32))
+        for k in (3, 5, 7):
+            w = jnp.asarray((rng.normal(size=(k, k, 128)) * 0.2
+                             ).astype(np.float32))
+            f = jax.jit(lambda x, w: ops.dwc2d(x, w, None, 1, "SAME",
+                                               "none", eng))
+            f(x, w).block_until_ready()
+            t0 = time.perf_counter()
+            for _ in range(5):
+                f(x, w).block_until_ready()
+            us = (time.perf_counter() - t0) / 5 * 1e6
+            flops = 2 * 64 * 64 * 128 * k * k
+            rows.append((f"fig8/measured_cpu/k{k}s1", us,
+                         f"gflops_s={flops / us / 1e3:.2f}"))
+    return rows

@@ -1,0 +1,171 @@
+"""Analytic TPU-v5e performance model for the CNN zoo.
+
+Mirrors the paper's own modeling methodology (Section IV-A/IV-C: per-engine
+CTC analysis) with TPU constants.  Per layer:
+
+    t = max(effective_ops / engine_peak, bytes / HBM_BW)
+
+where effective_ops folds the utilization penalties the paper identifies:
+  * standard conv on the Conv PE: MXU utilization from contraction/output
+    channel alignment (DSE model);
+  * depthwise conv on the DWC PE: VPU-bound (no MXU reduction available);
+  * depthwise conv WITHOUT the DWC engine (XVDPU-analog baseline): dense
+    diagonalized GEMM -> ops inflated by the channel count;
+  * stage-0 conv with/without the Low-Channel unit: window folding vs raw
+    IC=3 against the 128-deep MXU contraction.
+
+The model returns per-image seconds; ratios between engine configs are the
+reproduction of Table III/IV's ratio columns.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+from repro.core import dse
+from repro.core.config import CNNConfig
+
+PEAK_INT8 = dse.PEAK_INT8_OPS      # MXU int8
+PEAK_VPU = 5.0e12                  # VPU int ops/s (8x128 lanes, ~1 GHz, FMA)
+HBM = dse.HBM_BW
+
+
+@dataclass
+class EngineModel:
+    # dwc_mode: "engine" (DWC PE: tiled VPU + fused requant),
+    #           "vpu"    (TPU-native XLA grouped conv: VPU, lower efficiency),
+    #           "dense"  (XVDPU-analog: depthwise on the GEMM engine --
+    #                     channel-diagonalized, ops x C inflation; this is
+    #                     what our baseline code path actually executes)
+    dwc_mode: str = "engine"
+    use_low_channel: bool = True
+    fused_epilogue: bool = True    # MISC on engine: no extra eltwise pass
+
+    @property
+    def use_dwc_engine(self):
+        return self.dwc_mode == "engine"
+
+
+# Paper Section V-B: measured Conv-PE utilization on ResNet50 stage 0.  Used
+# as the stage-0 utilization of the no-low-channel-unit baseline (the
+# XVDPU-analog); our unit reaches the window-folded MXU coverage instead.
+STAGE0_BASELINE_UTIL = 0.131
+VPU_NATIVE_EFF = 0.4               # XLA grouped-conv VPU efficiency
+
+
+def _conv_time(px: int, ic: int, oc: int, k: int, eng: EngineModel,
+               first_layer: bool = False) -> float:
+    """One standard conv: px output pixels, k x k window."""
+    ops = 2.0 * px * ic * oc * k * k
+    in_bytes = px * ic            # int8 activations (stride-adjusted approx)
+    w_bytes = k * k * ic * oc
+    out_bytes = px * oc
+    if first_layer:
+        if eng.use_low_channel:
+            # window folding (contraction = ic*k*k) + concurrency: the unit
+            # runs while the main engines proceed (paper Section V-B), so
+            # only its memory traffic remains on the critical path.
+            return (in_bytes + w_bytes + out_bytes) / HBM
+        util = STAGE0_BASELINE_UTIL
+    else:
+        util = dse.mxu_utilization(min(ic, 128), min(oc, 128), kk=1)
+    util = max(util, 1e-3)
+    t_compute = ops / (PEAK_INT8 * util)
+    t_mem = (in_bytes + w_bytes + out_bytes) / HBM
+    if not eng.fused_epilogue:
+        t_mem += 2.0 * out_bytes * 4 / HBM     # i32 psum round-trip
+    return max(t_compute, t_mem)
+
+
+def _dwc_time(px: int, c: int, k: int, eng: EngineModel) -> float:
+    ops = 2.0 * px * c * k * k
+    byts = px * c * 2 + k * k * c
+    if eng.dwc_mode == "engine":
+        t_compute = ops / PEAK_VPU
+    elif eng.dwc_mode == "vpu":
+        t_compute = ops / (PEAK_VPU * VPU_NATIVE_EFF)
+    else:
+        # "dense": diagonalized GEMM on the MXU (ops x C inflation,
+        # utilization capped by the 128-lane contraction)
+        dense_ops = 2.0 * px * c * c * k * k
+        util = dse.mxu_utilization(min(c, 128), min(c, 128))
+        t_compute = dense_ops / (PEAK_INT8 * max(util, 1e-3))
+        byts += k * k * c * c                  # dense weight reads
+    t_mem = byts / HBM
+    if not eng.fused_epilogue:
+        t_mem += 2.0 * px * c * 4 / HBM
+    return max(t_compute, t_mem)
+
+
+def _eltwise_time(px: int, c: int, eng: EngineModel) -> float:
+    if eng.fused_epilogue:
+        return 0.0                 # fused into the producing kernel
+    return 3.0 * px * c / HBM      # separate read-read-write pass
+
+
+def model_inference_time(cfg: CNNConfig, eng: EngineModel) -> float:
+    """Seconds per image on one v5e chip."""
+    hw = cfg.input_hw
+    t = 0.0
+    hw_out = -(-hw // cfg.stem_stride)
+    t += _conv_time(hw_out * hw_out, cfg.input_ch, cfg.stem_ch,
+                    cfg.stem_kernel, eng, first_layer=True)
+    hw, ch = hw_out, cfg.stem_ch
+    for st in cfg.stages:
+        for r in range(st.repeat):
+            stride = st.stride if r == 0 else 1
+            if st.kind == "pool":
+                stride = 1                  # pool handled below
+            hw_out = -(-hw // stride)
+            px = hw_out * hw_out
+            if st.kind == "conv":
+                t += _conv_time(px, ch, st.out_ch, st.kernel, eng)
+                ch = st.out_ch
+            elif st.kind == "bottleneck":
+                mid = st.out_ch // 4
+                t += _conv_time(px, ch, mid, 1, eng)
+                t += _conv_time(px, mid, mid, st.kernel, eng)
+                t += _conv_time(px, mid, st.out_ch, 1, eng)
+                if ch != st.out_ch or stride != 1:
+                    t += _conv_time(px, ch, st.out_ch, 1, eng)
+                t += _eltwise_time(px, st.out_ch, eng)
+                ch = st.out_ch
+            elif st.kind == "inverted":
+                mid = ch * st.expand
+                t += _conv_time(px, ch, mid, 1, eng)
+                t += _dwc_time(px, mid, st.kernel, eng)
+                t += _conv_time(px, mid, st.out_ch, 1, eng)
+                t += _eltwise_time(px, st.out_ch, eng)
+                ch = st.out_ch
+            elif st.kind == "dwsep":
+                t += _dwc_time(px, ch, st.kernel, eng)
+                t += _conv_time(px, ch, st.out_ch, 1, eng)
+                ch = st.out_ch
+            elif st.kind == "fire":
+                sq = st.out_ch // 8
+                t += _conv_time(px, ch, sq, 1, eng)
+                t += _conv_time(px, sq, st.out_ch // 2, 1, eng)
+                t += _conv_time(px, sq, st.out_ch // 2, 3, eng)
+                ch = st.out_ch
+            hw = hw_out
+            if st.kind == "pool":
+                hw = -(-hw // st.stride)
+    t += 2.0 * ch * cfg.num_classes / PEAK_INT8
+    return t
+
+
+def modeled_fps(cfg: CNNConfig, eng: EngineModel) -> float:
+    return 1.0 / model_inference_time(cfg, eng)
+
+
+OURS = EngineModel()
+# XVDPU-analog: what our baseline code path executes (dense-diag DWC,
+# no low-channel unit, unfused epilogues).
+BASELINE = EngineModel(dwc_mode="dense", use_low_channel=False,
+                       fused_epilogue=False)
+# TPU-native middle baseline: XLA grouped conv on the VPU, still no unit
+# or fusion -- the fairest "what you'd get without this framework" line.
+TPU_NATIVE = EngineModel(dwc_mode="vpu", use_low_channel=False,
+                         fused_epilogue=False)
+NO_LOWPE = EngineModel(use_low_channel=False)
+NO_DWC = EngineModel(dwc_mode="dense")

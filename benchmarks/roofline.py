@@ -1,0 +1,50 @@
+"""Roofline table from the dry-run artifacts (experiments/dryrun/*.json)."""
+import glob
+import json
+import os
+
+from repro.core import roofline as rl
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_records(directory: str = DRYRUN_DIR):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run():
+    rows = []
+    recs = load_records()
+    if not recs:
+        return [("roofline/missing", 0.0,
+                 f"no dry-run artifacts in {DRYRUN_DIR}; run "
+                 "`python -m repro.launch.dryrun --all --both-meshes`")]
+    ok = skipped = err = 0
+    for r in recs:
+        name = f"roofline/{r['mesh']}/{r['arch']}/{r['shape']}"
+        if r["status"] == "skipped":
+            skipped += 1
+            rows.append((name, 0.0, "skipped:" + r["reason"][:60]))
+            continue
+        if r["status"] != "ok":
+            err += 1
+            rows.append((name, 0.0, "ERROR:" + r["error"][:80]))
+            continue
+        ok += 1
+        bound_us = max(r["t_compute_s"], r["t_memory_s"],
+                       r["t_collective_s"]) * 1e6
+        rows.append((
+            name, bound_us,
+            f"bound={r['bottleneck']},roofline={100 * r['roofline_fraction']:.1f}%,"
+            f"useful={r['useful_flop_ratio']:.2f},"
+            f"tc={r['t_compute_s'] * 1e3:.2f}ms,"
+            f"tm={r['t_memory_s'] * 1e3:.2f}ms,"
+            f"tx={r['t_collective_s'] * 1e3:.2f}ms,"
+            f"fit={r['bytes_per_device'] / 2**30:.1f}GB/dev"))
+    rows.append(("roofline/summary", 0.0,
+                 f"ok={ok},skipped={skipped},errors={err}"))
+    return rows

@@ -1,0 +1,38 @@
+"""Table I reproduction: DSE reuse requirements under bandwidth splits."""
+import time
+
+from repro.core import dse
+
+# Paper Table I rows: (bw_f, bw_w) -> (FMReuse, WTReuse, OC, IHxIW)
+PAPER = {
+    (16, 16): (8, 64, 64, 64),
+    (16, 32): (8, 32, 64, 32),
+    (32, 16): (4, 64, 32, 64),
+    (32, 32): (4, 32, 32, 32),
+}
+
+
+def run():
+    rows = []
+    t0 = time.perf_counter()
+    table = dse.table1()
+    us = (time.perf_counter() - t0) * 1e6 / len(table)
+    matches = 0
+    for r in table:
+        want = PAPER[(r.bw_f, r.bw_w)]
+        got = (r.fm_reuse, r.wt_reuse, r.oc, r.ihw)
+        ok = got == want
+        matches += ok
+        rows.append((f"table1/bw_f={r.bw_f},bw_w={r.bw_w}", us,
+                     f"fm={r.fm_reuse},wt={r.wt_reuse},oc={r.oc},"
+                     f"ihw={r.ihw},ctc={r.ctc:.2f},paper_match={ok}"))
+    choice = dse.dpuv4e_choice()
+    rows.append(("table1/dpuv4e_choice", us,
+                 f"bwf32_bww16_oc{choice.oc}_ihw{choice.ihw},"
+                 f"match={matches}/4"))
+    # Eq. 3-4: the ACC/NL buffer plan behind IH=4, IW=16.
+    plan = dse.acc_buffer_plan(4, 16, 32)
+    rows.append(("table1/eq3_acc_plan", 0.0,
+                 f"psum={plan.psum_bytes}B,total={plan.total_bytes}B,"
+                 f"fits64KB={plan.fits},iw_max={dse.max_iw()}"))
+    return rows

@@ -1,0 +1,68 @@
+"""Table II analog: per-engine scarce-resource budget.
+
+The paper's scarce resources are DSP/LUT/FF/BRAM slices; ours are VMEM bytes
+(operand blocks + the PsumStack scratch), MXU lane occupancy, and the count
+of epilogue passes eliminated by fusion (the analog of the 95.8% DSP saving:
+every fused epilogue is an HBM round-trip that never becomes a separate op).
+"""
+import time
+
+import numpy as np
+
+from repro.core import dse
+from repro.core.config import EngineConfig
+from repro.kernels import ops
+
+
+# Representative layers: (name, M, K, N) -- conv-as-GEMM shapes.
+LAYERS = [
+    ("resnet50_3x3_256", 3136, 2304, 256),
+    ("resnet50_1x1_1024", 3136, 256, 1024),
+    ("mobilenet_pw_512", 784, 512, 512),
+    ("lm_qkv_4096", 4096, 4096, 6144),
+    ("lm_ffn_14336", 4096, 4096, 14336),
+]
+
+
+def run():
+    rows = []
+    for name, m, k, n in LAYERS:
+        t0 = time.perf_counter()
+        t = dse.solve_conv_blocks(m, n, k, in_dtype_bytes=1)
+        us = (time.perf_counter() - t0) * 1e6
+        psum = t.bm * t.bn * 4
+        operands = 2 * (t.bm * t.bk + t.bk * t.bn)
+        rows.append((
+            f"table2/conv_pe/{name}", us,
+            f"blocks={t.bm}x{t.bn}x{t.bk},vmem={t.vmem_bytes}B,"
+            f"psum={psum}B,operands={operands}B,"
+            f"mxu_util={t.mxu_util:.2f},ctc={t.ctc:.2f}"))
+
+    # DWC engine: VMEM per (batch, channel-block) cell.
+    for hw, c in [(112, 128), (56, 128), (28, 128)]:
+        in_bytes = (hw + 2) * (hw + 2) * 128       # int8 input tile + halo
+        out_bytes = hw * hw * 128 * 4
+        rows.append((
+            f"table2/dwc_pe/{hw}x{hw}x{c}", 0.0,
+            f"in_tile={in_bytes}B,acc={out_bytes}B,"
+            f"fits_vmem={in_bytes + out_bytes <= dse.VMEM_TARGET}"))
+
+    # Low-channel unit: stage-0 footprint.
+    img = 230 * 230 * 4
+    acc = 112 * 112 * 64 * 4
+    rows.append((
+        "table2/low_channel/resnet_stage0", 0.0,
+        f"img={img}B,acc={acc}B,fits={img + acc <= dse.VMEM_TARGET},"
+        f"util_folded={dse.mxu_utilization(3, 64, 49):.3f},"
+        f"util_plain={dse.mxu_utilization(3, 64, 1):.4f}"))
+
+    # Fusion savings (the DSP-saving analog): epilogue ops that never hit HBM
+    # as separate passes, counted over ResNet50.
+    n_convs = 53
+    n_eltwise = 16
+    saved = n_convs + n_eltwise        # bias/act fused + residual adds fused
+    rows.append((
+        "table2/fusion_savings/resnet50", 0.0,
+        f"fused_epilogues={n_convs},fused_eltwise={n_eltwise},"
+        f"separate_passes_eliminated={saved} (paper: DSP -95.8%)"))
+    return rows

@@ -1,0 +1,63 @@
+"""Table IV reproduction: ResNet50 (MLPerf-style) latency/throughput and the
+Low-Channel Conv Unit ablation.
+
+Paper claims checked:
+  * 8PE+LowPE vs 8PE: +1.14x throughput, -7.5% latency (Section V-B/VI-D);
+  * stage-0 utilization collapse without the specialized unit (13.1%);
+  * single-batch latency is bandwidth-limited (their DDR4 argument; ours is
+    the HBM memory term).
+"""
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks import perf_model as pm
+from repro.configs.cnn_zoo import RESNET50
+from repro.core import dse
+
+
+def run():
+    rows = []
+    t_ours = pm.model_inference_time(RESNET50, pm.OURS)
+    t_nolow = pm.model_inference_time(RESNET50, pm.NO_LOWPE)
+    t_base = pm.model_inference_time(RESNET50, pm.BASELINE)
+
+    # batch-1 latency and batch-8 (paper's batch) throughput; weights are
+    # amortized across the batch in the memory term, approximated by the
+    # compute-bound limit at batch 8.
+    fps1 = 1.0 / t_ours
+    rows.append((
+        "table4/resnet50_v5e_modeled", t_ours * 1e6,
+        f"latency_b1={t_ours * 1e3:.3f}ms,fps_b1={fps1:.0f},"
+        f"paper_8pe_latency=1.75ms,paper_8pe_fps=4568"))
+
+    thr_gain = t_nolow / t_ours
+    lat_cut = 1.0 - t_ours / t_nolow
+    rows.append((
+        "table4/low_channel_ablation", 0.0,
+        f"throughput_gain={thr_gain:.3f}x(paper 1.14x),"
+        f"latency_cut={100 * lat_cut:.1f}%(paper 7.5%)"))
+
+    stage0_util_plain = dse.mxu_utilization(3, 64, kk=1)
+    stage0_util_fold = dse.mxu_utilization(3, 64, kk=49)
+    rows.append((
+        "table4/stage0_utilization", 0.0,
+        f"plain={stage0_util_plain:.4f},folded={stage0_util_fold:.3f},"
+        f"paper_conv_pe_util=0.131"))
+
+    rows.append((
+        "table4/baseline_comparison", 0.0,
+        f"ours_vs_xvdpu_analog={t_base / t_ours:.2f}x"
+        f"(paper 8PE vs XV-C32B8: 1.13x at iso-clock)"))
+
+    # TOPS/W analog: report modeled TOPS utilization per engine config
+    # (power is not measurable here; the paper's 8.6x/1.4x TOPS/W claims are
+    # resource-efficiency claims, whose TPU analog is useful-flops ratio).
+    gops = RESNET50.gops * 1e9
+    rows.append((
+        "table4/efficiency", 0.0,
+        f"useful_tops_ours={gops / t_ours / 1e12:.1f},"
+        f"useful_tops_baseline={gops / t_base / 1e12:.1f},"
+        f"efficiency_gain={t_base / t_ours:.2f}x"))
+    return rows

@@ -1,0 +1,139 @@
+"""Render EXPERIMENTS.md tables from the dry-run / hillclimb artifacts.
+
+    PYTHONPATH=src python experiments/report.py
+"""
+import glob
+import json
+import os
+import sys
+
+DRY = os.path.join(os.path.dirname(__file__), "dryrun")
+PERF = os.path.join(os.path.dirname(__file__), "perf")
+EXP = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _fmt_t(s):
+    if s >= 1.0:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s * 1e3:.1f}ms"
+    return f"{s * 1e6:.0f}us"
+
+
+def roofline_table():
+    recs = {}
+    for path in glob.glob(os.path.join(DRY, "*.json")):
+        r = json.load(open(path))
+        recs[(r["mesh"], r["arch"], r["shape"])] = r
+    lines = []
+    # Single-pod: the full roofline table (assignment: roofline is
+    # single-pod only).
+    sub = {(a, s): r for (m, a, s), r in recs.items() if m == "pod16x16"}
+    if sub:
+        lines.append("\n### Mesh `pod16x16` (256 chips) — roofline baselines\n")
+        lines.append("| arch × shape | compute | memory | collective | "
+                     "bound | useful | roofline | GB/dev | status |")
+        lines.append("|---|---|---|---|---|---|---|---|---|")
+        for a in sorted({a for a, _ in sub}):
+            for s in SHAPE_ORDER:
+                r = sub.get((a, s))
+                if r is None:
+                    continue
+                if r["status"] == "skipped":
+                    lines.append(f"| {a} × {s} | — | — | — | — | — | — | — | "
+                                 f"skip (O(L²) @500k) |")
+                    continue
+                if r["status"] != "ok":
+                    lines.append(f"| {a} × {s} | — | — | — | — | — | — | — | "
+                                 f"ERROR {r['error'][:60]} |")
+                    continue
+                lines.append(
+                    f"| {a} × {s} | {_fmt_t(r['t_compute_s'])} | "
+                    f"{_fmt_t(r['t_memory_s'])} | "
+                    f"{_fmt_t(r['t_collective_s'])} | "
+                    f"{r['bottleneck']} | {r['useful_flop_ratio']:.2f} | "
+                    f"{100 * r['roofline_fraction']:.1f}% | "
+                    f"{r['bytes_per_device'] / 2**30:.1f} | ok |")
+    # Multi-pod: the compile-pass table (proves the pod axis shards).
+    sub = {(a, s): r for (m, a, s), r in recs.items() if m == "pod2x16x16"}
+    if sub:
+        lines.append("\n### Mesh `pod2x16x16` (512 chips) — multi-pod "
+                     "compile pass\n")
+        lines.append("| arch × shape | compiled | GB/dev | compile time |")
+        lines.append("|---|---|---|---|")
+        for a in sorted({a for a, _ in sub}):
+            for s in SHAPE_ORDER:
+                r = sub.get((a, s))
+                if r is None:
+                    continue
+                if r["status"] == "skipped":
+                    lines.append(f"| {a} × {s} | skip (O(L²) @500k) | — | — |")
+                elif r["status"] != "ok":
+                    lines.append(f"| {a} × {s} | **ERROR** "
+                                 f"{r['error'][:60]} | — | — |")
+                else:
+                    lines.append(
+                        f"| {a} × {s} | yes | "
+                        f"{r['bytes_per_device'] / 2**30:.1f} | "
+                        f"{r['compile_s']:.0f}s |")
+    ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    sk = sum(1 for r in recs.values() if r["status"] == "skipped")
+    er = sum(1 for r in recs.values() if r["status"] == "error")
+    lines.append(f"\n**Totals: {ok} compiled ok, {sk} skipped (assignment "
+                 f"rule), {er} errors.**\n")
+    return "\n".join(lines)
+
+
+def perf_table():
+    paths = sorted(glob.glob(os.path.join(PERF, "*.json")))
+    if not paths:
+        return "(hillclimb artifacts not yet generated)"
+    by_cell = {}
+    for p in paths:
+        r = json.load(open(p))
+        cell = os.path.basename(p).split("__")[0]
+        by_cell.setdefault(cell, []).append(r)
+    lines = []
+    for cell, rs in by_cell.items():
+        rs.sort(key=lambda r: r.get("variant", ""))
+        lines.append(f"\n### {cell}: {rs[0]['arch']} × {rs[0]['shape']}\n")
+        lines.append("| variant | hypothesis | compute | memory | "
+                     "collective | bound | roofline |")
+        lines.append("|---|---|---|---|---|---|---|")
+        for r in rs:
+            if r["status"] != "ok":
+                lines.append(f"| {r.get('variant')} | {r.get('hypothesis', '')[:60]} "
+                             f"| — | — | — | ERROR | — |")
+                continue
+            lines.append(
+                f"| {r['variant']} | {r['hypothesis'][:70]}… | "
+                f"{_fmt_t(r['t_compute_s'])} | {_fmt_t(r['t_memory_s'])} | "
+                f"{_fmt_t(r['t_collective_s'])} | {r['bottleneck']} | "
+                f"{100 * r['roofline_fraction']:.2f}% |")
+    return "\n".join(lines)
+
+
+def _splice(text: str, marker: str, content: str) -> str:
+    """Replace everything between `marker` and the next '## ' heading."""
+    if marker not in text:
+        return text
+    head, _, tail = text.partition(marker)
+    idx = tail.find("\n## ")
+    rest = tail[idx:] if idx >= 0 else "\n"
+    return head + marker + "\n" + content + "\n" + rest
+
+
+def main():
+    with open(EXP) as f:
+        text = f.read()
+    text = _splice(text, "<!-- ROOFLINE_TABLE -->", roofline_table())
+    text = _splice(text, "<!-- PERF_LOG -->", perf_table())
+    with open(EXP, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: DPUV4E-on-TPU -- an INT8 engine-centric JAX training/serving framework."""
+__version__ = "0.1.0"

@@ -1,0 +1,122 @@
+"""Config registry: the 10 assigned architectures (+ reduced smoke variants)
+and per-shape input specs."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ArchConfig, ShapeConfig, SHAPES
+
+from repro.configs.granite_8b import ARCH as GRANITE_8B
+from repro.configs.qwen2_1_5b import ARCH as QWEN2_1_5B
+from repro.configs.gemma2_2b import ARCH as GEMMA2_2B
+from repro.configs.minitron_4b import ARCH as MINITRON_4B
+from repro.configs.qwen2_vl_7b import ARCH as QWEN2_VL_7B
+from repro.configs.grok_1_314b import ARCH as GROK_1_314B
+from repro.configs.granite_moe_1b import ARCH as GRANITE_MOE_1B
+from repro.configs.recurrentgemma_2b import ARCH as RECURRENTGEMMA_2B
+from repro.configs.whisper_tiny import ARCH as WHISPER_TINY
+from repro.configs.falcon_mamba_7b import ARCH as FALCON_MAMBA_7B
+
+ARCHS: Dict[str, ArchConfig] = {a.name: a for a in [
+    GRANITE_8B, QWEN2_1_5B, GEMMA2_2B, MINITRON_4B, QWEN2_VL_7B,
+    GROK_1_314B, GRANITE_MOE_1B, RECURRENTGEMMA_2B, WHISPER_TINY,
+    FALCON_MAMBA_7B,
+]}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def list_archs():
+    return sorted(ARCHS)
+
+
+# ---------------------------------------------------------------------------
+# Reduced (smoke-test) variants: same family, tiny dimensions.
+# ---------------------------------------------------------------------------
+
+def reduced(arch: ArchConfig) -> ArchConfig:
+    n_layers = max(2, len(arch.block_pattern))
+    nh = 4
+    nkv = max(1, min(arch.n_kv_heads, nh * arch.n_kv_heads // arch.n_heads)) \
+        if arch.n_heads >= nh else arch.n_kv_heads
+    nkv = max(1, nkv)
+    if nh % nkv != 0:
+        nkv = 1
+    return dataclasses.replace(
+        arch,
+        name=arch.name + "-smoke",
+        n_layers=n_layers,
+        d_model=128, n_heads=nh, n_kv_heads=nkv, head_dim=32,
+        d_ff=0 if arch.d_ff == 0 else 256,
+        vocab_size=512,
+        local_window=min(arch.local_window, 64),
+        n_experts=min(arch.n_experts, 4) if arch.n_experts else 0,
+        topk=min(arch.topk, 2) if arch.topk else 0,
+        capacity_factor=4.0,     # lossless dispatch at smoke scale
+        encoder_layers=min(arch.encoder_layers, 2),
+        encoder_seq=64 if arch.encoder_seq else 0,
+        lru_width=128 if arch.lru_width else 0,
+        max_seq_len=4096,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(arch: ArchConfig, shape: ShapeConfig
+                ) -> Tuple[dict, dict]:
+    """Returns (batch of ShapeDtypeStructs, logical-axes tree).
+
+    train:   {tokens, labels [, positions/embeds/enc_embeds]}
+    prefill: same minus labels
+    decode:  {tokens [B, 1]} (the cache is supplied by the serving layer)
+    """
+    b = shape.global_batch
+    l = shape.seq_len
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    d = arch.d_model
+    sds = jax.ShapeDtypeStruct
+
+    if shape.kind == "decode":
+        batch = {"tokens": sds((b, 1), i32)}
+        axes = {"tokens": ("dp", None)}
+        if arch.mrope:
+            batch["positions"] = sds((b, 1, 3), i32)
+            axes["positions"] = ("dp", None, None)
+        return batch, axes
+
+    batch, axes = {}, {}
+    if arch.family == "vlm":
+        batch["embeds"] = sds((b, l, d), bf16)       # stub patch embeddings
+        axes["embeds"] = ("dp", None, None)
+        batch["positions"] = sds((b, l, 3), i32)     # M-RoPE t/h/w ids
+        axes["positions"] = ("dp", None, None)
+    elif arch.family == "audio":
+        batch["enc_embeds"] = sds((b, arch.encoder_seq, d), bf16)
+        axes["enc_embeds"] = ("dp", None, None)
+        batch["tokens"] = sds((b, l), i32)
+        axes["tokens"] = ("dp", None)
+    else:
+        batch["tokens"] = sds((b, l), i32)
+        axes["tokens"] = ("dp", None)
+    if shape.kind == "train":
+        batch["labels"] = sds((b, l), i32)
+        axes["labels"] = ("dp", None)
+    return batch, axes
+
+
+def cell_is_runnable(arch: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """The assignment's skip rules for (arch x shape) cells."""
+    if shape.name == "long_500k" and not arch.subquadratic:
+        return False, ("skip: full O(L^2) attention at 524288 tokens "
+                       "(assignment rule; see DESIGN.md)")
+    return True, ""

@@ -1,0 +1,10 @@
+"""granite-8b [dense]: llama-arch code model.  [arXiv:2405.04324; hf]"""
+from repro.core.config import ArchConfig
+
+ARCH = ArchConfig(
+    name="granite-8b", family="dense",
+    n_layers=36, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab_size=49152, head_dim=128,
+    block_pattern=("global",), mlp_act="silu",
+    tie_embeddings=False, rope_theta=10_000_000.0,
+)

@@ -1,0 +1,13 @@
+"""grok-1-314b [moe]: 8 experts top-2, attention/final softcaps.
+[hf:xai-org/grok-1; unverified]"""
+from repro.core.config import ArchConfig
+
+ARCH = ArchConfig(
+    name="grok-1-314b", family="moe",
+    n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=32768, vocab_size=131072, head_dim=128,
+    block_pattern=("global",), mlp_act="gelu",
+    n_experts=8, topk=2,
+    attn_softcap=30.0, final_softcap=30.0,
+    tie_embeddings=True, emb_scale=True,
+)

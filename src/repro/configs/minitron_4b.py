@@ -1,0 +1,11 @@
+"""minitron-4b [dense]: pruned nemotron (squared-ReLU, ungated MLP).
+[arXiv:2407.14679; hf]"""
+from repro.core.config import ArchConfig
+
+ARCH = ArchConfig(
+    name="minitron-4b", family="dense",
+    n_layers=32, d_model=3072, n_heads=24, n_kv_heads=8,
+    d_ff=9216, vocab_size=256000, head_dim=128,
+    block_pattern=("global",), mlp_act="relu2", mlp_gated=False,
+    tie_embeddings=False,
+)

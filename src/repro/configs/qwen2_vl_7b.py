@@ -1,0 +1,14 @@
+"""qwen2-vl-7b [vlm]: M-RoPE, dynamic resolution.  Backbone only -- the
+vision frontend is a STUB per the assignment (input_specs provides
+precomputed patch embeddings).  [arXiv:2409.12191; hf]"""
+from repro.core.config import ArchConfig
+
+ARCH = ArchConfig(
+    name="qwen2-vl-7b", family="vlm",
+    n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4,
+    d_ff=18944, vocab_size=152064, head_dim=128,
+    qkv_bias=True, block_pattern=("global",), mlp_act="silu",
+    mrope=True, mrope_sections=(16, 24, 24),
+    tie_embeddings=False, rope_theta=1_000_000.0,
+    frontend="vision_stub",
+)

@@ -1,0 +1,13 @@
+"""whisper-tiny [audio]: encoder-decoder; the mel/conv frontend is a STUB per
+the assignment (input_specs provides precomputed frame embeddings).
+[arXiv:2212.04356; unverified]"""
+from repro.core.config import ArchConfig
+
+ARCH = ArchConfig(
+    name="whisper-tiny", family="audio",
+    n_layers=4, d_model=384, n_heads=6, n_kv_heads=6,
+    d_ff=1536, vocab_size=51865, head_dim=64,
+    block_pattern=("global",), mlp_act="gelu",
+    encoder_layers=4, encoder_seq=1500, cross_attention=True,
+    tie_embeddings=True, frontend="audio_stub",
+)

@@ -1,0 +1,1 @@
+"""Core: the paper's contribution (DSE, quantization, engines, roofline)."""

@@ -1,0 +1,296 @@
+"""Design-space exploration: the paper's parallelism model, re-derived for TPU.
+
+Part 1 (paper-faithful, Section IV-A, Table I, Eq. 1-2):
+  The AIE MAC atom is a 1x16x8 INT8 GEMM: a (1x16) feature vector against a
+  (16x8) weight tile. Loading is bandwidth-limited (BW_f, BW_w bits/cycle), so
+  the minimum data-reuse factors that reach compute-to-communication (CTC) >= 1
+  are
+
+      FMReuse >= fm_bits / BW_f        (feature vector reused across kernels)
+      WTReuse >= wt_bits / BW_w        (weight tile reused across pixels)
+
+  which induce the workload constraints  OC >= 8 * FMReuse  and
+  IH*IW >= WTReuse  (Eq. 2).  Table I enumerates (BW_f, BW_w) in {16,32}^2.
+  DPUV4E picks BW_f=32, BW_w=16 -> FMReuse=4, WTReuse=64, OC=32, IH*IW=64.
+
+Part 2 (paper-faithful, Section IV-B2, Eq. 3-4):
+  The ACC core's partial-sum stack must fit the 16 memory banks shared by an
+  ACC/NL pair (64 KB).  With ping-pong buffering this bounds IW <= 32 for
+  IH=4; DPUV4E selects IH=4, IW=16.
+
+Part 3 (TPU adaptation):
+  The same closed-form reasoning with TPU constants.  The MXU atom is a
+  128x128 systolic matmul; HBM->VMEM takes the role of PL->AIE streams and the
+  VMEM scratch budget takes the role of the ACC bank budget.  For a blocked
+  GEMM (BM, BN, BK):
+
+      weight-stationary reuse of an activation block  = BN   (paper: FMReuse*8 = OC)
+      activation-stationary reuse of a weight block   = BM   (paper: WTReuse = IH*IW)
+      psum scratch                                     = BM*BN*4 B  (paper: PsumStack)
+
+  solve_conv_blocks() maximizes CTC under the VMEM constraint; the result
+  feeds kernels/ops.py as the default block shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Part 1: paper Table I
+# ---------------------------------------------------------------------------
+
+# AIE MAC atom (INT8): 1 pixel x 16 IC x 8 OC.
+ATOM_PIXELS, ATOM_IC, ATOM_OC = 1, 16, 8
+FM_BITS = ATOM_PIXELS * ATOM_IC * 8          # 128-bit feature vector
+WT_BITS = ATOM_IC * ATOM_OC * 8              # 1024-bit weight tile
+
+
+@dataclass(frozen=True)
+class ReuseRow:
+    bw_f: int          # bits/cycle for feature maps
+    bw_w: int          # bits/cycle for weights
+    fm_reuse: int
+    wt_reuse: int
+    oc: int            # induced minimum OC
+    ihw: int           # induced minimum IH*IW
+    ctc: float         # compute-to-communication at the minimum reuse
+
+
+def solve_reuse(bw_f: int, bw_w: int) -> ReuseRow:
+    """Minimum reuse factors achieving CTC >= 1 at the given bandwidth split."""
+    fm_reuse = math.ceil(FM_BITS / bw_f)
+    wt_reuse = math.ceil(WT_BITS / bw_w)
+    # Eq. 1: loads (cycles) and compute time at those reuse factors.
+    fm_load = wt_reuse * FM_BITS / bw_f
+    wt_load = fm_reuse * WT_BITS / bw_w
+    t_mac = fm_reuse * wt_reuse
+    ctc = t_mac / max(fm_load, wt_load)
+    return ReuseRow(bw_f, bw_w, fm_reuse, wt_reuse,
+                    oc=ATOM_OC * fm_reuse, ihw=wt_reuse, ctc=ctc)
+
+
+def table1() -> List[ReuseRow]:
+    """Reproduce paper Table I: reuse requirements under different bandwidths."""
+    return [solve_reuse(bw_f, bw_w)
+            for bw_f in (16, 32) for bw_w in (16, 32)]
+
+
+def dpuv4e_choice() -> ReuseRow:
+    """The paper's selected design point (BW_f=32, BW_w=16)."""
+    return solve_reuse(32, 16)
+
+
+# ---------------------------------------------------------------------------
+# Part 2: paper Eq. 3-4 (ACC/NL buffer sizing)
+# ---------------------------------------------------------------------------
+
+AIE_BANKS_PER_PAIR = 16              # 8 banks/core, ACC+NL pair
+AIE_BANK_BYTES = 256 * 16            # 256 words x 128-bit
+AIE_PAIR_BYTES = AIE_BANKS_PER_PAIR * AIE_BANK_BYTES   # 64 KB
+
+
+@dataclass(frozen=True)
+class AccBufferPlan:
+    ih: int
+    iw: int
+    oc: int
+    psum_bytes: int
+    accout_bytes: int
+    bias_bytes: int
+    nlout_bytes: int
+    total_bytes: int
+    fits: bool
+
+
+def acc_buffer_plan(ih: int, iw: int, oc: int = 32,
+                    pingpong: bool = True) -> AccBufferPlan:
+    """Paper Eq. 3: buffer sizes for an ACC/NL pair at a given (IH, IW, OC)."""
+    psum = ih * iw * oc * 4          # 4 B intermediate accumulation
+    accout = ih * iw * oc * 4
+    bias = oc * 4
+    nlout = ih * iw * oc * 1         # 1 B quantized output
+    mult = 2 if pingpong else 1
+    # PsumStack is single-buffered; the *other* buffers ping-pong (Eq. 3 s.t.).
+    total = psum + mult * (accout + bias + nlout)
+    return AccBufferPlan(ih, iw, oc, psum, accout, bias, nlout, total,
+                         fits=total <= AIE_PAIR_BYTES)
+
+
+def max_iw(ih: int = 4, oc: int = 32) -> int:
+    """Paper Eq. 4: largest IW whose AccOut ping-pong fits 2 banks (16 KB)."""
+    # AccOutBuf = IH * IW * OC * 4B <= 2 * 8KB
+    return (2 * 8 * 1024) // (ih * oc * 4)
+
+
+# ---------------------------------------------------------------------------
+# Part 3: TPU tile solver (the adaptation)
+# ---------------------------------------------------------------------------
+
+# TPU v5e single-chip constants (assignment-specified + public specs).
+PEAK_BF16_FLOPS = 197e12
+PEAK_INT8_OPS = 394e12
+HBM_BW = 819e9                        # bytes/s
+ICI_BW = 50e9                         # bytes/s per link
+MXU_DIM = 128
+VMEM_BYTES = 16 * 1024 * 1024         # conservative usable VMEM budget
+VMEM_TARGET = int(VMEM_BYTES * 0.75)  # leave headroom for pipeline overhead
+
+
+@dataclass(frozen=True)
+class TileChoice:
+    bm: int
+    bn: int
+    bk: int
+    vmem_bytes: int
+    # Correspondences with the paper's model:
+    fm_reuse: int       # = BN / ATOM-OC analogue: activation-block reuse count
+    wt_reuse: int       # = BM: weight-block reuse count
+    ctc: float          # compute time / HBM load time for one output block
+    mxu_util: float     # fraction of MXU lanes covered by the block shape
+
+
+def _block_vmem(bm: int, bn: int, bk: int, in_bytes: int, out_bytes: int) -> int:
+    # Double-buffered operand blocks (Pallas pipelines ping-pong automatically:
+    # the paper's PingPong factor of 2 in Eq. 3) + revolving int32 accumulator
+    # (the paper's single-buffered PsumStack) + double-buffered output block.
+    return (2 * (bm * bk + bk * bn) * in_bytes
+            + bm * bn * 4
+            + 2 * bm * bn * out_bytes)
+
+
+def _ctc(bm: int, bn: int, bk: int, k: int, in_bytes: int, int8: bool) -> float:
+    """Compute-vs-load ratio for producing one (bm x bn) output block."""
+    flops = 2.0 * bm * bn * k
+    peak = PEAK_INT8_OPS if int8 else PEAK_BF16_FLOPS
+    t_compute = flops / peak
+    load_bytes = (bm * k + k * bn) * in_bytes     # full K sweep per block
+    t_load = load_bytes / HBM_BW
+    return t_compute / max(t_load, 1e-30)
+
+
+def solve_conv_blocks(m: int, n: int, k: int,
+                      in_dtype_bytes: int = 1,
+                      out_dtype_bytes: int = 4,
+                      vmem_budget: int = VMEM_TARGET) -> TileChoice:
+    """Pick (BM, BN, BK) for the conv_pe kernel.
+
+    Mirrors the paper's DSE: maximize CTC (their Eq. 1 objective), subject to
+    the scratch-memory constraint (their Eq. 3-4), with MXU-aligned shapes
+    (their bank-alignment requirement).
+    """
+    int8 = in_dtype_bytes == 1
+    candidates = []
+    def _aligned(dim_cap: int) -> List[int]:
+        vals = []
+        v = MXU_DIM
+        while v <= max(dim_cap, MXU_DIM):
+            vals.append(min(v, max(_round_up(dim_cap, MXU_DIM), MXU_DIM)))
+            if v >= dim_cap:
+                break
+            v *= 2
+        return sorted(set(vals))
+
+    for bm in _aligned(min(m, 1024)):
+        for bn in _aligned(min(n, 1024)):
+            for bk in _aligned(min(k, 2048)):
+                vm = _block_vmem(bm, bn, bk, in_dtype_bytes, out_dtype_bytes)
+                if vm > vmem_budget:
+                    continue
+                ctc = _ctc(bm, bn, bk, k, in_dtype_bytes, int8)
+                # Prefer: CTC first, then larger BK (fewer revolving-acc
+                # epilogue stalls: the paper's cascade-depth argument), then
+                # balanced BM/BN.
+                candidates.append((ctc, bk, -abs(bm - bn), bm, bn))
+    if not candidates:
+        bm = bn = bk = MXU_DIM
+        return TileChoice(bm, bn, bk,
+                          _block_vmem(bm, bn, bk, in_dtype_bytes, out_dtype_bytes),
+                          fm_reuse=bn, wt_reuse=bm,
+                          ctc=_ctc(bm, bn, bk, k, in_dtype_bytes, int8),
+                          mxu_util=1.0)
+    ctc, bk, _, bm, bn = max(candidates)
+    return TileChoice(
+        bm, bn, bk,
+        _block_vmem(bm, bn, bk, in_dtype_bytes, out_dtype_bytes),
+        fm_reuse=bn, wt_reuse=bm, ctc=ctc,
+        mxu_util=min(bm, MXU_DIM) * min(bn, MXU_DIM) / (MXU_DIM * MXU_DIM))
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+# ---------------------------------------------------------------------------
+# DWC PE efficiency model (paper Fig. 8)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DwcPoint:
+    kernel: int
+    stride: int
+    load_cycles: float
+    mac_cycles: float
+    ctc: float
+
+
+def dwc_ctc(kernel: int, stride: int) -> DwcPoint:
+    """Analytic CTC model of the DWC PE (paper Fig. 8 reproduction).
+
+    One MAC-RACNL iteration produces 2(OH) x 8(OW) x 16(C) outputs
+    (= 8 atomic DWC computations).  Per atomic computation (1 OH x 2 OW x 16 C):
+      * MAC cycles: ceil(kernel/2)*2 vector MACs per output row of the window,
+        kernel rows -> paper's example: k=3,s=1 -> 12 cycles.
+      * FM load: the input tile is (kernel) rows x (kernel + stride) cols x 16C
+        int8, streamed over a 32-bit channel, amortized across the 8-atomic
+        iteration via row overlap (rows shared between vertically adjacent
+        outputs when stride < kernel).
+    """
+    # MAC cycles per atomic op (1 OH x 2 OW x 16 C): kernel rows, each row
+    # needs ceil(kernel/2) dual-vector MAC issues (two 16-lane int8 MACs per
+    # cycle with zero-padded weight alignment), x2 for the two output pixels.
+    # Paper's example: k=3, s=1 -> 3 * 2 * 2 = 12 cycles.  (Fig. 7)
+    mac = kernel * math.ceil(kernel / 2) * 2
+    atoms = 8
+    mac_cycles = mac * atoms
+
+    # Iteration output tile: 2 x 8 output pixels -> input footprint
+    ih = (2 - 1) * stride + kernel
+    iw = (8 - 1) * stride + kernel
+    fm_bytes = ih * iw * 16                     # int8, 16 channels
+    wt_bytes = kernel * kernel * 16             # loaded once per iteration set
+    load_cycles = (fm_bytes + wt_bytes) / 4.0   # 32-bit/cycle stream
+    return DwcPoint(kernel, stride, load_cycles, mac_cycles,
+                    ctc=mac_cycles / max(load_cycles, 1e-9))
+
+
+def fig8_sweep() -> List[DwcPoint]:
+    return [dwc_ctc(k, s) for k in (3, 5, 7) for s in (1, 2)]
+
+
+# ---------------------------------------------------------------------------
+# Low-channel unit utilization model (paper Section V-B)
+# ---------------------------------------------------------------------------
+
+def conv_pe_utilization(ic: int, oc: int,
+                        ic_par: int = 64, oc_par: int = 128) -> float:
+    """Utilization of the graph-level Conv PE on a layer with (IC, OC).
+
+    Paper: ResNet50 stage-0 (IC=3, OC=64) on 64(IC) x 128(OC) parallelism
+    -> 13.1 % when accounting for the 7x7 kernel's IC*K*K=147 effective
+    contraction against the 64-way IC cascade granularity.
+    """
+    kk = 49  # 7x7 stage-0 kernel: effective contraction ic*k*k
+    eff_ic = ic * kk
+    ic_util = eff_ic / (_round_up(eff_ic, ic_par))
+    oc_util = oc / (_round_up(oc, oc_par))
+    return ic_util * oc_util
+
+
+def mxu_utilization(ic: int, oc: int, kk: int = 1,
+                    mxu: int = MXU_DIM) -> float:
+    """TPU analogue: MXU lane coverage of a conv lowered to GEMM."""
+    eff_k = ic * kk
+    return (min(eff_k, mxu) / mxu) * (min(oc, mxu) / mxu)

@@ -1,0 +1,111 @@
+"""DPUV4E engine facade: presets + param-tree quantization for serving.
+
+The paper's deployment flow is: train/convert -> Vitis-AI INT8 quantize ->
+run on the DPU engines.  Ours: train in bf16/f32 -> quantize_params() ->
+serve through the Conv PE / DWC PE paths (kernels/ops.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import EngineConfig
+from repro.core.quant import QTensor, quantize
+from repro.models.params import ParamSpec, is_spec
+
+# Param-dict keys that route through ops.linear and therefore quantize.
+QUANT_KEYS = frozenset({
+    "wq", "wk", "wv", "wo", "wg", "wu", "wd", "wi",
+    "in_proj", "out_proj", "x_proj", "dt_proj", "in_x", "in_gate",
+    "head", "router", "embed",
+})
+
+
+# ---------------------------------------------------------------------------
+# Presets
+# ---------------------------------------------------------------------------
+
+def train_engine() -> EngineConfig:
+    return EngineConfig(quant="none", backend="ref")
+
+
+def paper_engine(backend: str = "ref", **kw) -> EngineConfig:
+    """The DPUV4E configuration: W8A8 + all engine features."""
+    return EngineConfig(quant="w8a8", backend=backend, **kw)
+
+
+def baseline_engine(**kw) -> EngineConfig:
+    """XVDPU-analog baseline (paper's comparison target)."""
+    return EngineConfig(quant="w8a8", backend="ref", baseline=True,
+                        **kw).resolved()
+
+
+def w8_engine(**kw) -> EngineConfig:
+    """Weight-only int8 (memory-bound decode: beyond-paper serving mode)."""
+    return EngineConfig(quant="w8", backend="ref", **kw)
+
+
+# ---------------------------------------------------------------------------
+# Param-tree quantization (values and schemas)
+# ---------------------------------------------------------------------------
+
+def _quant_axis(key: str, ndim: int) -> int:
+    return 0 if key == "embed" else ndim - 1
+
+
+def _scale_spec(spec: ParamSpec, axis: int) -> ParamSpec:
+    shape = tuple(d if i == axis else 1 for i, d in enumerate(spec.shape))
+    axes = tuple(spec.axes[i] if i == axis else None
+                 for i in range(len(spec.shape)))
+    return ParamSpec(shape, axes, "ones", jnp.float32)
+
+
+def _walk(tree, fn, key=None):
+    if isinstance(tree, dict):
+        return {k: _walk(v, fn, k) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        t = [_walk(v, fn, key) for v in tree]
+        return type(tree)(t) if not isinstance(tree, tuple) else tuple(t)
+    return fn(key, tree)
+
+
+def quantize_schema(schema, eng: EngineConfig):
+    """ParamSpec tree -> tree where quantized leaves become QTensor nodes."""
+    if eng.quant == "none":
+        return schema
+
+    def fn(key, leaf):
+        if (is_spec(leaf) and key in QUANT_KEYS and len(leaf.shape) >= 2):
+            ax = _quant_axis(key, len(leaf.shape))
+            return QTensor(
+                q=dataclasses.replace(leaf, init="small", dtype=jnp.int8),
+                scale=_scale_spec(leaf, ax))
+        return leaf
+
+    return _walk(schema, fn)
+
+
+def quantize_params(params, eng: EngineConfig):
+    """Value tree -> quantized tree (matching quantize_schema structure)."""
+    if eng.quant == "none":
+        return params
+
+    def fn(key, leaf):
+        if (key in QUANT_KEYS and hasattr(leaf, "ndim") and leaf.ndim >= 2
+                and jnp.issubdtype(leaf.dtype, jnp.floating)):
+            return quantize(leaf, axis=_quant_axis(key, leaf.ndim))
+        return leaf
+
+    return _walk(params, fn)
+
+
+def serving_dtype_cast(params, dtype=jnp.bfloat16):
+    """Cast float leaves for serving (quantized leaves untouched)."""
+    def fn(key, leaf):
+        if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf.astype(dtype)
+        return leaf
+    return _walk(params, fn)

@@ -1,0 +1,54 @@
+"""Probe mode: make every structural loop visible to XLA cost analysis.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE, whatever its trip count
+(verified empirically on this toolchain).  Production programs use lax.scan /
+lax.map for compile-time and memory reasons, so their cost analysis
+under-reports flops/bytes/collectives by the trip counts.
+
+The dry-run therefore compiles small PROBE programs (1-2 layer groups) with
+this flag on -- every structural loop fully unrolls, cost analysis becomes
+exact -- and extrapolates linearly in the layer-group count (launch/dryrun).
+
+Loops that must route through these helpers:
+  * flash attention q-block map + kv-block scan   (models/layers.py)
+  * ssm chunk scans                               (models/ssm.py)
+  * microbatch gradient accumulation              (train/train_step.py)
+  * chunked-vocab CE                              (train/loss.py)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import jax.numpy as jnp
+
+_state = threading.local()
+
+
+def enabled() -> bool:
+    return getattr(_state, "on", False)
+
+
+@contextlib.contextmanager
+def probe_mode(on: bool = True):
+    prev = enabled()
+    _state.on = on
+    try:
+        yield
+    finally:
+        _state.on = prev
+
+
+def pscan(f, init, xs, length=None):
+    """lax.scan that fully unrolls under probe mode."""
+    return jax.lax.scan(f, init, xs, length=length,
+                        unroll=True if enabled() else 1)
+
+
+def pmap_blocks(f, n: int):
+    """lax.map(f, arange(n)) that becomes a python loop under probe mode
+    (f then receives PYTHON ints -> static slicing, exact accounting)."""
+    if enabled():
+        return jnp.stack([f(i) for i in range(n)])
+    return jax.lax.map(f, jnp.arange(n))

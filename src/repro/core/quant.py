@@ -1,0 +1,129 @@
+"""INT8 symmetric quantization (Vitis-AI-style) for the DPUV4E engines.
+
+The paper requires all models to be quantized to INT8 before running on the
+DPU (Section III-A).  We implement the TPU-side equivalent:
+
+  * per-output-channel symmetric weight quantization (scale = absmax/127),
+  * per-tensor (static, calibrated) or per-token (dynamic) activation
+    quantization,
+  * int32 accumulation with a fused dequant -> bias -> activation -> requant
+    epilogue (the NL core's job, Section IV-B2).
+
+All functions are jit-safe and shard-transparent (elementwise + reductions).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+
+class QTensor(NamedTuple):
+    """A quantized tensor: int8 values + float32 scale (broadcastable)."""
+    q: jax.Array          # int8
+    scale: jax.Array      # f32, shape broadcastable against q along quant axis
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    def dequant(self, dtype=jnp.float32) -> jax.Array:
+        return (self.q.astype(jnp.float32) * self.scale).astype(dtype)
+
+
+def _absmax(x: jax.Array, axis, keepdims=True) -> jax.Array:
+    return jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=keepdims)
+
+
+def quantize(x: jax.Array, axis: Optional[int] = None) -> QTensor:
+    """Symmetric int8 quantization.
+
+    axis=None   -> per-tensor scale.
+    axis=k      -> per-channel scales along all dims *except* k reduced;
+                   i.e. one scale per index of dim k (weights: axis=out_dim).
+    """
+    if axis is None:
+        amax = _absmax(x, axis=None, keepdims=False)
+        scale = jnp.maximum(amax / INT8_MAX, 1e-8)
+        q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+        return QTensor(q.astype(jnp.int8), scale.astype(jnp.float32))
+    axis = axis % x.ndim
+    red = tuple(i for i in range(x.ndim) if i != axis)
+    amax = _absmax(x, axis=red, keepdims=True)
+    scale = jnp.maximum(amax / INT8_MAX, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return QTensor(q.astype(jnp.int8), scale.astype(jnp.float32))
+
+
+def quantize_act_dynamic(x: jax.Array, per_token: bool = True) -> QTensor:
+    """Dynamic activation quantization: scale per leading-dims row (token)."""
+    if per_token:
+        amax = _absmax(x, axis=-1, keepdims=True)
+    else:
+        amax = _absmax(x, axis=None, keepdims=False)
+    scale = jnp.maximum(amax / INT8_MAX, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return QTensor(q.astype(jnp.int8), scale.astype(jnp.float32))
+
+
+def quantize_static(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Quantize with a pre-calibrated scale; returns int8 values only."""
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8)
+
+
+def fake_quant(x: jax.Array, axis: Optional[int] = None) -> jax.Array:
+    """Quantize-dequantize (QAT-style straight-through value)."""
+    qt = quantize(x, axis)
+    return qt.dequant(x.dtype)
+
+
+class Calibrator:
+    """Running absmax calibration over representative batches (per-tensor)."""
+
+    def __init__(self):
+        self.amax = {}
+
+    def observe(self, name: str, x: jax.Array) -> None:
+        v = float(jnp.max(jnp.abs(x)))
+        self.amax[name] = max(self.amax.get(name, 0.0), v)
+
+    def scales(self) -> dict:
+        return {k: max(v / INT8_MAX, 1e-8) for k, v in self.amax.items()}
+
+
+# ---------------------------------------------------------------------------
+# Weight-tree quantization: walk a param pytree and quantize matmul weights.
+# ---------------------------------------------------------------------------
+
+def quantize_param_tree(params, predicate=None):
+    """Quantize every rank>=2 float leaf to (int8, scale) along its last dim.
+
+    Returns a pytree of the same structure where quantized leaves become
+    QTensor namedtuples.  `predicate(path, leaf)` may veto quantization
+    (e.g. embeddings, norm scales, conv depthwise taps stay fp).
+    """
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    out = []
+    for path, leaf in flat:
+        keep = (
+            leaf.ndim >= 2
+            and jnp.issubdtype(leaf.dtype, jnp.floating)
+            and (predicate is None or predicate(path, leaf))
+        )
+        out.append(quantize(leaf, axis=leaf.ndim - 1) if keep else leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def requantize(acc_i32: jax.Array, in_scale: jax.Array, w_scale: jax.Array,
+               out_scale: Optional[jax.Array] = None) -> jax.Array:
+    """int32 accumulator -> float (or int8 when out_scale given)."""
+    x = acc_i32.astype(jnp.float32) * in_scale * w_scale
+    if out_scale is None:
+        return x
+    q = jnp.clip(jnp.round(x / out_scale), -127, 127)
+    return q.astype(jnp.int8)

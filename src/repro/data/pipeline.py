@@ -1,0 +1,96 @@
+"""Deterministic synthetic-token data pipeline with restart semantics.
+
+A real deployment would stream from a tokenized corpus; here the pipeline is
+a seeded generator so that (a) training runs are reproducible, (b) restart
+from a checkpoint resumes the exact stream position (skip-restore is O(1):
+the batch for step k is a pure function of (seed, k)), and (c) every host in
+a multi-host launch can produce exactly its own shard of the global batch
+without coordination (shard-aware addressing).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.core.config import ArchConfig, ShapeConfig
+
+
+@dataclass
+class PipelineConfig:
+    seed: int = 0
+    prefetch: int = 2
+    host_index: int = 0
+    host_count: int = 1
+
+
+class SyntheticTokens:
+    """Batch for step k = f(seed, k).  Mildly structured (zipf-ish) tokens so
+    CE losses are non-degenerate."""
+
+    def __init__(self, arch: ArchConfig, shape: ShapeConfig,
+                 cfg: PipelineConfig = PipelineConfig()):
+        self.arch, self.shape, self.cfg = arch, shape, cfg
+        assert shape.global_batch % cfg.host_count == 0
+        self.local_batch = shape.global_batch // cfg.host_count
+
+    def batch_at(self, step: int) -> dict:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.cfg.seed, step, self.cfg.host_index]))
+        b, l = self.local_batch, self.shape.seq_len
+        v = self.arch.vocab_size
+        # zipf-ish marginal over a capped alphabet
+        alpha = rng.zipf(1.3, size=(b, l + 1))
+        tokens = (alpha % v).astype(np.int32)
+        batch = {"tokens": tokens[:, :l], "labels": tokens[:, 1:]}
+        d = self.arch.d_model
+        if self.arch.family == "vlm":
+            batch = {
+                "embeds": rng.standard_normal((b, l, d)).astype(np.float32) * 0.02,
+                "positions": np.broadcast_to(
+                    np.arange(l, dtype=np.int32)[None, :, None], (b, l, 3)).copy(),
+                "labels": tokens[:, 1:],
+            }
+        elif self.arch.family == "audio":
+            batch["enc_embeds"] = rng.standard_normal(
+                (b, self.arch.encoder_seq, d)).astype(np.float32) * 0.02
+        return batch
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class PrefetchIterator:
+    """Background-thread prefetch with restart-at-step support."""
+
+    def __init__(self, source: SyntheticTokens, start_step: int = 0,
+                 prefetch: int = 2):
+        self.source = source
+        self.step = start_step
+        self.q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self.thread = threading.Thread(target=self._worker, daemon=True)
+        self.thread.start()
+
+    def _worker(self):
+        s = self.step
+        while not self._stop.is_set():
+            try:
+                self.q.put(self.source.batch_at(s), timeout=0.5)
+                s += 1
+            except queue.Full:
+                continue
+
+    def __next__(self) -> dict:
+        batch = self.q.get()
+        self.step += 1
+        return batch
+
+    def close(self):
+        self._stop.set()

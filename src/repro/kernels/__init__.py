@@ -1,0 +1,10 @@
+"""DPUV4E engine kernels: Pallas TPU implementations + jnp oracles.
+
+conv_pe     -- C2/C3: int8 GEMM, cascade K-accumulation, fused NL epilogue
+dwc_pe      -- C4:    depthwise conv engine (2-D and causal 1-D)
+low_channel -- C5:    first-layer small-IC conv (VMEM im2col fusion)
+misc_pe     -- C6:    fused elementwise / pooling
+flash_attn  -- beyond-paper: blocked attention kernel
+ops         -- public wrappers (backend select, padding, DSE blocks)
+ref         -- pure-jnp oracles
+"""

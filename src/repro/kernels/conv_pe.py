@@ -1,0 +1,154 @@
+"""Conv PE: int8 GEMM with cascade K-accumulation and a fused NL epilogue.
+
+TPU adaptation of the paper's MAC->ACC->NL chain (Section IV-B, Fig. 3-4):
+
+  * The MAC chain's in-flight cascade accumulation over IC becomes the K grid
+    axis with a revolving int32 VMEM accumulator (`acc_ref`): partial sums
+    live in VMEM for the whole reduction and never round-trip HBM -- exactly
+    the property the cascade stream buys on the AIE array.
+  * The ACC core's PsumStack is `acc_ref` (BM*BN*4 B); its bank budget
+    (paper Eq. 3-4) is the VMEM constraint solved by core/dse.py.
+  * The NL core is the fused epilogue on the last K step: dequant (per-token
+    activation scale x per-channel weight scale), bias add, activation,
+    optional requantization to int8.
+  * Pallas's double-buffered software pipeline plays the role of the paper's
+    ping-pong buffers and bubble-elimination protocol (Fig. 5): the grid is
+    declared ("parallel", "parallel", "arbitrary") so the K walk is a clean
+    revolving pipeline with no inter-step stalls after warmup.
+
+Block shapes default to the DSE solver's choice (core/dse.solve_conv_blocks),
+mirroring how the paper derives OC=32 / IH*IW=64 from Table I.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels.ref import act_fn
+
+
+def _kernel(a_ref, b_ref, a_scale_ref, w_scale_ref, bias_ref, o_ref, acc_ref,
+            *, nk: int, act: str, has_bias: bool, out_scale: Optional[float]):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MAC chain link: one cascade step of the IC reduction.
+    acc_ref[...] += jnp.dot(a_ref[...].astype(jnp.int32),
+                            b_ref[...].astype(jnp.int32),
+                            preferred_element_type=jnp.int32)
+
+    # NL core: fused epilogue once the cascade completes.
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        x = acc_ref[...].astype(jnp.float32)
+        x = x * a_scale_ref[...] * w_scale_ref[...]
+        if has_bias:
+            x = x + bias_ref[...]
+        x = act_fn(act)(x)
+        if out_scale is not None:
+            x = jnp.clip(jnp.round(x / out_scale), -127, 127)
+        o_ref[...] = x.astype(o_ref.dtype)
+
+
+def matmul_int8_fused(a_q: jax.Array, b_q: jax.Array,
+                      a_scale: jax.Array, w_scale: jax.Array,
+                      bias: Optional[jax.Array] = None,
+                      act: str = "none",
+                      out_scale: Optional[float] = None,
+                      out_dtype=jnp.float32,
+                      *,
+                      bm: int = 128, bn: int = 128, bk: int = 512,
+                      interpret: bool = False) -> jax.Array:
+    """Fused int8 GEMM. Shapes must be multiples of the block shapes
+    (kernels/ops.py pads).  a_q [M,K] int8, b_q [K,N] int8,
+    a_scale [M,1] f32, w_scale [1,N] f32, bias [N] f32 or None.
+    """
+    m, kdim = a_q.shape
+    _, n = b_q.shape
+    assert m % bm == 0 and n % bn == 0 and kdim % bk == 0, (m, n, kdim, bm, bn, bk)
+    nk = kdim // bk
+    has_bias = bias is not None
+    bias2d = (bias.reshape(1, n).astype(jnp.float32) if has_bias
+              else jnp.zeros((1, n), jnp.float32))
+    odt = jnp.int8 if out_scale is not None else out_dtype
+
+    grid = (m // bm, n // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=nk, act=act, has_bias=has_bias,
+                          out_scale=out_scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),     # A
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),     # B
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),       # a_scale
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),       # w_scale
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),       # bias
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), odt),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],         # PsumStack
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a_q, b_q, a_scale.astype(jnp.float32).reshape(m, 1),
+      w_scale.astype(jnp.float32).reshape(1, n), bias2d)
+
+
+# ---------------------------------------------------------------------------
+# bf16 variant (training-path GEMM with fused epilogue; same dataflow)
+# ---------------------------------------------------------------------------
+
+def _kernel_f(a_ref, b_ref, bias_ref, o_ref, acc_ref,
+              *, nk: int, act: str, has_bias: bool):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        x = acc_ref[...]
+        if has_bias:
+            x = x + bias_ref[...]
+        o_ref[...] = act_fn(act)(x).astype(o_ref.dtype)
+
+
+def matmul_f_fused(a: jax.Array, b: jax.Array,
+                   bias: Optional[jax.Array] = None, act: str = "none",
+                   out_dtype=jnp.float32, *,
+                   bm: int = 128, bn: int = 128, bk: int = 512,
+                   interpret: bool = False) -> jax.Array:
+    m, kdim = a.shape
+    _, n = b.shape
+    assert m % bm == 0 and n % bn == 0 and kdim % bk == 0
+    nk = kdim // bk
+    has_bias = bias is not None
+    bias2d = (bias.reshape(1, n).astype(jnp.float32) if has_bias
+              else jnp.zeros((1, n), jnp.float32))
+    return pl.pallas_call(
+        functools.partial(_kernel_f, nk=nk, act=act, has_bias=has_bias),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b, bias2d)

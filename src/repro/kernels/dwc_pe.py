@@ -1,0 +1,141 @@
+"""DWC PE: depthwise-convolution engine.
+
+TPU adaptation of the paper's DWC PE (Section IV-C, Fig. 6-8):
+
+  * The paper's problem: depthwise conv has no IC reduction, so the MAC
+    cascade is useless and fmap sharing across kernels is impossible.  Their
+    answer: tile the feature map per core, keep the *channel* dimension on the
+    16-lane vector unit, zero-pad weights to bank alignment, and fuse
+    accumulate+NL in the RACNL core.
+  * TPU mapping: channels ride the 128-wide lane dimension of the VPU (the
+    16-lane AIE vector analogue), the spatial tile lives in sublanes, the
+    kernel taps are unrolled as aligned strided loads from a VMEM-resident
+    input tile (loaded ONCE per (batch, channel-block) -- the data-reuse the
+    paper engineers with its atomic-DWC schedule), and bias/act/requant are
+    fused in the epilogue (RACNL core).
+  * The paper's weight zero-padding for bank alignment maps to channel
+    padding to a multiple of 128 lanes (done by the ops.py wrapper).
+
+Grid: (N, C/BC); each cell owns the full (pre-padded) spatial extent, so no
+halo exchange is needed -- the analogue of each MAC core owning a full fmap
+tile plus kernel apron.
+
+A 1-D causal variant (dwc1d) serves the mamba / RG-LRU temporal conv and is
+the same engine with H=1 semantics.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels.ref import act_fn
+
+
+def _dwc2d_kernel(x_ref, w_ref, bias_ref, wscale_ref, o_ref,
+                  *, k: int, stride: int, ho: int, wo: int, act: str,
+                  quant: bool, out_scale: Optional[float]):
+    x = x_ref[0]                       # [Hp, Wp, BC]
+    acc_dtype = jnp.int32 if quant else jnp.float32
+    acc = jnp.zeros((ho, wo, x.shape[-1]), acc_dtype)
+    for kh in range(k):                # unrolled taps: the atomic-DWC schedule
+        for kw in range(k):
+            xs = jax.lax.slice(
+                x, (kh, kw, 0),
+                (kh + (ho - 1) * stride + 1, kw + (wo - 1) * stride + 1,
+                 x.shape[-1]),
+                (stride, stride, 1))
+            acc = acc + xs.astype(acc_dtype) * w_ref[kh, kw, :].astype(acc_dtype)
+    xf = acc.astype(jnp.float32)
+    if quant:
+        xf = xf * wscale_ref[0, 0, :]
+    xf = xf + bias_ref[0, 0, :]
+    xf = act_fn(act)(xf)
+    if out_scale is not None:
+        xf = jnp.clip(jnp.round(xf / out_scale), -127, 127)
+    o_ref[0] = xf.astype(o_ref.dtype)
+
+
+def dwc2d(x: jax.Array, w: jax.Array, bias: Optional[jax.Array],
+          stride: int = 1, act: str = "none",
+          a_scale: Optional[float] = None,
+          w_scale: Optional[jax.Array] = None,
+          out_scale: Optional[float] = None,
+          out_dtype=jnp.float32, *,
+          bc: int = 128, interpret: bool = False) -> jax.Array:
+    """Depthwise conv on pre-padded input (VALID). x: [N, Hp, Wp, C] with
+    C % bc == 0; w: [k, k, C]; bias: [C]."""
+    n, hp, wp, c = x.shape
+    k = w.shape[0]
+    assert c % bc == 0, (c, bc)
+    ho = (hp - k) // stride + 1
+    wo = (wp - k) // stride + 1
+    quant = a_scale is not None
+    # Fold the (scalar per-tensor) activation scale into the per-channel
+    # weight scale so the epilogue is one multiply -- the RACNL requant.
+    wsc = (jnp.asarray(w_scale, jnp.float32).reshape(1, 1, c) * float(a_scale)
+           if quant else jnp.zeros((1, 1, c), jnp.float32))
+    bias_arr = (bias.astype(jnp.float32).reshape(1, 1, c) if bias is not None
+                else jnp.zeros((1, 1, c), jnp.float32))
+    odt = jnp.int8 if out_scale is not None else out_dtype
+
+    return pl.pallas_call(
+        functools.partial(_dwc2d_kernel, k=k, stride=stride, ho=ho, wo=wo,
+                          act=act, quant=quant, out_scale=out_scale),
+        grid=(n, c // bc),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, bc), lambda i, j: (i, 0, 0, j)),
+            pl.BlockSpec((k, k, bc), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((1, 1, bc), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((1, 1, bc), lambda i, j: (0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, bc), lambda i, j: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, c), odt),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(x, w, bias_arr, wsc)
+
+
+# ---------------------------------------------------------------------------
+# 1-D causal variant (mamba / RG-LRU temporal conv)
+# ---------------------------------------------------------------------------
+
+def _dwc1d_kernel(x_ref, w_ref, bias_ref, o_ref, *, k: int, l: int, act: str):
+    x = x_ref[0]                       # [L + k - 1, BC]
+    acc = jnp.zeros((l, x.shape[-1]), jnp.float32)
+    for i in range(k):
+        acc = acc + x[i:i + l, :].astype(jnp.float32) * w_ref[i, :].astype(jnp.float32)
+    acc = acc + bias_ref[0, :]
+    o_ref[0] = act_fn(act)(acc).astype(o_ref.dtype)
+
+
+def dwc1d_causal(x: jax.Array, w: jax.Array,
+                 bias: Optional[jax.Array] = None, act: str = "none",
+                 out_dtype=jnp.float32, *,
+                 bc: int = 128, interpret: bool = False) -> jax.Array:
+    """x: [B, L, C] (C % bc == 0), w: [k, C], bias: [C]."""
+    b, l, c = x.shape
+    k = w.shape[0]
+    assert c % bc == 0, (c, bc)
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    bias_arr = (bias.astype(jnp.float32).reshape(1, c) if bias is not None
+                else jnp.zeros((1, c), jnp.float32))
+    return pl.pallas_call(
+        functools.partial(_dwc1d_kernel, k=k, l=l, act=act),
+        grid=(b, c // bc),
+        in_specs=[
+            pl.BlockSpec((1, l + k - 1, bc), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((k, bc), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bc), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, l, bc), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, l, c), out_dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(xp, w, bias_arr)

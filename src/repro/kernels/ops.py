@@ -1,0 +1,343 @@
+"""Public kernel wrappers: backend selection, padding, DSE-chosen blocks.
+
+Every op has three backends:
+  * "ref"     -- pure-jnp oracle (kernels/ref.py).  CPU execution and the
+                 dry-run lowering use this path.
+  * "pallas"  -- the Pallas TPU kernel (interpret=True on this CPU container).
+  * baseline  -- the XVDPU-analog unfused path (ref.matmul_int8_unfused).
+
+Wrappers own all shape legalization: flattening leading dims, padding M/N/K
+to block multiples (the paper's bank-alignment / zero-padding steps), and
+channel padding to the 128-lane width for the DWC engine.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dse
+from repro.core.config import EngineConfig
+from repro.core.quant import QTensor, quantize_act_dynamic
+from repro.kernels import conv_pe, dwc_pe, low_channel, misc_pe, ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pad2d(x: jax.Array, m: int, n: int) -> jax.Array:
+    pm, pn = m - x.shape[0], n - x.shape[1]
+    if pm == 0 and pn == 0:
+        return x
+    return jnp.pad(x, ((0, pm), (0, pn)))
+
+
+def pick_blocks(m: int, n: int, k: int, in_bytes: int,
+                cfg: EngineConfig):
+    """Block shapes: explicit config overrides, else the DSE solver."""
+    if cfg.block_m and cfg.block_n and cfg.cascade_bk:
+        return cfg.block_m, cfg.block_n, cfg.cascade_bk
+    t = dse.solve_conv_blocks(m, n, k, in_dtype_bytes=in_bytes)
+    bm = min(t.bm, _round_up(m, 128))
+    bn = min(t.bn, _round_up(n, 128))
+    bk = min(t.bk, _round_up(k, 128))
+    return bm, bn, bk
+
+
+# ---------------------------------------------------------------------------
+# Conv PE: quantized linear (the LM projection / 1x1-conv path)
+# ---------------------------------------------------------------------------
+
+def linear_int8(x: jax.Array, w: QTensor, bias: Optional[jax.Array],
+                act: str, cfg: EngineConfig,
+                out_dtype=jnp.float32) -> jax.Array:
+    """x: float [..., K]; w: QTensor(q=[K, N] int8, scale=[1, N])."""
+    lead = x.shape[:-1]
+    kdim = x.shape[-1]
+    n = w.q.shape[-1]
+    m = 1
+    for d in lead:
+        m *= d
+    x2 = x.reshape(m, kdim)
+    xq = quantize_act_dynamic(x2, per_token=True)          # a_scale [M, 1]
+    w_scale = w.scale.reshape(1, n)
+
+    if cfg.baseline:
+        out = ref.matmul_int8_unfused(xq.q, w.q, xq.scale, w_scale, bias, act,
+                                      out_dtype=out_dtype)
+    elif cfg.backend == "pallas":
+        bm, bn, bk = pick_blocks(m, n, kdim, 1, cfg)
+        mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(kdim, bk)
+        aq = _pad2d(xq.q, mp, kp)
+        bq = _pad2d(w.q, kp, np_)
+        asc = jnp.pad(xq.scale, ((0, mp - m), (0, 0)))
+        wsc = jnp.pad(w_scale, ((0, 0), (0, np_ - n)))
+        b = (jnp.pad(bias.astype(jnp.float32), (0, np_ - n))
+             if bias is not None else None)
+        out = conv_pe.matmul_int8_fused(
+            aq, bq, asc, wsc, b, act, out_dtype=out_dtype,
+            bm=bm, bn=bn, bk=bk, interpret=cfg.interpret)[:m, :n]
+    else:
+        out = ref.matmul_int8_fused(xq.q, w.q, xq.scale, w_scale, bias, act,
+                                    out_dtype=out_dtype)
+    return out.reshape(*lead, n)
+
+
+def linear_w8(x: jax.Array, w: QTensor, bias: Optional[jax.Array],
+              act: str, cfg: EngineConfig, out_dtype=jnp.float32) -> jax.Array:
+    """Weight-only int8: dequantize weights, bf16 MAC (memory-bound decode)."""
+    wf = w.dequant(x.dtype)
+    out = jnp.dot(x, wf)
+    if bias is not None:
+        out = out + bias.astype(out.dtype)
+    return ref.act_fn(act)(out).astype(out_dtype)
+
+
+def linear_f(x: jax.Array, w: jax.Array, bias: Optional[jax.Array],
+             act: str, cfg: EngineConfig, out_dtype=None) -> jax.Array:
+    """Float path (training)."""
+    out_dtype = out_dtype or x.dtype
+    out = jnp.dot(x, w.astype(x.dtype))
+    if bias is not None:
+        out = out + bias.astype(out.dtype)
+    return ref.act_fn(act)(out).astype(out_dtype)
+
+
+def linear(x: jax.Array, w, bias, act: str, cfg: EngineConfig,
+           out_dtype=None) -> jax.Array:
+    """Dispatch on quant mode and weight container type."""
+    if isinstance(w, QTensor):
+        if cfg.quant == "w8a8":
+            return linear_int8(x, w, bias, act, cfg,
+                               out_dtype=out_dtype or jnp.float32)
+        return linear_w8(x, w, bias, act, cfg,
+                         out_dtype=out_dtype or x.dtype)
+    return linear_f(x, w, bias, act, cfg, out_dtype=out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Conv2D via Conv PE (im2col -> GEMM), the CNN standard-conv path
+# ---------------------------------------------------------------------------
+
+def conv2d_pe(x: jax.Array, w: jax.Array, bias: Optional[jax.Array],
+              stride: int, padding: str, act: str,
+              cfg: EngineConfig, out_dtype=jnp.float32) -> jax.Array:
+    """Standard conv: x [N,H,W,IC] float, w [k,k,IC,OC] float or QTensor.
+
+    Quant modes quantize activations dynamically per-image; the conv lowers
+    to the Conv PE GEMM with K = k*k*IC (the paper's IC-cascade contraction).
+    """
+    wq = w.q if isinstance(w, QTensor) else w
+    k = wq.shape[0]
+    ic, oc = wq.shape[2], wq.shape[3]
+    if padding == "SAME":
+        ph = _same_pad(x.shape[1], k, stride)
+        pw = _same_pad(x.shape[2], k, stride)
+        x = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
+    n, hp, wp, _ = x.shape
+    ho = (hp - k) // stride + 1
+    wo = (wp - k) // stride + 1
+    # im2col: [N*HO*WO, k*k*IC]
+    patches = []
+    for kh in range(k):
+        for kw in range(k):
+            xs = jax.lax.slice(
+                x, (0, kh, kw, 0),
+                (n, kh + (ho - 1) * stride + 1, kw + (wo - 1) * stride + 1, ic),
+                (1, stride, stride, 1))
+            patches.append(xs)
+    col = jnp.concatenate(patches, axis=-1).reshape(n * ho * wo, k * k * ic)
+    wmat = wq.reshape(k * k * ic, oc)
+    if isinstance(w, QTensor):
+        wt = QTensor(wmat, w.scale.reshape(1, oc))
+        out = linear(col, wt, bias, act, cfg, out_dtype=out_dtype)
+    else:
+        out = linear_f(col, wmat, bias, act, cfg, out_dtype=out_dtype)
+    return out.reshape(n, ho, wo, oc)
+
+
+def _same_pad(size: int, k: int, stride: int):
+    out = -(-size // stride)
+    pad = max((out - 1) * stride + k - size, 0)
+    return (pad // 2, pad - pad // 2)
+
+
+# ---------------------------------------------------------------------------
+# DWC PE
+# ---------------------------------------------------------------------------
+
+def dwc2d(x: jax.Array, w, bias: Optional[jax.Array], stride: int,
+          padding: str, act: str, cfg: EngineConfig,
+          out_dtype=jnp.float32) -> jax.Array:
+    """Depthwise conv. x [N,H,W,C] float; w [k,k,C] float or QTensor.
+
+    Without the DWC engine (baseline), this runs as the paper's "low
+    utilization" path: dense GEMM with a channel-diagonal weight matrix.
+    """
+    is_q = isinstance(w, QTensor)
+    wq = w.q if is_q else w
+    k = wq.shape[0]
+    c = wq.shape[2]
+    if padding == "SAME":
+        ph = _same_pad(x.shape[1], k, stride)
+        pw = _same_pad(x.shape[2], k, stride)
+        x = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
+
+    if not cfg.use_dwc_engine:
+        # Baseline: depthwise as dense conv with diagonalized weights
+        # (one input channel per group lowered to a full GEMM -- wasteful by
+        # construction, like running DWC on the Conv PE).
+        wf = w.dequant() if is_q else wq
+        dense = jnp.zeros((k, k, c, c), jnp.float32)
+        idx = jnp.arange(c)
+        dense = dense.at[:, :, idx, idx].set(wf.astype(jnp.float32))
+        return conv2d_pe(x, dense, bias, stride, "VALID", act,
+                         cfg, out_dtype=out_dtype)
+
+    quant = is_q and cfg.quant == "w8a8"
+    if quant:
+        xq = quantize_act_dynamic(x, per_token=False)
+        a_scale = xq.scale
+        xin = xq.q
+        w_scale = w.scale.reshape(-1)
+        w_in = w.q
+    else:
+        xin = x
+        w_in = w.dequant(x.dtype) if is_q else w
+        a_scale = w_scale = None
+
+    cp = _round_up(c, 128)
+    bc = min(128, cp)
+    if cp != c:  # lane alignment: the paper's zero-padded weights
+        xin = jnp.pad(xin, ((0, 0), (0, 0), (0, 0), (0, cp - c)))
+        w_in = jnp.pad(w_in, ((0, 0), (0, 0), (0, cp - c)))
+        if bias is not None:
+            bias = jnp.pad(bias, (0, cp - c))
+        if w_scale is not None:
+            w_scale = jnp.pad(w_scale, (0, cp - c))
+
+    if cfg.backend == "pallas":
+        out = dwc_pe.dwc2d(xin, w_in, bias, stride, act,
+                           a_scale=(float(a_scale) if quant else None),
+                           w_scale=w_scale, out_dtype=out_dtype,
+                           bc=bc, interpret=cfg.interpret)
+    else:
+        out = ref.dwc2d(xin, w_in, bias, stride, act,
+                        a_scale=a_scale if quant else None,
+                        w_scale=w_scale, out_dtype=out_dtype)
+    return out[..., :c]
+
+
+def dwc1d_causal(x: jax.Array, w: jax.Array, bias: Optional[jax.Array],
+                 act: str, cfg: EngineConfig) -> jax.Array:
+    """Causal temporal depthwise conv. x [B,L,C] float, w [k,C]."""
+    c = x.shape[-1]
+    cp = _round_up(c, 128)
+    if cfg.backend == "pallas" and cfg.use_dwc_engine:
+        xin = jnp.pad(x, ((0, 0), (0, 0), (0, cp - c))) if cp != c else x
+        w_in = jnp.pad(w, ((0, 0), (0, cp - c))) if cp != c else w
+        b_in = (jnp.pad(bias, (0, cp - c)) if (bias is not None and cp != c)
+                else bias)
+        out = dwc_pe.dwc1d_causal(xin, w_in, b_in, act, out_dtype=x.dtype,
+                                  bc=min(128, cp), interpret=cfg.interpret)
+        return out[..., :c]
+    return ref.dwc1d_causal(x, w, bias, act, out_dtype=x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Low-Channel Conv Unit
+# ---------------------------------------------------------------------------
+
+def first_layer_conv(x: jax.Array, w, bias: Optional[jax.Array],
+                     stride: int, padding: str, act: str,
+                     cfg: EngineConfig, out_dtype=jnp.float32) -> jax.Array:
+    """Stage-0 conv. Dispatches to the low-channel unit when enabled,
+    otherwise to the general Conv PE (the paper's 13.1%-utilization path)."""
+    if not cfg.use_low_channel_unit:
+        return conv2d_pe(x, w, bias, stride, padding, act, cfg,
+                         out_dtype=out_dtype)
+    is_q = isinstance(w, QTensor)
+    wq = w.q if is_q else w
+    k = wq.shape[0]
+    if padding == "SAME":
+        ph = _same_pad(x.shape[1], k, stride)
+        pw = _same_pad(x.shape[2], k, stride)
+        x = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
+    quant = is_q and cfg.quant == "w8a8"
+    if quant:
+        xq = quantize_act_dynamic(x, per_token=False)
+        xin, a_scale = xq.q, float(xq.scale)
+        w_in = w.q
+        w_scale = float(jnp.max(w.scale))   # per-tensor for the small unit
+    else:
+        xin = x
+        w_in = w.dequant(x.dtype) if is_q else w
+        a_scale = w_scale = None
+    if cfg.backend == "pallas":
+        return low_channel.low_channel_conv(
+            xin, w_in, bias, stride, act, a_scale=a_scale, w_scale=w_scale,
+            out_dtype=out_dtype, interpret=cfg.interpret)
+    return ref.low_channel_conv(xin, w_in, bias, stride, act,
+                                a_scale=a_scale, w_scale=w_scale,
+                                out_dtype=out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# MISC core
+# ---------------------------------------------------------------------------
+
+def misc_add(a: jax.Array, b: jax.Array, act: str, cfg: EngineConfig,
+             sa: float = 1.0, sb: float = 1.0,
+             out_dtype=jnp.float32) -> jax.Array:
+    if not cfg.misc_on_engine:
+        # Baseline: separate ops (paper: PL DSP adders).
+        x = jax.lax.optimization_barrier(
+            a.astype(jnp.float32) * sa + b.astype(jnp.float32) * sb)
+        return ref.act_fn(act)(x).astype(out_dtype)
+    if cfg.backend == "pallas":
+        return misc_pe.misc_add(a, b, sa, sb, act, out_dtype=out_dtype,
+                                interpret=cfg.interpret)
+    return ref.misc_add(a, b, sa, sb, act, out_dtype=out_dtype)
+
+
+def avgpool2d(x: jax.Array, window: int, stride: int, cfg: EngineConfig,
+              out_dtype=jnp.float32) -> jax.Array:
+    c = x.shape[-1]
+    if cfg.misc_on_engine and cfg.backend == "pallas" and c % 128 == 0:
+        return misc_pe.avgpool2d(x, window, stride, out_dtype=out_dtype,
+                                 interpret=cfg.interpret)
+    return ref.avgpool2d(x, window, stride, out_dtype=out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (Pallas prefill kernel) -- beyond-paper
+# ---------------------------------------------------------------------------
+
+def flash_mha(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, softcap: float = 0.0,
+              cfg: Optional[EngineConfig] = None) -> jax.Array:
+    """q: [B, H, L, D]; k, v: [B, H, S, D] (same head count: the caller
+    repeats or groups GQA heads).  Pads L/S to block multiples."""
+    from repro.kernels import flash_attn
+    cfg = cfg or EngineConfig(backend="pallas", interpret=True)
+    b, h, l, d = q.shape
+    s = k.shape[2]
+    bq = bkv = 128
+    lp, sp = _round_up(l, bq), _round_up(s, bkv)
+    qf = jnp.pad(q.reshape(b * h, l, d), ((0, 0), (0, lp - l), (0, 0)))
+    kf = jnp.pad(k.reshape(b * h, s, d), ((0, 0), (0, sp - s), (0, 0)))
+    vf = jnp.pad(v.reshape(b * h, s, d), ((0, 0), (0, sp - s), (0, 0)))
+    if cfg.backend == "pallas":
+        # padded queries attend to nothing real; slice them off below
+        out = flash_attn.flash_attention(
+            qf, kf, vf, causal=causal, softcap=softcap,
+            scale=d ** -0.5, bq=bq, bkv=bkv, interpret=cfg.interpret)
+    else:
+        out = ref.attention(qf[:, None].transpose(1, 0, 2, 3), kf[:, None
+                            ].transpose(1, 0, 2, 3), vf[:, None].transpose(
+                            1, 0, 2, 3), causal=causal,
+                            logit_softcap=softcap)[0]
+    return out[:, :l].reshape(b, h, l, d)

@@ -1,0 +1,236 @@
+"""Program builder: assemble (step_fn, abstract args, shardings, model FLOPs)
+for every (arch x shape x mesh x engine) cell.  Used by the dry-run, the
+training driver, and the serving driver."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.core import engine as eng_lib
+from repro.core.config import ArchConfig, EngineConfig, ShapeConfig, TrainConfig
+from repro.launch import mesh as mesh_lib
+from repro.models import params as prm
+from repro.models import transformer as T
+from repro.models import whisper as W
+from repro.train import optim
+from repro.train.train_step import make_train_step
+
+
+@dataclasses.dataclass
+class Program:
+    name: str
+    fn: Callable            # jitted
+    args: tuple             # abstract (ShapeDtypeStruct pytrees)
+    model_flops: float
+    chips: int
+    peak_flops: float       # per-chip peak for the roofline compute term
+
+
+# ---------------------------------------------------------------------------
+# Useful-FLOP accounting (the roofline's MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+
+def _emb_params(arch: ArchConfig) -> int:
+    n = arch.vocab_size * arch.d_model
+    return n if arch.tie_embeddings else 2 * n
+
+
+def _attn_flops_per_token(arch: ArchConfig, ctx: int, fwd_mult: float) -> float:
+    """QK^T + PV flops per token, summed over layers (local layers use the
+    window; ssm/recurrent scan flops are ~6*d_state per element, negligible
+    and folded into param flops)."""
+    total = 0.0
+    for i in range(arch.n_layers):
+        kind = arch.layer_kind(i)
+        if kind in ("mamba", "recurrent"):
+            continue
+        eff = min(ctx, arch.local_window) if kind == "local" else ctx
+        total += fwd_mult * 2.0 * eff * arch.n_heads * arch.head_dim
+    return total
+
+
+def model_flops(arch: ArchConfig, shape: ShapeConfig) -> float:
+    """6*N*D (train) / 2*N*D (prefill) / 2*N*B per step (decode), N = active
+    non-embedding params, plus head and attention terms."""
+    n_active = arch.active_param_count() - _emb_params(arch)
+    d, v = arch.d_model, arch.vocab_size
+    b, l = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens = b * l
+        head = 6.0 * d * v * tokens
+        return 6.0 * n_active * tokens + head \
+            + tokens * _attn_flops_per_token(arch, l / 2, 6.0)
+    if shape.kind == "prefill":
+        tokens = b * l
+        head = 2.0 * d * v * b            # last-token logits only
+        return 2.0 * n_active * tokens + head \
+            + tokens * _attn_flops_per_token(arch, l / 2, 2.0)
+    # decode: one token per sequence against a ctx-long cache
+    return (2.0 * n_active * b + 2.0 * d * v * b
+            + b * _attn_flops_per_token(arch, l, 2.0))
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+
+def _is_audio(arch: ArchConfig) -> bool:
+    return arch.family == "audio"
+
+
+def _schema(arch: ArchConfig, shape: Optional[ShapeConfig] = None):
+    if _is_audio(arch):
+        max_pos = max(32768, shape.seq_len if shape else 32768)
+        return W.whisper_schema(arch, max_dec_pos=max_pos)
+    return T.lm_schema(arch)
+
+
+def auto_microbatches(arch: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                      budget_bytes: float = 6e9) -> int:
+    """Gradient-accumulation factor sized so the per-device layer-boundary
+    activations (full remat) fit the budget."""
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    local_b = max(shape.global_batch // dp, 1)
+    boundary = local_b * shape.seq_len * arch.d_model * 2 * arch.n_layers
+    mb = 1
+    while boundary / mb > budget_bytes and mb < local_b:
+        mb *= 2
+    return mb
+
+
+def default_train_cfg(arch: ArchConfig, shape: ShapeConfig,
+                      mesh: Mesh) -> TrainConfig:
+    return TrainConfig(remat="full",
+                       microbatches=auto_microbatches(arch, shape, mesh),
+                       scan_layers=not _is_audio(arch) and arch.n_layers >= 8)
+
+
+def build_train(arch: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                eng: EngineConfig, tcfg: TrainConfig) -> Program:
+    if tcfg.scan_layers and not _is_audio(arch):
+        schema = T.lm_schema_scanned(arch)
+    else:
+        schema = _schema(arch, shape)
+    pdt = jnp.bfloat16 if tcfg.param_dtype == "bf16" else jnp.float32
+    p_abs = prm.abstract_params(schema, pdt)
+    p_specs = prm.pspec_tree(schema, mesh)
+    p_sh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), p_specs)
+
+    opt_abs = {
+        "m": jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32), p_abs),
+        "v": jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32), p_abs),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    opt_specs = optim.opt_state_pspecs(p_specs, p_abs, mesh,
+                                       zero1=tcfg.zero1)
+    opt_sh = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), opt_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+    state_abs = {"params": p_abs, "opt": opt_abs}
+    state_sh = {"params": p_sh, "opt": opt_sh}
+
+    batch_abs, batch_axes = configs.input_specs(arch, shape)
+    batch_sh = mesh_lib.input_shardings(mesh, batch_abs, batch_axes)
+
+    aspec = mesh_lib.act_pspec(mesh, shape.global_batch,
+                               tcfg.seq_shard_activations)
+    step = make_train_step(arch, eng, tcfg, act_spec=NamedSharding(mesh, aspec))
+    fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                 donate_argnums=(0,))
+    return Program(
+        name=f"{arch.name}:{shape.name}", fn=fn,
+        args=(state_abs, batch_abs),
+        model_flops=model_flops(arch, shape), chips=mesh_lib.chips(mesh),
+        peak_flops=197e12)
+
+
+def _serving_params(arch: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                    eng: EngineConfig):
+    schema = _schema(arch, shape)
+    qschema = eng_lib.quantize_schema(schema, eng)
+    # Serving: drop the fsdp axis for models that fit in TP-sharded HBM
+    # (< ~12B weights); keep 2-D sharding for the big ones (grok, mamba-7b).
+    big = arch.param_count() * (1 if eng.quant != "none" else 2) > 12e9
+    drop = () if big else ("fsdp",)
+    p_abs = prm.abstract_params(qschema, None)
+    # Serving weights are bf16 (f32 is a training-only dtype).
+    p_abs = jax.tree_util.tree_map(
+        lambda a: (jax.ShapeDtypeStruct(a.shape, jnp.bfloat16)
+                   if a.dtype == jnp.float32 else a), p_abs)
+
+    def resolve(s: prm.ParamSpec):
+        axes = tuple(None if (a == "fsdp" and not big) else a
+                     for a in s.axes)
+        return NamedSharding(mesh, prm.resolve_pspec(mesh, s.shape, axes))
+
+    p_sh = prm._leaf_map(resolve, qschema)
+    return qschema, p_abs, p_sh
+
+
+def build_serve(arch: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                eng: EngineConfig) -> Program:
+    """prefill or decode step, per shape.kind."""
+    qschema, p_abs, p_sh = _serving_params(arch, shape, mesh, eng)
+    b, s = shape.global_batch, shape.seq_len
+    if _is_audio(arch):
+        cs = W.whisper_cache_schema(arch, b, s, eng)
+    else:
+        cs = T.cache_schema(arch, b, s, eng)
+    c_abs = prm.abstract_params(cs, None)
+    c_sh = prm.sharding_tree(cs, mesh)
+    aspec = NamedSharding(mesh, mesh_lib.act_pspec(mesh, b))
+
+    batch_abs, batch_axes = configs.input_specs(arch, shape)
+    batch_sh = mesh_lib.input_shardings(mesh, batch_abs, batch_axes)
+
+    mod = W if _is_audio(arch) else T
+
+    if shape.kind == "prefill":
+        def fn(params, cache, batch):
+            return mod.prefill(params, cache, batch, arch, eng,
+                               act_spec=aspec)
+        jfn = jax.jit(fn, in_shardings=(p_sh, c_sh, batch_sh),
+                      donate_argnums=(1,))
+        args = (p_abs, c_abs, batch_abs)
+    else:
+        def fn(params, cache, batch):
+            kw = {}
+            if arch.mrope and "positions" in batch:
+                kw["positions"] = batch["positions"]
+            return mod.decode(params, cache, batch["tokens"], arch, eng,
+                              act_spec=aspec, **kw)
+        jfn = jax.jit(fn, in_shardings=(p_sh, c_sh, batch_sh),
+                      donate_argnums=(1,))
+        args = (p_abs, c_abs, batch_abs)
+
+    peak = 394e12 if eng.quant == "w8a8" else 197e12
+    return Program(
+        name=f"{arch.name}:{shape.name}", fn=jfn, args=args,
+        model_flops=model_flops(arch, shape), chips=mesh_lib.chips(mesh),
+        peak_flops=peak)
+
+
+def build(arch_name: str, shape_name: str, mesh: Mesh,
+          eng: Optional[EngineConfig] = None,
+          tcfg: Optional[TrainConfig] = None,
+          arch: Optional[ArchConfig] = None) -> Program:
+    arch = arch or configs.get_arch(arch_name)
+    shape = configs.SHAPES[shape_name]
+    ok, why = configs.cell_is_runnable(arch, shape)
+    if not ok:
+        raise ValueError(f"{arch_name} x {shape_name}: {why}")
+    if shape.kind == "train":
+        return build_train(arch, shape, mesh,
+                           eng or eng_lib.train_engine(),
+                           tcfg or default_train_cfg(arch, shape, mesh))
+    return build_serve(arch, shape, mesh, eng or eng_lib.w8_engine())

@@ -1,0 +1,151 @@
+"""§Perf hillclimbing driver: run a cell under a series of configurations
+(paper-faithful baseline first, then beyond-paper optimizations) and record
+the roofline-term progression.
+
+Must run as a module entry point (sets the 512-device flag before jax):
+
+  python -m repro.launch.hillclimb --cell decode --out experiments/perf
+  python -m repro.launch.hillclimb --cell moe_train --out experiments/perf
+  python -m repro.launch.hillclimb --cell bigvocab_train --out experiments/perf
+
+Each variant is an explicit hypothesis (recorded in the JSON + EXPERIMENTS.md
+§Perf); run_cell measures before/after with identical methodology.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse     # noqa: E402
+import dataclasses  # noqa: E402
+import json         # noqa: E402
+
+from repro.core.config import EngineConfig, TrainConfig  # noqa: E402
+from repro.core import engine as eng_lib                 # noqa: E402
+from repro.launch import build as build_lib              # noqa: E402
+from repro.launch import mesh as mesh_lib                # noqa: E402
+from repro.launch.dryrun import run_cell                 # noqa: E402
+
+
+def _serve_variants():
+    """granite-8b x decode_32k: the cell most representative of the paper's
+    technique (the INT8 engine pipeline applied to serving)."""
+    return "granite-8b", "decode_32k", [
+        ("v0_bf16", "pre-paper reference: bf16 weights, bf16 KV -- memory "
+         "term dominated by 2B/param weight reads",
+         dict(eng=EngineConfig(quant="none", backend="ref"))),
+        ("v1_paper_w8a8", "PAPER-FAITHFUL: W8A8 engine (int8 weights halve "
+         "weight-read bytes; fused dequant epilogue) -- hypothesis: memory "
+         "term ~ -45% of the weight component",
+         dict(eng=EngineConfig(quant="w8a8", backend="ref"))),
+        ("v2_int8_kv", "beyond-paper: + int8 KV cache (halves the dominant "
+         "KV-read bytes at 32k context) -- hypothesis: memory term -25-40%",
+         dict(eng=EngineConfig(quant="w8a8", backend="ref",
+                               kv_cache_dtype="int8"))),
+    ]
+
+
+def _moe_train_variants(mesh):
+    """grok-1-314b x train_4k: the most collective-bound cell."""
+    from repro import configs
+    from repro.core.config import SHAPES
+    arch = configs.get_arch("grok-1-314b")
+    shape = SHAPES["train_4k"]
+    base = build_lib.default_train_cfg(arch, shape, mesh)
+    return "grok-1-314b", "train_4k", [
+        ("v0_baseline", "baseline: fsdp+tp, full remat, auto microbatches, "
+         "standard CE", dict(tcfg=base)),
+        ("v1_fused_ce", "fused chunked-vocab CE: never materialize "
+         "[B,L,131k] f32 logits -- hypothesis: memory term down several "
+         "seconds, loss-side bytes ~ -90%",
+         dict(tcfg=dataclasses.replace(base, loss_chunk_vocab=16384))),
+        ("v2_seq_shard", "+ sequence-sharded residual stream (SP): per-layer "
+         "all-reduces become reduce-scatter+all-gather (half the bytes) -- "
+         "hypothesis: collective term -20-40%",
+         dict(tcfg=dataclasses.replace(base, loss_chunk_vocab=16384,
+                                       seq_shard_activations=True))),
+        ("v3_triangle", "exact-triangle causal attention on top of v1 (SP "
+         "refuted, dropped) -- hypothesis: attention flops -~2x; small at "
+         "L=4k vs FFN, compute term -5-15%",
+         dict(tcfg=dataclasses.replace(base, loss_chunk_vocab=16384,
+                                       triangle_skip=True))),
+        ("v4_bf16_params", "mixed precision: bf16 params+grads, f32 Adam "
+         "moments -- hypothesis: gradient all-reduce bytes halve "
+         "(collective term -~40%), param-read bytes halve",
+         dict(tcfg=dataclasses.replace(base, loss_chunk_vocab=16384,
+                                       triangle_skip=True,
+                                       param_dtype="bf16"))),
+    ]
+
+
+def _bigvocab_train_variants(mesh):
+    """gemma2-2b x train_4k: worst useful-flop ratio among trains (256k
+    vocab -> the CE loss dominates bytes)."""
+    from repro import configs
+    from repro.core.config import SHAPES
+    arch = configs.get_arch("gemma2-2b")
+    shape = SHAPES["train_4k"]
+    base = build_lib.default_train_cfg(arch, shape, mesh)
+    return "gemma2-2b", "train_4k", [
+        ("v0_baseline", "baseline: standard CE over 256k vocab",
+         dict(tcfg=base)),
+        ("v1_fused_ce", "fused chunked-vocab CE (rematted chunk body) -- "
+         "hypothesis: peak GB/dev drops (logits never materialize); "
+         "round-1 unremated version REFUTED at 162 GB/dev",
+         dict(tcfg=dataclasses.replace(base, loss_chunk_vocab=16384))),
+        ("v2_triangle", "+ exact-triangle attention on the global layers -- "
+         "hypothesis: compute term -15-30% (L/2d large for d=2304)",
+         dict(tcfg=dataclasses.replace(base, loss_chunk_vocab=16384,
+                                       triangle_skip=True))),
+        ("v3_bf16_params", "+ mixed precision (bf16 params+grads) -- "
+         "hypothesis: collective term -~40%, memory term -~20%",
+         dict(tcfg=dataclasses.replace(base, loss_chunk_vocab=16384,
+                                       triangle_skip=True,
+                                       param_dtype="bf16"))),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True,
+                    choices=["decode", "moe_train", "bigvocab_train"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=args.multi_pod)
+    if args.cell == "decode":
+        arch, shape, variants = _serve_variants()
+    elif args.cell == "moe_train":
+        arch, shape, variants = _moe_train_variants(mesh)
+    else:
+        arch, shape, variants = _bigvocab_train_variants(mesh)
+
+    results = []
+    for name, hypothesis, kw in variants:
+        print(f"\n=== {args.cell}/{name}: {hypothesis}", flush=True)
+        rec = run_cell(arch, shape, multi_pod=args.multi_pod,
+                       tag=f"/{name}", **kw)
+        rec["variant"] = name
+        rec["hypothesis"] = hypothesis
+        results.append(rec)
+        path = os.path.join(args.out, f"{args.cell}__{name}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+
+    print(f"\n=== {args.cell} progression ===")
+    for r in results:
+        if r["status"] != "ok":
+            print(f"{r['variant']}: {r['status']} {r.get('error', '')[:120]}")
+            continue
+        print(f"{r['variant']:>16}: compute {r['t_compute_s'] * 1e3:9.1f}ms  "
+              f"memory {r['t_memory_s'] * 1e3:9.1f}ms  "
+              f"collective {r['t_collective_s'] * 1e3:9.1f}ms  "
+              f"bound={r['bottleneck']}  "
+              f"roofline={100 * r['roofline_fraction']:.2f}%")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,240 @@
+"""CNN zoo -- the paper's own evaluation models, running on the DPUV4E engine.
+
+Every conv lowers through the engine API:
+  * stage-0 stem      -> ops.first_layer_conv (Low-Channel Conv Unit, C5)
+  * standard convs    -> ops.conv2d_pe        (Conv PE im2col GEMM, C2/C3)
+  * depthwise convs   -> ops.dwc2d            (DWC PE, C4)
+  * residual adds     -> ops.misc_add         (MISC core, C6)
+  * pooling           -> ops.avgpool2d / ref.maxpool2d
+
+Stage kinds (CNNConfig.stages):
+  conv        -- plain conv(k, s) x repeat
+  bottleneck  -- ResNet bottleneck (1x1 red, 3x3, 1x1 x4) x repeat
+  inverted    -- MobileNetV2/EfficientNet MBConv (expand, dwc, project)
+  dwsep       -- MobileNetV1 depthwise-separable (dwc + 1x1)
+  fire        -- SqueezeNet fire module (squeeze 1x1, expand 1x1 + 3x3)
+  pool        -- max pool
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import CNNConfig, ConvSpec, EngineConfig
+from repro.kernels import ops, ref
+from repro.models.params import ParamSpec
+
+
+def _conv_spec(k: int, ic: int, oc: int) -> ParamSpec:
+    return ParamSpec((k, k, ic, oc), (None, None, None, "tp"), "he")
+
+
+def _bias_spec(oc: int) -> ParamSpec:
+    return ParamSpec((oc,), (None,), "zeros")
+
+
+def _dwc_spec(k: int, c: int) -> ParamSpec:
+    # depthwise taps: fan-in k*k per channel -> He over the window
+    return ParamSpec((k, k, c), (None, None, "tp"), "he")
+
+
+def cnn_schema(cfg: CNNConfig) -> dict:
+    s = {"stem_w": ParamSpec((cfg.stem_kernel, cfg.stem_kernel,
+                              cfg.input_ch, cfg.stem_ch),
+                             (None, None, None, None), "he"),
+         "stem_b": _bias_spec(cfg.stem_ch),
+         "stages": []}
+    ch = cfg.stem_ch
+    for st in cfg.stages:
+        blocks = []
+        for r in range(st.repeat):
+            stride = st.stride if r == 0 else 1
+            if st.kind == "conv":
+                blocks.append({"w": _conv_spec(st.kernel, ch, st.out_ch),
+                               "b": _bias_spec(st.out_ch)})
+                ch = st.out_ch
+            elif st.kind == "bottleneck":
+                mid = st.out_ch // 4
+                blk = {"w1": _conv_spec(1, ch, mid), "b1": _bias_spec(mid),
+                       "w2": _conv_spec(st.kernel, mid, mid),
+                       "b2": _bias_spec(mid),
+                       "w3": _conv_spec(1, mid, st.out_ch),
+                       "b3": _bias_spec(st.out_ch)}
+                if ch != st.out_ch or stride != 1:
+                    blk["wskip"] = _conv_spec(1, ch, st.out_ch)
+                    blk["bskip"] = _bias_spec(st.out_ch)
+                blocks.append(blk)
+                ch = st.out_ch
+            elif st.kind == "inverted":
+                mid = ch * st.expand
+                blk = {"we": _conv_spec(1, ch, mid), "be": _bias_spec(mid),
+                       "wd": _dwc_spec(st.kernel, mid), "bd": _bias_spec(mid),
+                       "wp": _conv_spec(1, mid, st.out_ch),
+                       "bp": _bias_spec(st.out_ch)}
+                blocks.append(blk)
+                ch = st.out_ch
+            elif st.kind == "dwsep":
+                blk = {"wd": _dwc_spec(st.kernel, ch), "bd": _bias_spec(ch),
+                       "wp": _conv_spec(1, ch, st.out_ch),
+                       "bp": _bias_spec(st.out_ch)}
+                blocks.append(blk)
+                ch = st.out_ch
+            elif st.kind == "fire":
+                sq = st.out_ch // 8
+                blk = {"ws": _conv_spec(1, ch, sq), "bs": _bias_spec(sq),
+                       "w1": _conv_spec(1, sq, st.out_ch // 2),
+                       "b1": _bias_spec(st.out_ch // 2),
+                       "w3": _conv_spec(3, sq, st.out_ch // 2),
+                       "b3": _bias_spec(st.out_ch // 2)}
+                blocks.append(blk)
+                ch = st.out_ch
+            elif st.kind == "pool":
+                blocks.append({})
+            else:
+                raise ValueError(st.kind)
+        s["stages"].append(blocks)
+    s["head_w"] = ParamSpec((ch, cfg.num_classes), (None, "tp"))
+    s["head_b"] = _bias_spec(cfg.num_classes)
+    return s
+
+
+def cnn_forward(params: dict, images: jax.Array, cfg: CNNConfig,
+                eng: EngineConfig) -> jax.Array:
+    """images: [N, H, W, C] float in [-1, 1].  Returns logits [N, classes]."""
+    x = ops.first_layer_conv(images, params["stem_w"], params["stem_b"],
+                             cfg.stem_stride, "SAME", "relu", eng)
+    x = x.astype(jnp.float32)
+    for st, blocks in zip(cfg.stages, params["stages"]):
+        for r, p in enumerate(blocks):
+            stride = st.stride if r == 0 else 1
+            if st.kind == "conv":
+                x = ops.conv2d_pe(x, p["w"], p["b"], stride, "SAME",
+                                  "relu", eng)
+            elif st.kind == "bottleneck":
+                h = ops.conv2d_pe(x, p["w1"], p["b1"], 1, "SAME", "relu", eng)
+                h = ops.conv2d_pe(h, p["w2"], p["b2"], stride, "SAME",
+                                  "relu", eng)
+                h = ops.conv2d_pe(h, p["w3"], p["b3"], 1, "SAME", "none", eng)
+                skip = x
+                if "wskip" in p:
+                    skip = ops.conv2d_pe(x, p["wskip"], p["bskip"], stride,
+                                         "SAME", "none", eng)
+                x = ops.misc_add(h, skip, "relu", eng)
+            elif st.kind == "inverted":
+                h = ops.conv2d_pe(x, p["we"], p["be"], 1, "SAME", "relu6", eng)
+                h = ops.dwc2d(h, p["wd"], p["bd"], stride, "SAME",
+                              "relu6", eng)
+                h = ops.conv2d_pe(h, p["wp"], p["bp"], 1, "SAME", "none", eng)
+                if stride == 1 and h.shape == x.shape:
+                    x = ops.misc_add(h, x, "none", eng)
+                else:
+                    x = h
+            elif st.kind == "dwsep":
+                h = ops.dwc2d(x, p["wd"], p["bd"], stride, "SAME", "relu", eng)
+                x = ops.conv2d_pe(h, p["wp"], p["bp"], 1, "SAME", "relu", eng)
+            elif st.kind == "fire":
+                sq = ops.conv2d_pe(x, p["ws"], p["bs"], stride, "SAME",
+                                   "relu", eng)
+                e1 = ops.conv2d_pe(sq, p["w1"], p["b1"], 1, "SAME",
+                                   "relu", eng)
+                e3 = ops.conv2d_pe(sq, p["w3"], p["b3"], 1, "SAME",
+                                   "relu", eng)
+                x = jnp.concatenate([e1, e3], axis=-1)
+            elif st.kind == "pool":
+                x = ref.maxpool2d(x, st.kernel, st.stride)
+    x = ref.global_avgpool(x)
+    return ops.linear(x, params["head_w"], params["head_b"], "none", eng,
+                      out_dtype=jnp.float32)
+
+
+def cnn_flops(cfg: CNNConfig, params: dict) -> float:
+    """Analytic MAC*2 count per image (for modeled-FPS benchmarks)."""
+    import numpy as np
+
+    total = 0.0
+    hw = cfg.input_hw
+    k, s = cfg.stem_kernel, cfg.stem_stride
+    hw = -(-hw // s)
+    total += 2 * k * k * cfg.input_ch * cfg.stem_ch * hw * hw
+    ch = cfg.stem_ch
+    for st in cfg.stages:
+        for r in range(st.repeat):
+            stride = st.stride if r == 0 else 1
+            if st.kind == "pool":
+                stride = 1                  # pool handled below
+            hw_out = -(-hw // stride)
+            px = hw_out * hw_out
+            if st.kind == "conv":
+                total += 2 * st.kernel ** 2 * ch * st.out_ch * px
+                ch = st.out_ch
+            elif st.kind == "bottleneck":
+                mid = st.out_ch // 4
+                total += 2 * px * (ch * mid + st.kernel ** 2 * mid * mid
+                                   + mid * st.out_ch)
+                if ch != st.out_ch or stride != 1:
+                    total += 2 * px * ch * st.out_ch
+                ch = st.out_ch
+            elif st.kind == "inverted":
+                mid = ch * st.expand
+                total += 2 * px * (ch * mid + st.kernel ** 2 * mid
+                                   + mid * st.out_ch)
+                ch = st.out_ch
+            elif st.kind == "dwsep":
+                total += 2 * px * (st.kernel ** 2 * ch + ch * st.out_ch)
+                ch = st.out_ch
+            elif st.kind == "fire":
+                sq = st.out_ch // 8
+                total += 2 * px * (ch * sq + sq * st.out_ch // 2
+                                   + 9 * sq * st.out_ch // 2)
+                ch = st.out_ch
+            hw = hw_out
+            if st.kind == "pool":
+                hw = -(-hw // st.stride)
+    total += 2 * ch * cfg.num_classes
+    return total
+
+
+def dwc_op_fraction(cfg: CNNConfig) -> float:
+    """Fraction of conv MACs that are depthwise (drives Table III ratios)."""
+    hw = cfg.input_hw
+    hw = -(-hw // cfg.stem_stride)
+    ch = cfg.stem_ch
+    dwc, total = 0.0, 0.0
+    for st in cfg.stages:
+        for r in range(st.repeat):
+            stride = st.stride if r == 0 else 1
+            if st.kind == "pool":
+                stride = 1                  # pool handled below
+            hw_out = -(-hw // stride)
+            px = hw_out * hw_out
+            if st.kind == "inverted":
+                mid = ch * st.expand
+                d = st.kernel ** 2 * mid * px
+                t = px * (ch * mid + mid * st.out_ch) + d
+                dwc += d
+                total += t
+                ch = st.out_ch
+            elif st.kind == "dwsep":
+                d = st.kernel ** 2 * ch * px
+                dwc += d
+                total += d + px * ch * st.out_ch
+                ch = st.out_ch
+            elif st.kind == "conv":
+                total += st.kernel ** 2 * ch * st.out_ch * px
+                ch = st.out_ch
+            elif st.kind == "bottleneck":
+                mid = st.out_ch // 4
+                total += px * (ch * mid + st.kernel ** 2 * mid * mid
+                               + mid * st.out_ch)
+                ch = st.out_ch
+            elif st.kind == "fire":
+                sq = st.out_ch // 8
+                total += px * (ch * sq + sq * st.out_ch // 2
+                               + 9 * sq * st.out_ch // 2)
+                ch = st.out_ch
+            hw = hw_out
+            if st.kind == "pool":
+                hw = -(-hw // st.stride)
+    return dwc / max(total, 1.0)

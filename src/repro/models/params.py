@@ -1,0 +1,152 @@
+"""Declarative parameter schemas.
+
+A model declares a nested dict of `ParamSpec`s (shape, logical sharding axes,
+init kind).  From one schema we derive:
+
+  * init_params()      -- materialized pytree (PRNG init) for real runs,
+  * abstract_params()  -- ShapeDtypeStruct pytree for the dry-run (no alloc),
+  * pspec_tree()       -- PartitionSpec pytree resolved against a mesh.
+
+Logical axes used in schemas:
+  "tp"    -> the `model` mesh axis (tensor parallel)
+  "fsdp"  -> the `data` mesh axis (parameter/optimizer-state sharding)
+  "dp"    -> batch: ("pod", "data") on the multi-pod mesh, "data" otherwise
+  None    -> replicated
+
+Resolution silently falls back to replication when a dimension is not
+divisible by the mesh-axis size (e.g. 8 kv heads on a 16-way model axis).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple = ()                 # logical axis per dim (None = replicated)
+    init: str = "normal"             # normal | zeros | ones | embed | small
+    dtype: object = jnp.float32
+
+    def __post_init__(self):
+        if len(self.axes) < len(self.shape):
+            object.__setattr__(
+                self, "axes",
+                tuple(self.axes) + (None,) * (len(self.shape) - len(self.axes)))
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _leaf_map(fn, schema):
+    """Map over ParamSpec leaves; pass non-spec leaves through unchanged."""
+    return jax.tree_util.tree_map(lambda s: fn(s) if is_spec(s) else s,
+                                  schema, is_leaf=is_spec)
+
+
+def logical_axis_to_mesh(mesh: Mesh, logical):
+    if logical is None:
+        return None
+    names = mesh.axis_names
+    if logical == "tp":
+        return "model" if "model" in names else None
+    if logical == "fsdp":
+        return "data" if "data" in names else None
+    if logical == "dp":
+        if "pod" in names and "data" in names:
+            return ("pod", "data")
+        return "data" if "data" in names else None
+    raise ValueError(f"unknown logical axis {logical!r}")
+
+
+def _axis_size(mesh: Mesh, mesh_axis) -> int:
+    if mesh_axis is None:
+        return 1
+    if isinstance(mesh_axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in mesh_axis]))
+    return mesh.shape[mesh_axis]
+
+
+def resolve_pspec(mesh: Mesh, shape: Sequence[int], axes: Sequence) -> P:
+    """Logical axes -> PartitionSpec, dropping non-divisible shardings."""
+    out = []
+    used = set()
+    for dim, logical in zip(shape, axes):
+        mesh_axis = logical_axis_to_mesh(mesh, logical)
+        if mesh_axis is None or dim % _axis_size(mesh, mesh_axis) != 0:
+            out.append(None)
+            continue
+        key = tuple(mesh_axis) if isinstance(mesh_axis, tuple) else (mesh_axis,)
+        if used & set(key):          # a mesh axis may appear only once
+            out.append(None)
+            continue
+        used.update(key)
+        out.append(mesh_axis)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def pspec_tree(schema, mesh: Mesh):
+    return _leaf_map(lambda s: resolve_pspec(mesh, s.shape, s.axes), schema)
+
+
+def sharding_tree(schema, mesh: Mesh):
+    return _leaf_map(
+        lambda s: NamedSharding(mesh, resolve_pspec(mesh, s.shape, s.axes)),
+        schema)
+
+
+def abstract_params(schema, dtype=None):
+    return _leaf_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype or s.dtype), schema)
+
+
+def _init_leaf(key, s: ParamSpec, dtype):
+    dt = dtype or s.dtype
+    if s.init == "zeros":
+        return jnp.zeros(s.shape, dt)
+    if s.init == "ones":
+        return jnp.ones(s.shape, dt)
+    # fan-in = everything but the output dim (conv [k,k,ic,oc] -> k*k*ic).
+    fan_in = (int(np.prod(s.shape[:-1])) if len(s.shape) >= 2
+              else max(s.shape[-1], 1))
+    if s.init == "embed":
+        std = 0.02
+    elif s.init == "small":
+        std = 0.02
+    elif s.init == "he":               # relu networks (CNN zoo)
+        std = math.sqrt(2.0 / fan_in)
+    else:
+        std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, s.shape, jnp.float32) * std).astype(dt)
+
+
+def init_params(schema, rng_key, dtype=None):
+    leaves, treedef = jax.tree_util.tree_flatten(schema, is_leaf=is_spec)
+    keys = jax.random.split(rng_key, max(len(leaves), 1))
+    vals = [_init_leaf(k, s, dtype) if is_spec(s) else s
+            for k, s in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def param_bytes(schema, dtype_bytes: int = 4) -> int:
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(schema, is_leaf=is_spec):
+        if is_spec(leaf):
+            total += int(np.prod(leaf.shape)) * dtype_bytes
+    return total
+
+
+def param_count(schema) -> int:
+    return sum(int(np.prod(l.shape))
+               for l in jax.tree_util.tree_leaves(schema, is_leaf=is_spec)
+               if is_spec(l))

@@ -1,0 +1,296 @@
+"""State-space blocks: mamba1 (falcon-mamba) and RG-LRU (recurrentgemma).
+
+TPU adaptation notes:
+  * The selective scan is CHUNKED: a sequential lax.scan over chunks carries
+    the state, and a parallel associative_scan runs inside each chunk.  The
+    [B, Q, d_inner, d_state] transients exist per chunk only, so 32k-token
+    prefills lower with bounded memory while the VPU still sees wide
+    parallel work (the GPU kernel's shared-memory tiling has no TPU port --
+    this is the TPU-idiomatic equivalent, per DESIGN.md).
+  * The temporal depthwise conv in both blocks dispatches to the DWC PE
+    (paper C4): depthwise = exactly the computation the paper built a
+    dedicated engine for.
+  * Decode is the O(1) recurrence step on a carried state.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import probe
+from repro.core.config import ArchConfig, EngineConfig
+from repro.kernels import ops
+from repro.models.params import ParamSpec
+from repro.models.layers import rms_norm
+
+
+# ---------------------------------------------------------------------------
+# Chunked diagonal linear recurrence:  h_t = a_t * h_{t-1} + b_t
+# ---------------------------------------------------------------------------
+
+def _assoc_op(left, right):
+    al, bl = left
+    ar, br = right
+    return ar * al, ar * bl + br
+
+
+def linear_scan_chunked(a: jax.Array, b: jax.Array, h0: jax.Array,
+                        chunk: int = 256) -> Tuple[jax.Array, jax.Array]:
+    """a, b: [B, L, D]; h0: [B, D].  Returns (h_all [B, L, D], h_last)."""
+    bsz, l, d = a.shape
+    if probe.enabled():
+        chunk = 1024                   # bounded op count in unrolled probes
+    chunk = min(chunk, l)
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    at = a.astype(jnp.float32).reshape(bsz, nc, chunk, d).transpose(1, 2, 0, 3)
+    bt = b.astype(jnp.float32).reshape(bsz, nc, chunk, d).transpose(1, 2, 0, 3)
+
+    def step(h, ab):
+        ac, bc = ab                                   # [chunk, B, D]
+        acum, bcum = jax.lax.associative_scan(_assoc_op, (ac, bc), axis=0)
+        h_all = acum * h[None] + bcum
+        return h_all[-1], h_all
+
+    h_last, ys = probe.pscan(step, h0.astype(jnp.float32), (at, bt))
+    ys = ys.transpose(2, 0, 1, 3).reshape(bsz, l, d)
+    return ys.astype(a.dtype), h_last
+
+
+# ---------------------------------------------------------------------------
+# Mamba1 block (falcon-mamba)
+# ---------------------------------------------------------------------------
+
+def mamba_dt_rank(arch: ArchConfig) -> int:
+    return -(-arch.d_model // 16)
+
+
+def mamba_schema(arch: ArchConfig) -> dict:
+    d, di, ds = arch.d_model, arch.d_inner, arch.ssm_state
+    dtr, k = mamba_dt_rank(arch), arch.conv_kernel
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("fsdp", "tp")),
+        "conv_w": ParamSpec((k, di), (None, "tp"), "small"),
+        "conv_b": ParamSpec((di,), ("tp",), "zeros"),
+        "x_proj": ParamSpec((di, dtr + 2 * ds), ("tp", None)),
+        "dt_proj": ParamSpec((dtr, di), (None, "tp")),
+        "dt_bias": ParamSpec((di,), ("tp",), "zeros"),
+        "a_log": ParamSpec((di, ds), ("tp", None), "small"),
+        "d_skip": ParamSpec((di,), ("tp",), "ones"),
+        "out_proj": ParamSpec((di, d), ("tp", "fsdp")),
+    }
+
+
+def _mamba_scan(x, dt, bmat, cmat, a_mat, d_skip, h0, chunk=256):
+    """x, dt: [B, L, di]; bmat, cmat: [B, L, ds]; a_mat: [di, ds];
+    h0: [B, di, ds].  Returns (y [B, L, di], h_last)."""
+    bsz, l, di = x.shape
+    ds = bmat.shape[-1]
+    if probe.enabled():
+        chunk = 1024                   # bounded op count in unrolled probes
+    chunk = min(chunk, l)
+    assert l % chunk == 0
+    nc = l // chunk
+
+    def tm(t):  # -> [nc, chunk, B, ...] time-major chunks
+        return t.reshape(bsz, nc, chunk, *t.shape[2:]).transpose(
+            1, 2, 0, *range(3, t.ndim + 1))
+
+    xs, dts, bs, cs = tm(x), tm(dt), tm(bmat), tm(cmat)
+
+    def step(h, inp):
+        xc, dtc, bc, cc = inp
+        xf = xc.astype(jnp.float32)
+        dtf = dtc.astype(jnp.float32)
+        a = jnp.exp(dtf[..., None] * a_mat[None, None])      # [Q,B,di,ds]
+        bb = (dtf * xf)[..., None] * bc.astype(jnp.float32)[:, :, None, :]
+        acum, bcum = jax.lax.associative_scan(_assoc_op, (a, bb), axis=0)
+        h_all = acum * h[None] + bcum
+        y = jnp.einsum("qbds,qbs->qbd", h_all, cc.astype(jnp.float32))
+        y = y + d_skip[None, None] * xf
+        return h_all[-1], y
+
+    h_last, ys = probe.pscan(step, h0.astype(jnp.float32),
+                             (xs, dts, bs, cs))
+    y = ys.transpose(2, 0, 1, 3).reshape(bsz, l, di)
+    return y.astype(x.dtype), h_last
+
+
+def mamba_apply(p: dict, x: jax.Array, arch: ArchConfig, eng: EngineConfig,
+                state: Optional[dict] = None, chunk: int = 256
+                ) -> Tuple[jax.Array, Optional[dict]]:
+    """Full-sequence mamba mixer.  x: [B, L, d].  With `state`, also returns
+    the updated {conv, ssm} state for decode continuation."""
+    b, l, d = x.shape
+    di, ds = arch.d_inner, arch.ssm_state
+    dtr = mamba_dt_rank(arch)
+    xz = ops.linear(x, p["in_proj"], None, "none", eng)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    # Temporal depthwise conv -> DWC PE (paper C4).
+    xs = ops.dwc1d_causal(xs, p["conv_w"], p["conv_b"], "silu", eng)
+    proj = ops.linear(xs, p["x_proj"], None, "none", eng,
+                      out_dtype=jnp.float32)
+    dt_raw, bmat, cmat = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(
+        ops.linear(dt_raw, p["dt_proj"], None, "none", eng,
+                   out_dtype=jnp.float32) + p["dt_bias"])
+    a_mat = -jnp.exp(p["a_log"].astype(jnp.float32))
+    h0 = (state["ssm"] if state is not None
+          else jnp.zeros((b, di, ds), jnp.float32))
+    y, h_last = _mamba_scan(xs, dt, bmat, cmat, a_mat,
+                            p["d_skip"].astype(jnp.float32), h0, chunk)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = ops.linear(y, p["out_proj"], None, "none", eng)
+    if state is None:
+        return out, None
+    k = arch.conv_kernel
+    xz_tail = jnp.split(xz[:, -(k - 1):], 2, axis=-1)[0] if l >= k - 1 else None
+    new_state = {"ssm": h_last,
+                 "conv": xz_tail if xz_tail is not None else state["conv"]}
+    return out, new_state
+
+
+def mamba_decode(p: dict, x: jax.Array, arch: ArchConfig, eng: EngineConfig,
+                 state: dict) -> Tuple[jax.Array, dict]:
+    """Single-token step.  x: [B, 1, d]; state: {conv [B,k-1,di], ssm [B,di,ds]}."""
+    b = x.shape[0]
+    di, ds = arch.d_inner, arch.ssm_state
+    dtr = mamba_dt_rank(arch)
+    k = arch.conv_kernel
+    xz = ops.linear(x, p["in_proj"], None, "none", eng)      # [B,1,2di]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    # Rolling conv state.
+    win = jnp.concatenate([state["conv"], xs], axis=1)       # [B, k, di]
+    conv_out = jnp.einsum("bkd,kd->bd", win.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    xs1 = jax.nn.silu(conv_out)[:, None, :].astype(x.dtype)  # [B,1,di]
+    proj = ops.linear(xs1, p["x_proj"], None, "none", eng,
+                      out_dtype=jnp.float32)
+    dt_raw, bmat, cmat = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(
+        ops.linear(dt_raw, p["dt_proj"], None, "none", eng,
+                   out_dtype=jnp.float32) + p["dt_bias"])    # [B,1,di]
+    a_mat = -jnp.exp(p["a_log"].astype(jnp.float32))
+    a = jnp.exp(dt[:, 0, :, None] * a_mat[None])
+    bb = (dt[:, 0, :, None] * xs1.astype(jnp.float32)[:, 0, :, None]
+          * bmat[:, 0, None, :])
+    h = a * state["ssm"] + bb                                # [B, di, ds]
+    y = jnp.einsum("bds,bs->bd", h, cmat[:, 0]) + \
+        p["d_skip"].astype(jnp.float32) * xs1.astype(jnp.float32)[:, 0]
+    y = y[:, None, :] * jax.nn.silu(z.astype(jnp.float32))
+    out = ops.linear(y.astype(x.dtype), p["out_proj"], None, "none", eng)
+    return out, {"conv": win[:, 1:], "ssm": h}
+
+
+def mamba_init_state(arch: ArchConfig, batch: int, dtype=jnp.float32) -> dict:
+    return {
+        "conv": jnp.zeros((batch, arch.conv_kernel - 1, arch.d_inner), dtype),
+        "ssm": jnp.zeros((batch, arch.d_inner, arch.ssm_state), jnp.float32),
+    }
+
+
+def mamba_state_schema(arch: ArchConfig, batch: int, dtype=jnp.float32) -> dict:
+    return {
+        "conv": ParamSpec((batch, arch.conv_kernel - 1, arch.d_inner),
+                          ("dp", None, "tp"), "zeros", dtype),
+        "ssm": ParamSpec((batch, arch.d_inner, arch.ssm_state),
+                         ("dp", "tp", None), "zeros", jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (recurrentgemma / Griffin)
+# ---------------------------------------------------------------------------
+
+RGLRU_C = 8.0
+RGLRU_BLOCKS = 0  # 0 -> use arch.n_heads diagonal blocks
+
+
+def rglru_schema(arch: ArchConfig) -> dict:
+    d, w, k = arch.d_model, arch.lru_width, arch.conv_kernel
+    nb = arch.n_heads
+    bs = w // nb
+    return {
+        "in_x": ParamSpec((d, w), ("fsdp", "tp")),
+        "in_gate": ParamSpec((d, w), ("fsdp", "tp")),
+        "conv_w": ParamSpec((k, w), (None, "tp"), "small"),
+        "conv_b": ParamSpec((w,), ("tp",), "zeros"),
+        "gate_in_w": ParamSpec((nb, bs, bs), (None, None, None), "small"),
+        "gate_in_b": ParamSpec((w,), ("tp",), "zeros"),
+        "gate_rec_w": ParamSpec((nb, bs, bs), (None, None, None), "small"),
+        "gate_rec_b": ParamSpec((w,), ("tp",), "zeros"),
+        "lam": ParamSpec((w,), ("tp",), "small"),
+        "out_proj": ParamSpec((w, d), ("tp", "fsdp")),
+    }
+
+
+def _rglru_gates(p, xs, nb):
+    b, l, w = xs.shape
+    xb = xs.reshape(b, l, nb, w // nb).astype(jnp.float32)
+    gi = jnp.einsum("blnh,nhk->blnk", xb, p["gate_in_w"].astype(jnp.float32))
+    gr = jnp.einsum("blnh,nhk->blnk", xb, p["gate_rec_w"].astype(jnp.float32))
+    i_t = jax.nn.sigmoid(gi.reshape(b, l, w) + p["gate_in_b"])
+    r_t = jax.nn.sigmoid(gr.reshape(b, l, w) + p["gate_rec_b"])
+    return i_t, r_t
+
+
+def rglru_apply(p: dict, x: jax.Array, arch: ArchConfig, eng: EngineConfig,
+                state: Optional[dict] = None, chunk: int = 256
+                ) -> Tuple[jax.Array, Optional[dict]]:
+    b, l, d = x.shape
+    w, nb = arch.lru_width, arch.n_heads
+    xs_pre = ops.linear(x, p["in_x"], None, "none", eng)
+    gate = ops.linear(x, p["in_gate"], None, "gelu", eng)
+    xs = ops.dwc1d_causal(xs_pre, p["conv_w"], p["conv_b"], "none", eng)
+    i_t, r_t = _rglru_gates(p, xs, nb)
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r_t
+    a = jnp.exp(log_a)
+    gated_x = i_t * xs.astype(jnp.float32)
+    b_t = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated_x
+    h0 = (state["rec"] if state is not None else jnp.zeros((b, w), jnp.float32))
+    h_all, h_last = linear_scan_chunked(a, b_t, h0, chunk)
+    y = (h_all.astype(jnp.float32) * gate.astype(jnp.float32)).astype(x.dtype)
+    out = ops.linear(y, p["out_proj"], None, "none", eng)
+    if state is None:
+        return out, None
+    k = arch.conv_kernel
+    new_state = {"rec": h_last, "conv": xs_pre[:, -(k - 1):]}
+    return out, new_state
+
+
+def rglru_decode(p: dict, x: jax.Array, arch: ArchConfig, eng: EngineConfig,
+                 state: dict) -> Tuple[jax.Array, dict]:
+    """x: [B, 1, d]; state: {conv [B, k-1, w], rec [B, w]}."""
+    b = x.shape[0]
+    w, nb, k = arch.lru_width, arch.n_heads, arch.conv_kernel
+    xs = ops.linear(x, p["in_x"], None, "none", eng)          # [B,1,w]
+    gate = ops.linear(x, p["in_gate"], None, "gelu", eng)
+    win = jnp.concatenate([state["conv"], xs], axis=1)        # [B,k,w]
+    conv = jnp.einsum("bkw,kw->bw", win.astype(jnp.float32),
+                      p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    i_t, r_t = _rglru_gates(p, conv[:, None, :], nb)
+    i_t, r_t = i_t[:, 0], r_t[:, 0]
+    a = jnp.exp(-RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r_t)
+    gx = i_t * conv
+    h = a * state["rec"] + jnp.sqrt(jnp.maximum(1 - a * a, 1e-12)) * gx
+    y = (h[:, None, :] * gate.astype(jnp.float32)).astype(x.dtype)
+    out = ops.linear(y, p["out_proj"], None, "none", eng)
+    return out, {"rec": h, "conv": win[:, 1:]}
+
+
+def rglru_init_state(arch: ArchConfig, batch: int, dtype=jnp.float32) -> dict:
+    return {
+        "conv": jnp.zeros((batch, arch.conv_kernel - 1, arch.lru_width), dtype),
+        "rec": jnp.zeros((batch, arch.lru_width), jnp.float32),
+    }
+
+
+def rglru_state_schema(arch: ArchConfig, batch: int, dtype=jnp.float32) -> dict:
+    return {
+        "conv": ParamSpec((batch, arch.conv_kernel - 1, arch.lru_width),
+                          ("dp", None, "tp"), "zeros", dtype),
+        "rec": ParamSpec((batch, arch.lru_width), ("dp", "tp"), "zeros",
+                         jnp.float32),
+    }

@@ -1,0 +1,493 @@
+"""Decoder-only LM assembled from block specs (all 10 assigned arch families
+except whisper, which composes this with an encoder in whisper.py).
+
+Three entry points:
+  forward()  -- full-sequence logits (train / eval).
+  prefill()  -- full-sequence forward that also fills the serving cache.
+  decode()   -- single-token step against the cache.
+
+Layer kinds come from arch.layer_kind(i) (never stored in the param tree, so
+the tree stays jit-legal).  Sharding: models are mesh-agnostic; the launcher
+passes `act_spec` (PartitionSpec for [B, L, d] activations) used as a
+residual-stream constraint, and GSPMD propagates the rest from params.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.config import ArchConfig, EngineConfig
+from repro.core.quant import QTensor, quantize_act_dynamic
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.params import ParamSpec
+
+
+def _constrain(x, spec):
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# Schema
+# ---------------------------------------------------------------------------
+
+def block_schema(arch: ArchConfig, i: int) -> dict:
+    kind = arch.layer_kind(i)
+    d = arch.d_model
+    norm = lambda: ParamSpec((d,), (None,), "zeros")
+    s: Dict[str, Any] = {}
+    if kind == "mamba":
+        s["norm"] = norm()
+        s["mixer"] = S.mamba_schema(arch)
+        return s
+    if kind == "recurrent":
+        s["norm"] = norm()
+        s["mixer"] = S.rglru_schema(arch)
+    else:
+        s["norm"] = norm()
+        s["attn"] = L.attention_schema(arch)
+        if arch.post_norms:
+            s["post_attn_norm"] = norm()
+    if arch.d_ff > 0:
+        s["mlp_norm"] = norm()
+        s["mlp"] = (L.moe_schema(arch) if arch.is_moe
+                    else L.mlp_schema(arch))
+        if arch.post_norms:
+            s["post_mlp_norm"] = norm()
+    return s
+
+
+def lm_schema(arch: ArchConfig) -> dict:
+    d, v = arch.d_model, arch.vocab_size
+    s = {
+        "embed": ParamSpec((v, d), ("tp", None), "embed"),
+        "blocks": [block_schema(arch, i) for i in range(arch.n_layers)],
+        "final_norm": ParamSpec((d,), (None,), "zeros"),
+    }
+    if not arch.tie_embeddings:
+        s["head"] = ParamSpec((d, v), ("fsdp", "tp"))
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Scan-over-layers (stacked params): compile-time O(1) in depth
+# ---------------------------------------------------------------------------
+
+def _stack_spec(spec, groups: int):
+    if not isinstance(spec, ParamSpec):
+        return spec
+    return ParamSpec((groups,) + tuple(spec.shape), (None,) + tuple(spec.axes),
+                     spec.init, spec.dtype)
+
+
+def scan_groups(arch: ArchConfig) -> Tuple[int, int, int]:
+    """(period, full_groups, tail_layers): layers = period*groups + tail."""
+    p = len(arch.block_pattern)
+    g, tail = divmod(arch.n_layers, p)
+    return p, g, tail
+
+
+def lm_schema_scanned(arch: ArchConfig) -> dict:
+    """Same model as lm_schema, with the first period*groups layers stacked
+    on a leading group dim (lax.scan'd at apply time); `tail` layers stay
+    unrolled.  Production trains use this: HLO size / compile time become
+    depth-independent."""
+    d, v = arch.d_model, arch.vocab_size
+    p, g, tail = scan_groups(arch)
+    stack = [jax.tree_util.tree_map(
+        lambda s: _stack_spec(s, g), block_schema(arch, i),
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+        for i in range(p)]
+    s = {
+        "embed": ParamSpec((v, d), ("tp", None), "embed"),
+        "stack": stack,
+        "tail": [block_schema(arch, p * g + i) for i in range(tail)],
+        "final_norm": ParamSpec((d,), (None,), "zeros"),
+    }
+    if not arch.tie_embeddings:
+        s["head"] = ParamSpec((d, v), ("fsdp", "tp"))
+    return s
+
+
+def stack_params(arch: ArchConfig, params: dict) -> dict:
+    """Re-layout unrolled params (lm_schema) into the scanned layout."""
+    p, g, tail = scan_groups(arch)
+    blocks = params["blocks"]
+    stack = []
+    for i in range(p):
+        group = [blocks[j * p + i] for j in range(g)]
+        stack.append(jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *group))
+    out = {k: v for k, v in params.items() if k != "blocks"}
+    out["stack"] = stack
+    out["tail"] = [blocks[p * g + i] for i in range(tail)]
+    return out
+
+
+def forward_scanned(params: dict, batch: dict, arch: ArchConfig,
+                    eng: EngineConfig, *, act_spec=None, remat: str = "none",
+                    triangle_skip: bool = False, return_hidden: bool = False,
+                    compute_dtype=jnp.bfloat16) -> Tuple[jax.Array, jax.Array]:
+    """forward() with lax.scan over layer groups (stacked params)."""
+    if "embeds" in batch:
+        x = batch["embeds"].astype(compute_dtype)
+        b, l, _ = x.shape
+    else:
+        tokens = batch["tokens"]
+        b, l = tokens.shape
+        x = embed_tokens(params, tokens, arch, compute_dtype)
+    x = _constrain(x, act_spec)
+    pos = _positions(batch, b, l)
+    cos, sin = L.rope_angles(pos, arch.head_dim, arch.rope_theta,
+                             arch.mrope_sections if arch.mrope else None)
+    p_period, g, tail = scan_groups(arch)
+
+    def group_body(carry, group_params):
+        x, aux = carry
+        for i in range(p_period):
+            x, (_, a) = block_apply(group_params[i], x, arch.layer_kind(i),
+                                    arch, eng, cos=cos, sin=sin,
+                                    act_spec=act_spec,
+                                    triangle_skip=triangle_skip)
+            aux = aux + a
+        return (x, aux), None
+
+    if remat in ("block", "full"):
+        policy = (None if remat == "full"
+                  else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        group_body = jax.checkpoint(group_body, policy=policy)
+
+    (x, aux_total), _ = jax.lax.scan(
+        group_body, (x, jnp.zeros((), jnp.float32)), params["stack"])
+
+    for i, p in enumerate(params["tail"]):
+        x, (_, a) = block_apply(p, x, arch.layer_kind(p_period * g + i),
+                                arch, eng, cos=cos, sin=sin,
+                                act_spec=act_spec,
+                                triangle_skip=triangle_skip)
+        aux_total = aux_total + a
+
+    x = L.rms_norm(x, params["final_norm"], arch.norm_eps)
+    if return_hidden:
+        return x, aux_total
+    return lm_logits(params, x, arch), aux_total
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _mlp_half(p: dict, x: jax.Array, arch: ArchConfig, eng: EngineConfig,
+              act_spec) -> Tuple[jax.Array, jax.Array]:
+    aux = jnp.zeros((), jnp.float32)
+    if "mlp" not in p:
+        return x, aux
+    hin = L.rms_norm(x, p["mlp_norm"], arch.norm_eps)
+    if arch.is_moe:
+        h, aux = L.moe_apply(p["mlp"], hin, arch, eng, act_spec=act_spec)
+    else:
+        h = L.mlp_apply(p["mlp"], hin, arch, eng)
+    if arch.post_norms:
+        h = L.rms_norm(h, p["post_mlp_norm"], arch.norm_eps)
+    return _constrain(x + h, act_spec), aux
+
+
+def block_apply(p: dict, x: jax.Array, kind: str, arch: ArchConfig,
+                eng: EngineConfig, *, cos, sin, act_spec=None,
+                triangle_skip: bool = False, q_offset: int = 0,
+                state: Optional[dict] = None) -> Tuple[jax.Array, Any]:
+    """One residual block, full-sequence.  Returns (x, (new_state, aux))."""
+    new_state = None
+    if kind == "mamba":
+        h, new_state = S.mamba_apply(
+            p["mixer"], L.rms_norm(x, p["norm"], arch.norm_eps), arch, eng,
+            state=state)
+        x = _constrain(x + h, act_spec)
+        return x, (new_state, jnp.zeros((), jnp.float32))
+    if kind == "recurrent":
+        h, new_state = S.rglru_apply(
+            p["mixer"], L.rms_norm(x, p["norm"], arch.norm_eps), arch, eng,
+            state=state)
+        x = _constrain(x + h, act_spec)
+    else:
+        h = L.attention_apply(
+            p["attn"], L.rms_norm(x, p["norm"], arch.norm_eps), arch, eng,
+            layer_kind=kind, cos=cos, sin=sin, q_offset=q_offset,
+            triangle_skip=triangle_skip)
+        if arch.post_norms:
+            h = L.rms_norm(h, p["post_attn_norm"], arch.norm_eps)
+        x = _constrain(x + h, act_spec)
+    x, aux = _mlp_half(p, x, arch, eng, act_spec)
+    return x, (new_state, aux)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head (QTensor-aware for quantized serving)
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params: dict, tokens: jax.Array, arch: ArchConfig,
+                 dtype=jnp.bfloat16) -> jax.Array:
+    emb = params["embed"]
+    if isinstance(emb, QTensor):
+        rows = jnp.take(emb.q, tokens, axis=0).astype(jnp.float32)
+        x = (rows * jnp.take(emb.scale, tokens, axis=0)).astype(dtype)
+    else:
+        x = jnp.take(emb, tokens, axis=0).astype(dtype)
+    if arch.emb_scale:
+        x = x * jnp.asarray(arch.d_model ** 0.5, dtype)
+    return x
+
+
+def lm_logits(params: dict, x: jax.Array, arch: ArchConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if arch.tie_embeddings:
+        emb = params["embed"]
+        if isinstance(emb, QTensor):
+            logits = jnp.einsum("bld,vd->blv", xf, emb.q.astype(jnp.float32))
+            logits = logits * emb.scale.reshape(1, 1, -1)
+        else:
+            logits = jnp.einsum("bld,vd->blv", xf, emb.astype(jnp.float32))
+    else:
+        head = params["head"]
+        if isinstance(head, QTensor):
+            logits = jnp.einsum("bld,dv->blv", xf, head.q.astype(jnp.float32))
+            logits = logits * head.scale.reshape(1, 1, -1)
+        else:
+            logits = jnp.einsum("bld,dv->blv", xf, head.astype(jnp.float32))
+    if arch.final_softcap > 0:
+        logits = jnp.tanh(logits / arch.final_softcap) * arch.final_softcap
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / eval)
+# ---------------------------------------------------------------------------
+
+def _positions(batch: dict, b: int, l: int) -> jax.Array:
+    if "positions" in batch:
+        return batch["positions"]
+    return jnp.broadcast_to(jnp.arange(l)[None], (b, l))
+
+
+def forward(params: dict, batch: dict, arch: ArchConfig, eng: EngineConfig,
+            *, act_spec=None, remat: str = "none",
+            triangle_skip: bool = False, return_hidden: bool = False,
+            compute_dtype=jnp.bfloat16) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits [B, L, V] f32, aux_loss []).  With return_hidden,
+    returns the post-norm hidden states instead of logits (fused-CE path)."""
+    if "embeds" in batch:                      # stubbed modality frontend
+        x = batch["embeds"].astype(compute_dtype)
+        b, l, _ = x.shape
+    else:
+        tokens = batch["tokens"]
+        b, l = tokens.shape
+        x = embed_tokens(params, tokens, arch, compute_dtype)
+    x = _constrain(x, act_spec)
+    pos = _positions(batch, b, l)
+    cos, sin = L.rope_angles(pos, arch.head_dim, arch.rope_theta,
+                             arch.mrope_sections if arch.mrope else None)
+
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def run_block(x, p, kind):
+        x, (_, aux) = block_apply(p, x, kind, arch, eng, cos=cos, sin=sin,
+                                  act_spec=act_spec,
+                                  triangle_skip=triangle_skip)
+        return x, aux
+
+    if remat in ("block", "full"):
+        policy = (None if remat == "full"
+                  else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        run_block = jax.checkpoint(run_block, policy=policy,
+                                   static_argnums=(2,))
+
+    for i, p in enumerate(params["blocks"]):
+        x, aux = run_block(x, p, arch.layer_kind(i))
+        aux_total = aux_total + aux
+
+    x = L.rms_norm(x, params["final_norm"], arch.norm_eps)
+    if return_hidden:
+        return x, aux_total
+    return lm_logits(params, x, arch), aux_total
+
+
+# ---------------------------------------------------------------------------
+# Serving cache
+# ---------------------------------------------------------------------------
+
+def cache_schema(arch: ArchConfig, batch: int, max_seq: int,
+                 eng: EngineConfig) -> dict:
+    """Cache schema (ParamSpec leaves).
+
+    KV layout [B, S, Hkv, D] with the SEQUENCE dim sharded over the model
+    axis ('tp'): always divisible (unlike kv heads), and decode attention
+    lowers to the flash-decode partial-softmax combine under GSPMD.
+    """
+    kv_dt = jnp.int8 if eng.kv_cache_dtype == "int8" else jnp.bfloat16
+    nkv, hd = arch.n_kv_heads, arch.head_dim
+    per_layer = []
+    for i in range(arch.n_layers):
+        kind = arch.layer_kind(i)
+        if kind == "mamba":
+            per_layer.append(S.mamba_state_schema(arch, batch, jnp.bfloat16))
+        elif kind == "recurrent":
+            per_layer.append(S.rglru_state_schema(arch, batch, jnp.bfloat16))
+        else:
+            s = min(arch.local_window, max_seq) if kind == "local" else max_seq
+            d = {
+                "k": ParamSpec((batch, s, nkv, hd), ("dp", "tp"), "zeros", kv_dt),
+                "v": ParamSpec((batch, s, nkv, hd), ("dp", "tp"), "zeros", kv_dt),
+            }
+            if eng.kv_cache_dtype == "int8":
+                d["k_scale"] = ParamSpec((batch, s, nkv), ("dp", "tp"),
+                                         "zeros", jnp.float32)
+                d["v_scale"] = ParamSpec((batch, s, nkv), ("dp", "tp"),
+                                         "zeros", jnp.float32)
+            per_layer.append(d)
+    return {"layers": per_layer,
+            "pos": ParamSpec((), (), "zeros", jnp.int32)}
+
+
+def _kv_store(entry: dict, k, v, idx, eng: EngineConfig):
+    """Write k/v [B, L, Hkv, D] into the cache at position idx."""
+    entry = dict(entry)
+    if eng.kv_cache_dtype == "int8":
+        kq = quantize_act_dynamic(k, per_token=True)
+        vq = quantize_act_dynamic(v, per_token=True)
+        entry["k"] = jax.lax.dynamic_update_slice_in_dim(
+            entry["k"], kq.q, idx, axis=1)
+        entry["v"] = jax.lax.dynamic_update_slice_in_dim(
+            entry["v"], vq.q, idx, axis=1)
+        entry["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            entry["k_scale"], kq.scale[..., 0], idx, axis=1)
+        entry["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            entry["v_scale"], vq.scale[..., 0], idx, axis=1)
+        return entry
+    entry["k"] = jax.lax.dynamic_update_slice_in_dim(
+        entry["k"], k.astype(entry["k"].dtype), idx, axis=1)
+    entry["v"] = jax.lax.dynamic_update_slice_in_dim(
+        entry["v"], v.astype(entry["v"].dtype), idx, axis=1)
+    return entry
+
+
+def _kv_read(entry: dict, eng: EngineConfig):
+    if eng.kv_cache_dtype == "int8":
+        k = entry["k"].astype(jnp.float32) * entry["k_scale"][..., None]
+        v = entry["v"].astype(jnp.float32) * entry["v_scale"][..., None]
+        return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+    return entry["k"], entry["v"]
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def prefill(params: dict, cache: dict, batch: dict, arch: ArchConfig,
+            eng: EngineConfig, *, act_spec=None,
+            compute_dtype=jnp.bfloat16) -> Tuple[jax.Array, dict]:
+    """Run the prompt, fill the cache.  Returns (last-token logits, cache)."""
+    if "embeds" in batch:
+        x = batch["embeds"].astype(compute_dtype)
+        b, l, _ = x.shape
+    else:
+        tokens = batch["tokens"]
+        b, l = tokens.shape
+        x = embed_tokens(params, tokens, arch, compute_dtype)
+    x = _constrain(x, act_spec)
+    pos = _positions(batch, b, l)
+    cos, sin = L.rope_angles(pos, arch.head_dim, arch.rope_theta,
+                             arch.mrope_sections if arch.mrope else None)
+
+    new_layers = []
+    for i, p in enumerate(params["blocks"]):
+        kind = arch.layer_kind(i)
+        entry = cache["layers"][i]
+        if kind in ("mamba", "recurrent"):
+            x, (st, _) = block_apply(p, x, kind, arch, eng, cos=cos, sin=sin,
+                                     act_spec=act_spec, state=entry)
+            new_layers.append(st)
+            continue
+        # Attention layer: compute k/v once, reuse for both cache and attn.
+        hin = L.rms_norm(x, p["norm"], arch.norm_eps)
+        k, v = L.attention_kv(p["attn"], hin, arch, eng, cos, sin)
+        h = L.attention_apply(p["attn"], hin, arch, eng, layer_kind=kind,
+                              cos=cos, sin=sin, kv_override=(k, v))
+        if arch.post_norms:
+            h = L.rms_norm(h, p["post_attn_norm"], arch.norm_eps)
+        x = _constrain(x + h, act_spec)
+        x, _ = _mlp_half(p, x, arch, eng, act_spec)
+        if kind == "local":
+            w = entry["k"].shape[1]
+            entry = _kv_store(entry, k[:, -w:], v[:, -w:], 0, eng)
+        else:
+            entry = _kv_store(entry, k, v, 0, eng)
+        new_layers.append(entry)
+
+    x = L.rms_norm(x, params["final_norm"], arch.norm_eps)
+    logits = lm_logits(params, x[:, -1:], arch)
+    return logits, {"layers": new_layers,
+                    "pos": jnp.asarray(l, jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def decode(params: dict, cache: dict, tokens: jax.Array, arch: ArchConfig,
+           eng: EngineConfig, *, act_spec=None,
+           positions: Optional[jax.Array] = None,
+           compute_dtype=jnp.bfloat16) -> Tuple[jax.Array, dict]:
+    """One decode step.  tokens: [B, 1].  Returns (logits [B,1,V], cache)."""
+    pos = cache["pos"]
+    b = tokens.shape[0]
+    x = embed_tokens(params, tokens, arch, compute_dtype)
+    x = _constrain(x, act_spec)
+    if positions is None:
+        positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    cos, sin = L.rope_angles(positions, arch.head_dim, arch.rope_theta,
+                             arch.mrope_sections if arch.mrope else None)
+
+    new_layers = []
+    for i, p in enumerate(params["blocks"]):
+        kind = arch.layer_kind(i)
+        entry = cache["layers"][i]
+        hin = L.rms_norm(x, p["norm"], arch.norm_eps)
+        if kind == "mamba":
+            h, st = S.mamba_decode(p["mixer"], hin, arch, eng, entry)
+            new_layers.append(st)
+            x = x + h
+            continue
+        if kind == "recurrent":
+            h, st = S.rglru_decode(p["mixer"], hin, arch, eng, entry)
+            new_layers.append(st)
+            x = x + h
+        else:
+            k, v = L.attention_kv(p["attn"], hin, arch, eng, cos, sin)
+            if kind == "local":
+                w = entry["k"].shape[1]
+                entry = _kv_store(entry, k, v, pos % w, eng)
+                ring = True
+            else:
+                entry = _kv_store(entry, k, v, pos, eng)
+                ring = False
+            kc, vc = _kv_read(entry, eng)
+            h = L.attention_decode(
+                p["attn"], hin, arch, eng, layer_kind=kind,
+                k_cache=kc, v_cache=vc, length=pos + 1, cos=cos, sin=sin,
+                ring=ring)
+            if arch.post_norms:
+                h = L.rms_norm(h, p["post_attn_norm"], arch.norm_eps)
+            new_layers.append(entry)
+            x = x + h
+        x, _ = _mlp_half(p, x, arch, eng, act_spec)
+
+    x = L.rms_norm(x, params["final_norm"], arch.norm_eps)
+    logits = lm_logits(params, x, arch)
+    return logits, {"layers": new_layers, "pos": pos + 1}

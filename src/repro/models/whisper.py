@@ -1,0 +1,231 @@
+"""Whisper-family encoder-decoder backbone.
+
+Per the assignment the audio frontend (mel conv stem) is a STUB: the encoder
+consumes precomputed frame embeddings [B, S_enc, d] from input_specs().
+Whisper uses LayerNorm + plain GELU MLPs and learned positions (no RoPE);
+we keep that so the arch exercises a different normalization/MLP path than
+the llama-family configs.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ArchConfig, EngineConfig
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.models.params import ParamSpec
+
+
+def _ln_schema(d: int) -> dict:
+    return {"scale": ParamSpec((d,), (None,), "ones"),
+            "bias": ParamSpec((d,), (None,), "zeros")}
+
+
+def _mlp_schema(arch: ArchConfig) -> dict:
+    d, ff = arch.d_model, arch.d_ff
+    return {"wi": ParamSpec((d, ff), ("fsdp", "tp")),
+            "bi": ParamSpec((ff,), ("tp",), "zeros"),
+            "wo": ParamSpec((ff, d), ("tp", "fsdp")),
+            "bo": ParamSpec((d,), (None,), "zeros")}
+
+
+def _enc_block_schema(arch: ArchConfig) -> dict:
+    return {"ln1": _ln_schema(arch.d_model),
+            "attn": L.attention_schema(arch),
+            "ln2": _ln_schema(arch.d_model),
+            "mlp": _mlp_schema(arch)}
+
+
+def _dec_block_schema(arch: ArchConfig) -> dict:
+    return {"ln1": _ln_schema(arch.d_model),
+            "attn": L.attention_schema(arch),
+            "ln_x": _ln_schema(arch.d_model),
+            "xattn": L.attention_schema(arch),
+            "ln2": _ln_schema(arch.d_model),
+            "mlp": _mlp_schema(arch)}
+
+
+def whisper_schema(arch: ArchConfig, max_dec_pos: int = 32768) -> dict:
+    d, v = arch.d_model, arch.vocab_size
+    return {
+        "embed": ParamSpec((v, d), ("tp", None), "embed"),
+        "enc_pos": ParamSpec((arch.encoder_seq, d), (None, None), "small"),
+        "dec_pos": ParamSpec((max_dec_pos, d), (None, None), "small"),
+        "enc_blocks": [_enc_block_schema(arch)
+                       for _ in range(arch.encoder_layers)],
+        "enc_ln": _ln_schema(d),
+        "dec_blocks": [_dec_block_schema(arch)
+                       for _ in range(arch.n_layers)],
+        "dec_ln": _ln_schema(d),
+    }
+
+
+
+def _embed(params, tokens, dtype):
+    emb = params["embed"]
+    if hasattr(emb, "q"):                  # QTensor (quantized serving)
+        rows = jnp.take(emb.q, tokens, axis=0).astype(jnp.float32)
+        return (rows * jnp.take(emb.scale, tokens, axis=0)).astype(dtype)
+    return jnp.take(emb, tokens, axis=0).astype(dtype)
+
+
+def _logits(params, x):
+    emb = params["embed"]
+    xf = x.astype(jnp.float32)
+    if hasattr(emb, "q"):
+        out = jnp.einsum("bld,vd->blv", xf, emb.q.astype(jnp.float32))
+        return out * emb.scale.reshape(1, 1, -1)
+    return jnp.einsum("bld,vd->blv", xf, emb.astype(jnp.float32))
+
+def _ln(x, p, eps=1e-5):
+    return L.layer_norm(x, p["scale"], p["bias"], eps)
+
+
+def _mlp(p, x, eng):
+    h = ops.linear(x, p["wi"], p["bi"], "gelu", eng)
+    return ops.linear(h, p["wo"], p["bo"], "none", eng)
+
+
+def encode(params: dict, enc_embeds: jax.Array, arch: ArchConfig,
+           eng: EngineConfig, act_spec=None) -> jax.Array:
+    x = enc_embeds + params["enc_pos"][None].astype(enc_embeds.dtype)
+    if act_spec is not None:
+        x = jax.lax.with_sharding_constraint(x, act_spec)
+    for p in params["enc_blocks"]:
+        h = L.attention_apply(p["attn"], _ln(x, p["ln1"]), arch, eng,
+                              layer_kind="global", cos=None, sin=None,
+                              causal=False)
+        x = x + h
+        x = x + _mlp(p["mlp"], _ln(x, p["ln2"]), eng)
+    return _ln(x, params["enc_ln"])
+
+
+def dec_forward(params: dict, enc_out: jax.Array, tokens: jax.Array,
+                arch: ArchConfig, eng: EngineConfig,
+                act_spec=None) -> jax.Array:
+    """Teacher-forced decoder.  Returns logits [B, L, V]."""
+    b, l = tokens.shape
+    x = _embed(params, tokens, enc_out.dtype)
+    x = x + jax.lax.dynamic_slice_in_dim(
+        params["dec_pos"], 0, l, axis=0)[None].astype(x.dtype)
+    for p in params["dec_blocks"]:
+        h = L.attention_apply(p["attn"], _ln(x, p["ln1"]), arch, eng,
+                              layer_kind="global", cos=None, sin=None,
+                              causal=True)
+        x = x + h
+        # Cross-attention: KV from the encoder output, not causal.
+        hin = _ln(x, p["ln_x"])
+        kx, vx = L.attention_kv(p["xattn"], enc_out, arch, eng, None, None)
+        h = L.attention_apply(p["xattn"], hin, arch, eng, layer_kind="global",
+                              cos=None, sin=None, causal=False,
+                              kv_override=(kx, vx))
+        x = x + h
+        x = x + _mlp(p["mlp"], _ln(x, p["ln2"]), eng)
+    x = _ln(x, params["dec_ln"])
+    return _logits(params, x)
+
+
+def forward(params: dict, batch: dict, arch: ArchConfig, eng: EngineConfig,
+            *, act_spec=None, remat: str = "none",
+            compute_dtype=jnp.bfloat16, **_) -> Tuple[jax.Array, jax.Array]:
+    enc = encode(params, batch["enc_embeds"].astype(compute_dtype), arch,
+                 eng, act_spec)
+    logits = dec_forward(params, enc, batch["tokens"], arch, eng, act_spec)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def whisper_cache_schema(arch: ArchConfig, batch: int, max_seq: int,
+                         eng: EngineConfig) -> dict:
+    kv_dt = jnp.bfloat16
+    nkv, hd = arch.n_kv_heads, arch.head_dim
+    kv = lambda s: {
+        "k": ParamSpec((batch, s, nkv, hd), ("dp", "tp"), "zeros", kv_dt),
+        "v": ParamSpec((batch, s, nkv, hd), ("dp", "tp"), "zeros", kv_dt),
+    }
+    return {
+        "self": [kv(max_seq) for _ in range(arch.n_layers)],
+        "cross": [kv(arch.encoder_seq) for _ in range(arch.n_layers)],
+        "pos": ParamSpec((), (), "zeros", jnp.int32),
+    }
+
+
+def prefill(params: dict, cache: dict, batch: dict, arch: ArchConfig,
+            eng: EngineConfig, *, act_spec=None,
+            compute_dtype=jnp.bfloat16) -> Tuple[jax.Array, dict]:
+    """Encode audio stub + consume decoder prompt; fill self+cross caches."""
+    enc = encode(params, batch["enc_embeds"].astype(compute_dtype), arch,
+                 eng, act_spec)
+    tokens = batch["tokens"]
+    b, l = tokens.shape
+    x = _embed(params, tokens, compute_dtype)
+    x = x + jax.lax.dynamic_slice_in_dim(
+        params["dec_pos"], 0, l, axis=0)[None].astype(x.dtype)
+    new_self, new_cross = [], []
+    for i, p in enumerate(params["dec_blocks"]):
+        hin = _ln(x, p["ln1"])
+        k, v = L.attention_kv(p["attn"], hin, arch, eng, None, None)
+        h = L.attention_apply(p["attn"], hin, arch, eng, layer_kind="global",
+                              cos=None, sin=None, causal=True,
+                              kv_override=(k, v))
+        x = x + h
+        ent = dict(cache["self"][i])
+        ent["k"] = jax.lax.dynamic_update_slice_in_dim(
+            ent["k"], k.astype(ent["k"].dtype), 0, axis=1)
+        ent["v"] = jax.lax.dynamic_update_slice_in_dim(
+            ent["v"], v.astype(ent["v"].dtype), 0, axis=1)
+        new_self.append(ent)
+        kx, vx = L.attention_kv(p["xattn"], enc, arch, eng, None, None)
+        new_cross.append({"k": kx.astype(compute_dtype),
+                          "v": vx.astype(compute_dtype)})
+        h = L.attention_apply(p["xattn"], _ln(x, p["ln_x"]), arch, eng,
+                              layer_kind="global", cos=None, sin=None,
+                              causal=False, kv_override=(kx, vx))
+        x = x + h
+        x = x + _mlp(p["mlp"], _ln(x, p["ln2"]), eng)
+    x = _ln(x, params["dec_ln"])
+    logits = _logits(params, x[:, -1:])
+    return logits, {"self": new_self, "cross": new_cross,
+                    "pos": jnp.asarray(l, jnp.int32)}
+
+
+def decode(params: dict, cache: dict, tokens: jax.Array, arch: ArchConfig,
+           eng: EngineConfig, *, act_spec=None,
+           compute_dtype=jnp.bfloat16) -> Tuple[jax.Array, dict]:
+    pos = cache["pos"]
+    b = tokens.shape[0]
+    x = _embed(params, tokens, compute_dtype)
+    x = x + jax.lax.dynamic_slice_in_dim(
+        params["dec_pos"], pos, 1, axis=0)[None].astype(x.dtype)
+    new_self = []
+    for i, p in enumerate(params["dec_blocks"]):
+        hin = _ln(x, p["ln1"])
+        k, v = L.attention_kv(p["attn"], hin, arch, eng, None, None)
+        ent = dict(cache["self"][i])
+        ent["k"] = jax.lax.dynamic_update_slice_in_dim(
+            ent["k"], k.astype(ent["k"].dtype), pos, axis=1)
+        ent["v"] = jax.lax.dynamic_update_slice_in_dim(
+            ent["v"], v.astype(ent["v"].dtype), pos, axis=1)
+        new_self.append(ent)
+        h = L.attention_decode(p["attn"], hin, arch, eng, layer_kind="global",
+                               k_cache=ent["k"], v_cache=ent["v"],
+                               length=pos + 1, cos=None, sin=None)
+        x = x + h
+        xc = cache["cross"][i]
+        h = L.attention_decode(p["xattn"], _ln(x, p["ln_x"]), arch, eng,
+                               layer_kind="global", k_cache=xc["k"],
+                               v_cache=xc["v"],
+                               length=jnp.asarray(arch.encoder_seq, jnp.int32),
+                               cos=None, sin=None)
+        x = x + h
+        x = x + _mlp(p["mlp"], _ln(x, p["ln2"]), eng)
+    x = _ln(x, params["dec_ln"])
+    logits = _logits(params, x)
+    return logits, {"self": new_self, "cross": cache["cross"],
+                    "pos": pos + 1}

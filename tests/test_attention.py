@@ -1,0 +1,161 @@
+"""Chunked flash attention vs the dense oracle: causal / local / softcap /
+GQA / offsets / triangle-skip / decode."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.models import layers as L
+
+
+def _qkv(rng, b=2, lq=48, lk=48, hkv=2, g=2, d=16):
+    q = rng.normal(size=(b, lq, hkv, g, d)).astype(np.float32)
+    k = rng.normal(size=(b, lk, hkv, d)).astype(np.float32)
+    v = rng.normal(size=(b, lk, hkv, d)).astype(np.float32)
+    return jnp.array(q), jnp.array(k), jnp.array(v)
+
+
+def _oracle(q, k, v, **kw):
+    """ref.attention expects [B, H, L, D] with flat heads."""
+    b, l, hkv, g, d = q.shape
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(b, hkv * g, l, d)
+    kf = k.transpose(0, 2, 1, 3)
+    vf = v.transpose(0, 2, 1, 3)
+    # repeat kv heads to match flat q heads
+    kf = jnp.repeat(kf, g, axis=1)
+    vf = jnp.repeat(vf, g, axis=1)
+    out = ref.attention(qf, kf, vf, **kw)
+    return out.reshape(b, hkv, g, l, d).transpose(0, 3, 1, 2, 4)
+
+
+class TestFlash:
+    @pytest.mark.parametrize("blocks", [(16, 16), (32, 64), (128, 128)])
+    def test_causal(self, rng, blocks):
+        q, k, v = _qkv(rng)
+        got = L.flash_attention(q, k, v, causal=True,
+                                block_q=blocks[0], block_kv=blocks[1])
+        want = _oracle(q, k, v, causal=True)
+        np.testing.assert_allclose(np.array(got), np.array(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_non_causal(self, rng):
+        q, k, v = _qkv(rng)
+        got = L.flash_attention(q, k, v, causal=False, block_q=16,
+                                block_kv=16)
+        want = _oracle(q, k, v, causal=False)
+        np.testing.assert_allclose(np.array(got), np.array(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("window", [8, 24])
+    def test_local_window(self, rng, window):
+        q, k, v = _qkv(rng)
+        got = L.flash_attention(q, k, v, causal=True, window=window,
+                                block_q=16, block_kv=16)
+        want = _oracle(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.array(got), np.array(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_softcap(self, rng):
+        q, k, v = _qkv(rng)
+        got = L.flash_attention(q, k, v, causal=True, logit_softcap=10.0,
+                                block_q=16, block_kv=16)
+        want = _oracle(q, k, v, causal=True, logit_softcap=10.0)
+        np.testing.assert_allclose(np.array(got), np.array(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_triangle_skip_identical(self, rng):
+        """The exact-triangle dynamic loop must match the masked scan."""
+        q, k, v = _qkv(rng, lq=64, lk=64)
+        base = L.flash_attention(q, k, v, causal=True, block_q=16,
+                                 block_kv=16, triangle_skip=False)
+        skip = L.flash_attention(q, k, v, causal=True, block_q=16,
+                                 block_kv=16, triangle_skip=True)
+        np.testing.assert_allclose(np.array(base), np.array(skip),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_q_offset_continuation(self, rng):
+        """Prefill continuation: q at offset attends to earlier kv."""
+        q, k, v = _qkv(rng, lq=16, lk=48)
+        got = L.flash_attention(q, k, v, causal=True, q_offset=32,
+                                block_q=16, block_kv=16)
+        # oracle: positions line up so q[i] sees kv[: 32+i+1]
+        b, l, hkv, g, d = q.shape
+        qf = q.transpose(0, 2, 3, 1, 4).reshape(b, hkv * g, l, d)
+        kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1)
+        vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1)
+        want = ref.attention(qf, kf, vf, causal=True)   # lk-lq offset rule
+        want = want.reshape(b, hkv, g, l, d).transpose(0, 3, 1, 2, 4)
+        np.testing.assert_allclose(np.array(got), np.array(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_ragged_lengths_padding(self, rng):
+        """Non-multiple-of-block lengths are padded losslessly."""
+        q, k, v = _qkv(rng, lq=21, lk=37)
+        got = L.flash_attention(q, k, v, causal=False, block_q=16,
+                                block_kv=16)
+        want = _oracle(q, k, v, causal=False)
+        np.testing.assert_allclose(np.array(got), np.array(want),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestDecodeAttention:
+    def test_matches_full_attention_last_token(self, rng):
+        b, s, hkv, g, d = 2, 32, 2, 3, 16
+        kc = jnp.array(rng.normal(size=(b, s, hkv, d)).astype(np.float32))
+        vc = jnp.array(rng.normal(size=(b, s, hkv, d)).astype(np.float32))
+        q = jnp.array(rng.normal(size=(b, 1, hkv, g, d)).astype(np.float32))
+        length = 20
+        got = L.decode_attention(q, kc, vc, jnp.asarray(length))
+        want = L.flash_attention(q, kc[:, :length], vc[:, :length],
+                                 causal=True, q_offset=length - 1,
+                                 block_q=16, block_kv=16)
+        np.testing.assert_allclose(np.array(got), np.array(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_window_restricts_reads(self, rng):
+        b, s, hkv, g, d = 1, 32, 1, 1, 8
+        kc = rng.normal(size=(b, s, hkv, d)).astype(np.float32)
+        vc = rng.normal(size=(b, s, hkv, d)).astype(np.float32)
+        q = jnp.array(rng.normal(size=(b, 1, hkv, g, d)).astype(np.float32))
+        # poison everything outside the window; result must not change
+        kc2, vc2 = kc.copy(), vc.copy()
+        kc2[:, :10] = 1e3
+        vc2[:, :10] = 1e3
+        a1 = L.decode_attention(q, jnp.array(kc), jnp.array(vc),
+                                jnp.asarray(25), window=8)
+        a2 = L.decode_attention(q, jnp.array(kc2), jnp.array(vc2),
+                                jnp.asarray(25), window=8)
+        np.testing.assert_allclose(np.array(a1), np.array(a2), rtol=1e-6)
+
+
+class TestRope:
+    def test_rope_preserves_norm(self, rng):
+        x = jnp.array(rng.normal(size=(2, 8, 4, 32)).astype(np.float32))
+        pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+        cos, sin = L.rope_angles(pos, 32, 10000.0)
+        y = L.apply_rope(x, cos, sin)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.array(x), axis=-1),
+            np.linalg.norm(np.array(y), axis=-1), rtol=1e-5)
+
+    def test_rope_relative_property(self, rng):
+        """<rope(q,i), rope(k,j)> depends only on i-j."""
+        q = rng.normal(size=(32,)).astype(np.float32)
+        k = rng.normal(size=(32,)).astype(np.float32)
+        def dot_at(i, j):
+            pos = jnp.array([[i, j]])
+            cos, sin = L.rope_angles(pos, 32, 100.0)
+            qr = L.apply_rope(jnp.array(q)[None, None], cos[:, :1], sin[:, :1])
+            kr = L.apply_rope(jnp.array(k)[None, None], cos[:, 1:], sin[:, 1:])
+            return float(jnp.sum(qr * kr))
+        assert abs(dot_at(3, 7) - dot_at(13, 17)) < 1e-3
+
+    def test_mrope_sections(self):
+        """M-RoPE with equal t/h/w positions == plain RoPE at that position."""
+        pos3 = jnp.full((1, 4, 3), 5, jnp.int32)
+        pos1 = jnp.full((1, 4), 5, jnp.int32)
+        c3, s3 = L.rope_angles(pos3, 128, 10000.0, (16, 24, 24))
+        c1, s1 = L.rope_angles(pos1, 128, 10000.0)
+        np.testing.assert_allclose(np.array(c3), np.array(c1), rtol=1e-6)
+        np.testing.assert_allclose(np.array(s3), np.array(s1), rtol=1e-6)

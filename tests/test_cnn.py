@@ -1,0 +1,102 @@
+"""CNN zoo on the DPUV4E engines: shapes, engine-feature equivalence, and
+the quantized end-to-end path."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.cnn_zoo import CNN_ZOO
+from repro.core import engine as eng_lib
+from repro.core.config import EngineConfig
+from repro.models import cnn
+from repro.models.params import init_params
+
+SMALL_HW = 32
+
+
+def _small(cfg):
+    return dataclasses.replace(cfg, input_hw=SMALL_HW)
+
+
+def _fwd(cfg, eng, seed=0):
+    params = init_params(cnn.cnn_schema(cfg), jax.random.PRNGKey(seed))
+    if eng.quant != "none":
+        params = eng_lib.quantize_params(params, eng)
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(2, cfg.input_hw, cfg.input_hw, cfg.input_ch)
+    ).astype(np.float32) * 0.5)
+    return cnn.cnn_forward(params, x, cfg, eng)
+
+
+@pytest.mark.parametrize("name", sorted(CNN_ZOO))
+def test_smoke_forward_all_models(name):
+    cfg = _small(CNN_ZOO[name])
+    eng = EngineConfig(quant="none", backend="ref")
+    logits = _fwd(cfg, eng)
+    assert logits.shape == (2, cfg.num_classes)
+    assert np.isfinite(np.array(logits)).all()
+
+
+@pytest.mark.parametrize("name", ["resnet50", "mobilenetv2"])
+def test_quantized_close_to_float(name):
+    """Random-init deep CNNs amplify per-layer quant noise, so the serving
+    criterion is rank agreement (top-1 class), not elementwise closeness."""
+    cfg = _small(CNN_ZOO[name])
+    f = np.array(_fwd(cfg, EngineConfig(quant="none", backend="ref")))
+    q = np.array(_fwd(cfg, EngineConfig(quant="w8a8", backend="ref")))
+    assert np.isfinite(q).all()
+    corr = np.corrcoef(f.ravel(), q.ravel())[0, 1]
+    assert corr > 0.7, corr
+
+
+def test_engine_features_do_not_change_math():
+    """DWC engine / low-channel unit / MISC fusion are perf features: the
+    float-path outputs must match with them on or off."""
+    cfg = _small(CNN_ZOO["mobilenetv2"])
+    base = EngineConfig(quant="none", backend="ref")
+    variants = [
+        dataclasses.replace(base, use_dwc_engine=False),
+        dataclasses.replace(base, use_low_channel_unit=False),
+        dataclasses.replace(base, misc_on_engine=False),
+    ]
+    want = np.array(_fwd(cfg, base))
+    for v in variants:
+        got = np.array(_fwd(cfg, v))
+        # identical math, different accumulation order through ~20 layers
+        np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+
+def test_dwc_fraction_ordering():
+    """MobileNets are DWC-heavy; ResNets have none (drives Table III)."""
+    f = {n: cnn.dwc_op_fraction(CNN_ZOO[n]) for n in CNN_ZOO}
+    assert f["mobilenetv1"] > 0.02
+    assert f["mobilenetv2"] > 0.02
+    assert f["efficientnet"] > 0.02
+    assert f["resnet50"] == 0.0
+    assert f["squeezenet"] == 0.0
+
+
+def test_cnn_flops_scale():
+    """Analytic flops track the paper's GOPs within 2x for the exact archs
+    (YOLOs are approximated backbones, so they are excluded)."""
+    for name in ["resnet50", "resnet152", "mobilenetv1", "mobilenetv2"]:
+        cfg = CNN_ZOO[name]
+        params = None
+        flops = cnn.cnn_flops(cfg, params)
+        paper = cfg.gops * 1e9
+        assert 0.5 < flops / paper < 2.2, (name, flops, paper)
+
+
+def test_perf_model_sanity():
+    from benchmarks import perf_model as pm
+    for name, cfg in CNN_ZOO.items():
+        t_ours = pm.model_inference_time(cfg, pm.OURS)
+        t_base = pm.model_inference_time(cfg, pm.BASELINE)
+        assert 0 < t_ours < 1.0
+        assert t_base >= t_ours * 0.99, name
+    # DWC-heavy models gain more from the DWC engine (paper's Table III)
+    gain = lambda n: (pm.model_inference_time(CNN_ZOO[n], pm.NO_DWC)
+                      / pm.model_inference_time(CNN_ZOO[n], pm.OURS))
+    assert gain("mobilenetv1") > gain("resnet50")

@@ -1,0 +1,134 @@
+"""Paper Table I / Eq. 3-4 reproduction + TPU tile-solver invariants."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dse
+
+
+class TestTable1:
+    def test_paper_rows(self):
+        """Table I: reuse requirements under different bandwidths."""
+        rows = {(r.bw_f, r.bw_w): r for r in dse.table1()}
+        # FM (1x16), WT (16x8) rows of Table I.
+        assert rows[(16, 16)].fm_reuse == 8
+        assert rows[(16, 16)].wt_reuse == 64
+        assert rows[(16, 16)].oc == 64
+        assert rows[(16, 16)].ihw == 64
+        assert rows[(16, 32)].fm_reuse == 8
+        assert rows[(16, 32)].wt_reuse == 32
+        assert rows[(32, 16)].fm_reuse == 4
+        assert rows[(32, 16)].wt_reuse == 64
+        assert rows[(32, 16)].oc == 32
+        assert rows[(32, 16)].ihw == 64
+        assert rows[(32, 32)].fm_reuse == 4
+        assert rows[(32, 32)].wt_reuse == 32
+
+    def test_dpuv4e_choice_is_ctc1(self):
+        """The selected design point reaches CTC >= 1 (compute-bound)."""
+        r = dse.dpuv4e_choice()
+        assert r.bw_f == 32 and r.bw_w == 16
+        assert r.ctc >= 1.0
+        assert r.oc == 32 and r.ihw == 64      # Section IV-A conclusion
+
+    @given(bw_f=st.sampled_from([8, 16, 32, 64, 128]),
+           bw_w=st.sampled_from([8, 16, 32, 64, 128]))
+    def test_reuse_always_reaches_ctc1(self, bw_f, bw_w):
+        """Property: the solver's minimum reuse always achieves CTC >= 1."""
+        r = dse.solve_reuse(bw_f, bw_w)
+        assert r.ctc >= 1.0 - 1e-9
+        # And it is minimal: one less FMReuse violates the FM constraint.
+        if r.fm_reuse > 1:
+            fm_load = r.wt_reuse * dse.FM_BITS / bw_f
+            t_smaller = (r.fm_reuse - 1) * r.wt_reuse
+            wt_load = (r.fm_reuse - 1) * dse.WT_BITS / bw_w
+            assert fm_load > t_smaller or wt_load > t_smaller or \
+                math.ceil(dse.FM_BITS / bw_f) == r.fm_reuse
+
+
+class TestAccBuffers:
+    def test_eq3_buffer_plan(self):
+        """Paper Eq. 3: IH=4, IW=16, OC=32 fits the 64 KB ACC/NL pair."""
+        plan = dse.acc_buffer_plan(ih=4, iw=16, oc=32)
+        assert plan.psum_bytes == 4 * 16 * 32 * 4
+        assert plan.fits
+
+    def test_eq4_iw_max(self):
+        """Paper Eq. 4: IW_max <= 32 at IH=4."""
+        assert dse.max_iw(ih=4, oc=32) == 32
+
+    def test_paper_selection_satisfies_reuse(self):
+        """IH=4 (x2 multicast -> 8) x IW=16 >= the required IH*IW=64."""
+        assert 8 * 16 >= dse.dpuv4e_choice().ihw
+
+
+class TestTpuTiles:
+    def test_blocks_are_mxu_aligned(self):
+        t = dse.solve_conv_blocks(4096, 4096, 4096)
+        assert t.bm % 128 == 0 and t.bn % 128 == 0 and t.bk % 128 == 0
+
+    def test_vmem_constraint(self):
+        t = dse.solve_conv_blocks(8192, 8192, 8192)
+        assert t.vmem_bytes <= dse.VMEM_TARGET
+
+    @settings(deadline=None, max_examples=25)
+    @given(m=st.integers(128, 8192), n=st.integers(128, 8192),
+           k=st.integers(128, 8192),
+           ib=st.sampled_from([1, 2]))
+    def test_solver_invariants(self, m, n, k, ib):
+        """Property: any solver output fits VMEM and is MXU-aligned."""
+        t = dse.solve_conv_blocks(m, n, k, in_dtype_bytes=ib)
+        assert t.vmem_bytes <= dse.VMEM_TARGET
+        assert t.bm % 128 == 0 and t.bn % 128 == 0 and t.bk % 128 == 0
+        assert t.fm_reuse == t.bn and t.wt_reuse == t.bm
+
+    def test_int8_fits_larger_blocks(self):
+        """int8 operands are half the bytes -> larger blocks fit VMEM ->
+        CTC at least as good as bf16 (the paper's INT8 datapath argument
+        mapped to TPU constants)."""
+        t8 = dse.solve_conv_blocks(4096, 4096, 4096, in_dtype_bytes=1)
+        t16 = dse.solve_conv_blocks(4096, 4096, 4096, in_dtype_bytes=2)
+        assert t8.ctc >= t16.ctc * 0.99
+        assert t8.vmem_bytes <= dse.VMEM_TARGET
+
+
+class TestDwcModel:
+    def test_fig8_k3s1_atomic_cycles(self):
+        """Paper Fig. 7: one atomic DWC (k=3, s=1) takes 12 MAC cycles."""
+        p = dse.dwc_ctc(3, 1)
+        assert p.mac_cycles == 12 * 8          # 8 atomics per iteration
+
+    def test_fig8_trends(self):
+        """Paper Fig. 8: larger kernel -> higher CTC; larger stride -> lower;
+        7x7 stride-1 is the most efficient configuration."""
+        pts = {(p.kernel, p.stride): p.ctc for p in dse.fig8_sweep()}
+        assert pts[(5, 1)] > pts[(3, 1)]
+        assert pts[(7, 1)] > pts[(5, 1)]
+        for k in (3, 5, 7):
+            assert pts[(k, 2)] < pts[(k, 1)]
+        assert max(pts, key=pts.get) == (7, 1)
+
+    def test_stride1_fm_bound(self):
+        """Paper: at stride 1 the FM input is the bottleneck (CTC < 1)."""
+        assert dse.dwc_ctc(3, 1).ctc < 1.0
+
+
+class TestLowChannel:
+    def test_resnet_stage0_utilization_low(self):
+        """Paper Section V-B reports 13.1% Conv PE utilization on ResNet50
+        stage 0.  Our model (without their exact pixel schedule) bounds it:
+        well under half the array is useful, and far under hidden-layer
+        utilization."""
+        u = dse.conv_pe_utilization(ic=3, oc=64)
+        hidden = dse.conv_pe_utilization(ic=256, oc=256) * (49 / 1)
+        assert u < 0.4
+        u_naive = (3 / 64) * (64 / 128)        # no window folding: 2.3%
+        assert u_naive < 0.131 < u             # paper's 13.1% sits between
+
+    def test_mxu_analogue_low(self):
+        """TPU analogue: IC=3 conv wastes the MXU without window folding."""
+        plain = dse.mxu_utilization(ic=3, oc=64, kk=1)
+        folded = dse.mxu_utilization(ic=3, oc=64, kk=49)
+        assert plain < 0.02
+        assert folded > plain * 20

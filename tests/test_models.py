@@ -1,0 +1,123 @@
+"""Per-arch reduced smoke tests: one forward + one train step on CPU,
+asserting output shapes and finiteness (the assignment's smoke contract)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core.config import EngineConfig, ShapeConfig, TrainConfig
+from repro.models import transformer as T
+from repro.models import whisper as W
+from repro.models.params import init_params
+from repro.train.train_step import init_train_state, make_train_step
+
+ENG = EngineConfig(quant="none", backend="ref")
+ALL_ARCHS = configs.list_archs()
+
+
+def _batch(arch, rng, b=2, l=16):
+    tokens = rng.integers(0, arch.vocab_size, (b, l + 1)).astype(np.int32)
+    batch = {"tokens": jnp.array(tokens[:, :l]),
+             "labels": jnp.array(tokens[:, 1:])}
+    if arch.family == "vlm":
+        batch = {
+            "embeds": jnp.array(
+                rng.normal(size=(b, l, arch.d_model)).astype(np.float32)),
+            "positions": jnp.broadcast_to(
+                jnp.arange(l)[None, :, None], (b, l, 3)).astype(jnp.int32),
+            "labels": jnp.array(tokens[:, 1:]),
+        }
+    elif arch.family == "audio":
+        batch["enc_embeds"] = jnp.array(rng.normal(
+            size=(b, arch.encoder_seq, arch.d_model)).astype(np.float32))
+    return batch
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_smoke_forward(name, rng):
+    arch = configs.reduced(configs.get_arch(name))
+    is_audio = arch.family == "audio"
+    schema = (W.whisper_schema(arch, max_dec_pos=64) if is_audio
+              else T.lm_schema(arch))
+    params = init_params(schema, jax.random.PRNGKey(0))
+    batch = _batch(arch, rng)
+    mod = W if is_audio else T
+    logits, aux = mod.forward(params, batch, arch, ENG)
+    b = 2
+    l = batch["labels"].shape[1]
+    assert logits.shape == (b, l, arch.vocab_size)
+    assert np.isfinite(np.array(logits, np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_smoke_train_step(name, rng):
+    arch = configs.reduced(configs.get_arch(name))
+    is_audio = arch.family == "audio"
+    schema = (W.whisper_schema(arch, max_dec_pos=64) if is_audio
+              else T.lm_schema(arch))
+    params = init_params(schema, jax.random.PRNGKey(0))
+    state = init_train_state(params)
+    tcfg = TrainConfig(total_steps=10, warmup_steps=2)
+    step = jax.jit(make_train_step(arch, ENG, tcfg), donate_argnums=(0,))
+    batch = _batch(arch, rng)
+    state, metrics = step(state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss) and loss > 0
+    assert int(state["opt"]["step"]) == 1
+    # a second step with the same batch must reduce the loss
+    state, metrics2 = step(state, batch)
+    assert float(metrics2["loss"]) < loss
+
+
+def test_remat_matches_no_remat(rng):
+    arch = configs.reduced(configs.get_arch("qwen2-1.5b"))
+    params = init_params(T.lm_schema(arch), jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.array(rng.integers(0, 64, (2, 8)).astype(np.int32))}
+    l1, _ = T.forward(params, batch, arch, ENG, remat="none",
+                      compute_dtype=jnp.float32)
+    l2, _ = T.forward(params, batch, arch, ENG, remat="block",
+                      compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.array(l1), np.array(l2), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_microbatched_grads_match(rng):
+    """Gradient accumulation over 2 microbatches == single batch."""
+    arch = configs.reduced(configs.get_arch("qwen2-1.5b"))
+    params = init_params(T.lm_schema(arch), jax.random.PRNGKey(0))
+    tok = rng.integers(0, arch.vocab_size, (4, 9)).astype(np.int32)
+    batch = {"tokens": jnp.array(tok[:, :8]), "labels": jnp.array(tok[:, 1:])}
+    t1 = TrainConfig(microbatches=1, z_loss=0.0)
+    t2 = TrainConfig(microbatches=2, z_loss=0.0)
+    s1, m1 = make_train_step(arch, ENG, t1)(init_train_state(params), batch)
+    s2, m2 = make_train_step(arch, ENG, t2)(init_train_state(params), batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=5e-4)
+    p1 = jax.tree_util.tree_leaves(s1["params"])
+    p2 = jax.tree_util.tree_leaves(s2["params"])
+    for a, b in zip(p1, p2):
+        np.testing.assert_allclose(np.array(a), np.array(b), rtol=2e-3,
+                                   atol=2e-4)
+
+
+def test_param_count_matches_schema():
+    """ArchConfig.param_count() tracks the real schema within 2%
+    (it is the roofline's N)."""
+    from repro.models.params import param_count
+    for name in ALL_ARCHS:
+        arch = configs.get_arch(name)
+        if arch.family == "audio":
+            continue                        # whisper counted separately
+        schema = T.lm_schema(arch)
+        real = param_count(schema)
+        approx = arch.param_count()
+        assert abs(real - approx) / real < 0.02, (name, real, approx)
+
+
+def test_grok_is_314b_scale():
+    arch = configs.get_arch("grok-1-314b")
+    n = arch.param_count()
+    assert 2.8e11 < n < 3.6e11, n
+    assert arch.active_param_count() < 0.35 * n

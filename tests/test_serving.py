@@ -1,0 +1,165 @@
+"""Serving invariants: prefill+decode == full forward (teacher forcing),
+int8 KV cache accuracy, ring-buffer local attention, quantized engines."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+import jax.tree_util as jtu
+
+from repro import configs
+from repro.core import engine as eng_lib
+from repro.core.config import EngineConfig
+from repro.models import transformer as T
+from repro.models import whisper as W
+from repro.models.params import init_params, is_spec
+
+ENG = EngineConfig(quant="none", backend="ref")
+DENSE = ["granite-8b", "qwen2-1.5b", "gemma2-2b", "minitron-4b",
+         "recurrentgemma-2b", "falcon-mamba-7b"]
+MOE = ["grok-1-314b", "granite-moe-1b-a400m"]
+
+
+def _cache(schema):
+    return jtu.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), schema,
+                        is_leaf=is_spec)
+
+
+def _run_consistency(name, rng, eng=ENG, atol=2e-2, allow_frac=0.0):
+    arch = configs.reduced(configs.get_arch(name))
+    params = init_params(T.lm_schema(arch), jax.random.PRNGKey(0))
+    B, L, EXTRA = 2, 12, 4
+    tokens = jnp.array(rng.integers(0, arch.vocab_size,
+                                    (B, L + EXTRA)).astype(np.int32))
+    full, _ = T.forward(params, {"tokens": tokens}, arch, ENG,
+                        compute_dtype=jnp.float32)
+    cache = _cache(T.cache_schema(arch, B, L + EXTRA, eng))
+    lp, cache = T.prefill(params, cache, {"tokens": tokens[:, :L]}, arch, eng,
+                          compute_dtype=jnp.float32)
+    preds = [np.array(lp[:, 0])]
+    want = [np.array(full[:, L - 1])]
+    for t in range(EXTRA):
+        ld, cache = T.decode(params, cache, tokens[:, L + t:L + t + 1],
+                             arch, eng, compute_dtype=jnp.float32)
+        preds.append(np.array(ld[:, 0]))
+        want.append(np.array(full[:, L + t]))
+    got, want = np.stack(preds), np.stack(want)
+    bad = np.abs(got - want) > (atol + atol * np.abs(want))
+    frac = bad.mean()
+    assert frac <= allow_frac, f"{name}: {frac:.4%} elements out of tol"
+
+
+@pytest.mark.parametrize("name", DENSE)
+def test_prefill_decode_consistency(name, rng):
+    _run_consistency(name, rng)
+
+
+@pytest.mark.parametrize("name", MOE)
+def test_prefill_decode_consistency_moe(name, rng):
+    # top-k routing has measure-zero ties that flip under different program
+    # fusions; allow a vanishing mismatch fraction.
+    _run_consistency(name, rng, allow_frac=0.005)
+
+
+def test_consistency_under_w8a8(rng):
+    """Quantized serving drifts from the f32 oracle only boundedly."""
+    arch = configs.reduced(configs.get_arch("qwen2-1.5b"))
+    params = init_params(T.lm_schema(arch), jax.random.PRNGKey(0))
+    eng = EngineConfig(quant="w8a8", backend="ref")
+    qparams = eng_lib.quantize_params(params, eng)
+    B, L = 2, 12
+    tokens = jnp.array(rng.integers(0, arch.vocab_size,
+                                    (B, L)).astype(np.int32))
+    full, _ = T.forward(params, {"tokens": tokens}, arch, ENG,
+                        compute_dtype=jnp.float32)
+    cache = _cache(T.cache_schema(arch, B, L, eng))
+    lp, _ = T.prefill(qparams, cache, {"tokens": tokens}, arch, eng,
+                      compute_dtype=jnp.float32)
+    # rank agreement on the top prediction is the serving-level criterion
+    agree = (np.argmax(np.array(lp[:, 0]), -1)
+             == np.argmax(np.array(full[:, -1]), -1)).mean()
+    assert agree >= 0.5
+    rel = (np.abs(np.array(lp[:, 0]) - np.array(full[:, -1])).mean()
+           / np.abs(np.array(full[:, -1])).mean())
+    assert rel < 0.25
+
+
+def test_int8_kv_cache_close(rng):
+    arch = configs.reduced(configs.get_arch("granite-8b"))
+    params = init_params(T.lm_schema(arch), jax.random.PRNGKey(0))
+    eng8 = EngineConfig(quant="none", backend="ref", kv_cache_dtype="int8")
+    B, L = 2, 12
+    tokens = jnp.array(rng.integers(0, arch.vocab_size,
+                                    (B, L)).astype(np.int32))
+    full, _ = T.forward(params, {"tokens": tokens}, arch, ENG,
+                        compute_dtype=jnp.float32)
+    cache = _cache(T.cache_schema(arch, B, L, eng8))
+    lp, cache = T.prefill(params, cache, {"tokens": tokens}, arch, eng8,
+                          compute_dtype=jnp.float32)
+    err = np.abs(np.array(lp[:, 0]) - np.array(full[:, -1])).max()
+    assert err < 0.5
+    assert cache["layers"][0]["k"].dtype == jnp.int8
+
+
+def test_ring_buffer_wraps(rng):
+    """Local-attention ring cache: decoding past the window stays causal and
+    consistent with full attention over the window."""
+    import dataclasses
+    arch = dataclasses.replace(
+        configs.reduced(configs.get_arch("gemma2-2b")), local_window=8)
+    params = init_params(T.lm_schema(arch), jax.random.PRNGKey(0))
+    B, total = 1, 20
+    tokens = jnp.array(rng.integers(0, arch.vocab_size,
+                                    (B, total)).astype(np.int32))
+    full, _ = T.forward(params, {"tokens": tokens}, arch, ENG,
+                        compute_dtype=jnp.float32)
+    cache = _cache(T.cache_schema(arch, B, total, ENG))
+    lp, cache = T.prefill(params, cache, {"tokens": tokens[:, :4]}, arch, ENG,
+                          compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.array(lp[:, 0]), np.array(full[:, 3]),
+                               rtol=2e-2, atol=2e-2)
+    for t in range(4, total):               # decode well past the window
+        ld, cache = T.decode(params, cache, tokens[:, t:t + 1], arch, ENG,
+                             compute_dtype=jnp.float32)
+        np.testing.assert_allclose(np.array(ld[:, 0]), np.array(full[:, t]),
+                                   rtol=3e-2, atol=3e-2)
+
+
+def test_whisper_serving(rng):
+    arch = configs.reduced(configs.get_arch("whisper-tiny"))
+    params = init_params(W.whisper_schema(arch, max_dec_pos=64),
+                         jax.random.PRNGKey(0))
+    B, L, EXTRA = 2, 8, 3
+    enc = jnp.array(rng.normal(size=(B, arch.encoder_seq,
+                                     arch.d_model)).astype(np.float32))
+    tok = jnp.array(rng.integers(0, arch.vocab_size,
+                                 (B, L + EXTRA)).astype(np.int32))
+    full, _ = W.forward(params, {"enc_embeds": enc, "tokens": tok}, arch, ENG,
+                        compute_dtype=jnp.float32)
+    cache = _cache(W.whisper_cache_schema(arch, B, L + EXTRA, ENG))
+    lp, cache = W.prefill(params, cache,
+                          {"enc_embeds": enc, "tokens": tok[:, :L]},
+                          arch, ENG, compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.array(lp[:, 0]), np.array(full[:, L - 1]),
+                               rtol=2e-2, atol=2e-2)
+    for t in range(EXTRA):
+        ld, cache = W.decode(params, cache, tok[:, L + t:L + t + 1], arch,
+                             ENG, compute_dtype=jnp.float32)
+        np.testing.assert_allclose(np.array(ld[:, 0]),
+                                   np.array(full[:, L + t]),
+                                   rtol=2e-2, atol=2e-2)
+
+
+def test_serve_engine_end_to_end(rng):
+    from repro.serve.engine import ServeEngine
+    arch = configs.reduced(configs.get_arch("qwen2-1.5b"))
+    params = init_params(T.lm_schema(arch), jax.random.PRNGKey(0))
+    eng = EngineConfig(quant="w8a8", backend="ref")
+    se = ServeEngine(arch, params, eng, batch_size=2, max_seq=48)
+    prompts = [rng.integers(0, arch.vocab_size, size=5) for _ in range(3)]
+    outs = se.generate(prompts, max_new_tokens=4)
+    assert len(outs) == 3
+    assert all(len(o) == 4 for o in outs)
+    # greedy decoding is deterministic
+    outs2 = se.generate(prompts, max_new_tokens=4)
+    for a, b in zip(outs, outs2):
+        np.testing.assert_array_equal(a, b)

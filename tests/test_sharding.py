@@ -1,0 +1,132 @@
+"""Sharding machinery: logical-axis resolution, ZeRO-1 specs, and a
+subprocess mini dry-run on a fake multi-device mesh."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.launch import mesh as mesh_lib
+from repro.models import params as prm
+from repro.models import transformer as T
+
+
+class FakeMesh:
+    """Shape-only stand-in (tests run on 1 device)."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+POD = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+class TestResolve:
+    def test_divisible(self):
+        assert prm.resolve_pspec(MESH, (4096, 14336), ("fsdp", "tp")) == \
+            P("data", "model")
+
+    def test_non_divisible_drops(self):
+        # 8 kv heads * 128 = 1024 divisible; 49155 vocab is not.
+        assert prm.resolve_pspec(MESH, (49155, 1024), ("tp", None)) == P()
+
+    def test_dp_composes_pods(self):
+        assert prm.resolve_pspec(POD, (256, 4096), ("dp", None)) == \
+            P(("pod", "data"))
+
+    def test_axis_used_once(self):
+        spec = prm.resolve_pspec(MESH, (256, 256), ("tp", "tp"))
+        assert spec == P("model")      # second use dropped
+
+    def test_all_arch_param_specs_resolve(self):
+        """Every param of every arch gets a valid spec on both meshes."""
+        for name in configs.list_archs():
+            arch = configs.get_arch(name)
+            if arch.family == "audio":
+                from repro.models import whisper as W
+                schema = W.whisper_schema(arch)
+            else:
+                schema = T.lm_schema(arch)
+            for mesh in (MESH, POD):
+                tree = prm.pspec_tree(schema, mesh)
+                leaves = jax.tree_util.tree_leaves(
+                    tree, is_leaf=lambda x: isinstance(x, P))
+                assert all(isinstance(l, P) for l in leaves), name
+
+    def test_tp_coverage(self):
+        """The big matrices must actually shard over the model axis."""
+        arch = configs.get_arch("granite-8b")
+        schema = T.lm_schema(arch)
+        specs = prm.pspec_tree(schema, MESH)
+        blk = specs["blocks"][0]
+        assert "model" in tuple(blk["attn"]["wq"])
+        assert "model" in tuple(blk["mlp"]["wu"])
+
+
+class TestZero1:
+    def test_adds_data_axis(self):
+        from repro.train.optim import zero1_pspec
+
+        class M:
+            axis_names = ("data", "model")
+            shape = {"data": 16, "model": 16}
+        sp = zero1_pspec(P(None, "model"), (4096, 14336), M())
+        assert sp == P("data", "model")
+
+    def test_respects_existing_fsdp(self):
+        from repro.train.optim import zero1_pspec
+
+        class M:
+            axis_names = ("data", "model")
+            shape = {"data": 16, "model": 16}
+        sp = zero1_pspec(P("data", "model"), (4096, 14336), M())
+        assert sp == P("data", "model")
+
+    def test_non_divisible_stays(self):
+        from repro.train.optim import zero1_pspec
+
+        class M:
+            axis_names = ("data", "model")
+            shape = {"data": 16, "model": 16}
+        assert zero1_pspec(P(), (3,), M()) == P()
+
+
+MINI_DRYRUN = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+import dataclasses
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro import configs
+from repro.core.config import ShapeConfig
+from repro.core import engine as eng_lib
+from repro.launch import build as B
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+arch = configs.reduced(configs.get_arch("gemma2-2b"))
+arch = dataclasses.replace(arch, vocab_size=256)
+import repro.core.config as cc
+cc.SHAPES["mini"] = ShapeConfig("mini", 64, 8, "train")
+prog = B.build(arch.name, "mini", mesh, arch=arch)
+lowered = prog.fn.lower(*prog.args)
+compiled = lowered.compile()
+txt = compiled.as_text()
+assert any(k in txt for k in ("all-reduce", "all-gather", "reduce-scatter")), \
+    "expected collectives in the partitioned module"
+print("MINI_DRYRUN_OK", compiled.cost_analysis()["flops"] > 0)
+"""
+
+
+def test_mini_dryrun_multidevice():
+    """End-to-end: production builder lowers+compiles on a fake 8-device
+    mesh and the partitioned module contains collectives."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", MINI_DRYRUN], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert "MINI_DRYRUN_OK True" in out.stdout, out.stdout + out.stderr
