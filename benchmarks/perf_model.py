@@ -40,10 +40,19 @@ class EngineModel:
     dwc_mode: str = "engine"
     use_low_channel: bool = True
     fused_epilogue: bool = True    # MISC on engine: no extra eltwise pass
+    # static_act: calibrated static scales -> activations stay int8 between
+    # engines (the compiled engine-program path).  False = the dynamic-f32
+    # pipeline: every edge is carried at f32 and re-quantized per call (an
+    # extra read-f32/write-int8 pass in front of every engine).
+    static_act: bool = True
 
     @property
     def use_dwc_engine(self):
         return self.dwc_mode == "engine"
+
+    @property
+    def act_bytes(self) -> int:
+        return 1 if self.static_act else 4
 
 
 # Paper Section V-B: measured Conv-PE utilization on ResNet50 stage 0.  Used
@@ -57,29 +66,39 @@ def _conv_time(px: int, ic: int, oc: int, k: int, eng: EngineModel,
                first_layer: bool = False) -> float:
     """One standard conv: px output pixels, k x k window."""
     ops = 2.0 * px * ic * oc * k * k
-    in_bytes = px * ic            # int8 activations (stride-adjusted approx)
+    # The engine always reads int8 (static edges, or the int8 the dynamic
+    # requant pass just wrote); dynamic additionally pays that pass (read
+    # f32 + write int8) and emits its output at f32.
+    in_bytes = px * ic            # stride-adjusted approx
     w_bytes = k * k * ic * oc
-    out_bytes = px * oc
+    out_bytes = px * oc * eng.act_bytes
+    # Both pipelines quantize the f32 input image once at the boundary;
+    # only the dynamic pipeline repeats the pass at every layer.
+    quant_bytes = (px * ic * 5
+                   if (first_layer or not eng.static_act) else 0)
     if first_layer:
         if eng.use_low_channel:
             # window folding (contraction = ic*k*k) + concurrency: the unit
             # runs while the main engines proceed (paper Section V-B), so
             # only its memory traffic remains on the critical path.
-            return (in_bytes + w_bytes + out_bytes) / HBM
+            return (in_bytes + w_bytes + out_bytes + quant_bytes) / HBM
         util = STAGE0_BASELINE_UTIL
     else:
         util = dse.mxu_utilization(min(ic, 128), min(oc, 128), kk=1)
     util = max(util, 1e-3)
     t_compute = ops / (PEAK_INT8 * util)
-    t_mem = (in_bytes + w_bytes + out_bytes) / HBM
+    t_mem = (in_bytes + w_bytes + out_bytes + quant_bytes) / HBM
     if not eng.fused_epilogue:
-        t_mem += 2.0 * out_bytes * 4 / HBM     # i32 psum round-trip
+        t_mem += 2.0 * px * oc * 4 / HBM       # i32 psum round-trip
     return max(t_compute, t_mem)
 
 
 def _dwc_time(px: int, c: int, k: int, eng: EngineModel) -> float:
     ops = 2.0 * px * c * k * k
-    byts = px * c * 2 + k * k * c
+    # int8 engine read + act_bytes output write (see _conv_time)
+    byts = px * c * (1 + eng.act_bytes) + k * k * c
+    if not eng.static_act:
+        byts += px * c * 5            # dynamic requant pass: read f32/write i8
     if eng.dwc_mode == "engine":
         t_compute = ops / PEAK_VPU
     elif eng.dwc_mode == "vpu":
@@ -100,7 +119,8 @@ def _dwc_time(px: int, c: int, k: int, eng: EngineModel) -> float:
 def _eltwise_time(px: int, c: int, eng: EngineModel) -> float:
     if eng.fused_epilogue:
         return 0.0                 # fused into the producing kernel
-    return 3.0 * px * c / HBM      # separate read-read-write pass
+    # separate read-read-write pass at the pipeline's activation width
+    return 3.0 * px * c * eng.act_bytes / HBM
 
 
 def model_inference_time(cfg: CNNConfig, eng: EngineModel) -> float:
@@ -158,9 +178,15 @@ def modeled_fps(cfg: CNNConfig, eng: EngineModel) -> float:
     return 1.0 / model_inference_time(cfg, eng)
 
 
-OURS = EngineModel()
-# XVDPU-analog: what our baseline code path executes (dense-diag DWC,
-# no low-channel unit, unfused epilogues).
+OURS = EngineModel()                       # compiled static-int8 pipeline
+# Same engines, but the eager dynamic-f32 pipeline: every edge round-trips
+# through f32 with a per-call requant pass (what cnn_forward without a
+# calibrated program executes).
+OURS_DYNAMIC = EngineModel(static_act=False)
+# XVDPU-analog: dense-diag DWC, no low-channel unit, unfused epilogues.
+# Stays static_act=True -- the paper's comparison DPU is also instruction-
+# driven with Vitis-AI static scales, so Table III ratios isolate the
+# engine features; the static-vs-dynamic pipeline gap is OURS_DYNAMIC's job.
 BASELINE = EngineModel(dwc_mode="dense", use_low_channel=False,
                        fused_epilogue=False)
 # TPU-native middle baseline: XLA grouped conv on the VPU, still no unit

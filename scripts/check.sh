@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 gate: collection must be clean (catches import-time regressions
+# like a hard dependency on an uninstalled package), then the full suite.
+#
+#   scripts/check.sh [extra pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== pytest collection =="
+python -m pytest -q --collect-only >/dev/null
+
+echo "== tier-1 suite =="
+python -m pytest -x -q "$@"

@@ -1,0 +1,37 @@
+"""CNN -> engine-program compiler (the paper's instruction-driven flow).
+
+Pipeline:
+
+    graph.build_graph(cfg)                  # typed op-graph IR
+    calibrate.calibrate(g, params, batches) # per-edge activation scales
+    passes.fold_requant(g, scales)          # static int8 plan (+ fusion)
+    executor.execute(program, ...)          # run on ref / pallas / baseline
+
+`compile_cnn(cfg)` yields the dynamic (eager-equivalent) program used by
+models.cnn.cnn_forward; `compile_calibrated(...)` yields the static int8
+program where activations stay int8 engine-to-engine.
+"""
+from repro.compiler.calibrate import calibrate
+from repro.compiler.executor import Program, compile_cnn, execute
+from repro.compiler.graph import (AddOp, ConcatOp, ConvOp, DwcOp, Graph,
+                                  InputOp, LinearOp, PoolOp, build_graph,
+                                  get_param)
+from repro.compiler.passes import (QuantPlan, dynamic_roundtrip_count,
+                                   f32_roundtrip_edges, fold_requant,
+                                   fusion_stats, residual_chains)
+
+
+def compile_calibrated(cfg, params, batches, eng=None) -> Program:
+    """Float params + representative batches -> static int8 engine program."""
+    g = build_graph(cfg)
+    scales = calibrate(g, params, batches, cfg, eng=eng)
+    return compile_cnn(cfg, scales=scales)
+
+
+__all__ = [
+    "AddOp", "ConcatOp", "ConvOp", "DwcOp", "Graph", "InputOp", "LinearOp",
+    "PoolOp", "Program", "QuantPlan", "build_graph", "calibrate",
+    "compile_calibrated", "compile_cnn", "dynamic_roundtrip_count",
+    "execute", "f32_roundtrip_edges", "fold_requant", "fusion_stats",
+    "get_param", "residual_chains",
+]

@@ -1,0 +1,52 @@
+"""Calibration pass: record per-edge activation scales from real batches.
+
+The Vitis-AI step of the paper's flow (Section III-A): run representative
+inputs through the float model and derive a static symmetric int8 scale for
+every activation edge.  We reuse core.quant.Calibrator (running absmax) and
+observe every graph edge by executing the program in dynamic float mode with
+an observer hook -- so the recorded ranges are exactly the tensors the
+engines will carry.
+
+Scales are returned as plain Python floats keyed by node id: they become
+compile-time constants of the static program (closure constants under jit,
+`functools.partial` statics inside the Pallas epilogues), never traced
+values.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional
+
+import jax
+
+from repro.compiler import executor as ex
+from repro.compiler.graph import Graph
+from repro.core.config import CNNConfig, EngineConfig
+from repro.core.quant import Calibrator
+
+
+def calibrate(graph: Graph, params, batches: Iterable[jax.Array],
+              cfg: CNNConfig,
+              eng: Optional[EngineConfig] = None) -> Dict[int, float]:
+    """Run `batches` (each [N, H, W, C] float) through the float ref path and
+    return {node_id: activation scale}.
+
+    `params` must be the FLOAT parameter tree: calibration measures the
+    ranges quantized inference must reproduce, so it runs before (and
+    independently of) weight quantization.
+    """
+    eng = eng or EngineConfig(quant="none", backend="ref")
+    if eng.quant != "none":
+        raise ValueError("calibration runs on the float path (quant='none')")
+    cal = Calibrator()
+    prog = ex.Program(graph, cfg, None)
+
+    def observe(node, value):
+        cal.observe(str(node.id), value)
+
+    ran = False
+    for images in batches:
+        ran = True
+        ex.execute(prog, params, images, eng, observer=observe)
+    if not ran:
+        raise ValueError("calibration needs at least one batch")
+    return {int(k): float(v) for k, v in cal.scales().items()}

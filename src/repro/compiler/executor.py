@@ -1,0 +1,251 @@
+"""Engine-program executor: runs a compiled op graph on any backend.
+
+Two execution modes, selected by whether the program carries a QuantPlan:
+
+  * dynamic (plan=None) -- reproduces the historical eager `cnn_forward`
+    exactly: every op dispatches through kernels/ops.py with the engine
+    config's quant mode, activations round-trip through f32 between ops and
+    are re-quantized dynamically per call.  This is the float/training path
+    and the "dynamic-f32 pipeline" baseline of the benchmarks.
+
+  * static (plan from passes.fold_requant) -- the paper's dataflow: the
+    input image is quantized once with its calibrated scale, every engine
+    consumes int8 and emits int8 via its fused requant epilogue, and the
+    only f32 tensor materialized is the logits.
+
+Backend selection (ref / pallas / XVDPU-analog baseline) stays inside
+kernels/ops.py: the same compiled program runs on any EngineConfig.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.compiler import passes as passes_lib
+from repro.compiler.graph import (AddOp, ConcatOp, ConvOp, DwcOp, Graph,
+                                  InputOp, LinearOp, OpNode, PoolOp,
+                                  build_graph, get_param)
+from repro.compiler.passes import QuantPlan, fold_requant
+from repro.core.config import CNNConfig, EngineConfig
+from repro.core.quant import QTensor, quantize_static
+from repro.kernels import ops, ref
+
+
+@dataclass(frozen=True)
+class Program:
+    """A compiled engine program: op graph + optional static-int8 plan."""
+    graph: Graph
+    cfg: CNNConfig
+    plan: Optional[QuantPlan] = None
+
+    @property
+    def static(self) -> bool:
+        return self.plan is not None
+
+    def f32_roundtrips(self) -> int:
+        """f32 edges between engines (0 for a correct static program)."""
+        if self.plan is None:
+            return passes_lib.dynamic_roundtrip_count(self.graph)
+        return len(passes_lib.f32_roundtrip_edges(self.graph, self.plan))
+
+
+@functools.lru_cache(maxsize=None)
+def _dynamic_program(cfg: CNNConfig) -> Program:
+    return Program(build_graph(cfg), cfg, None)
+
+
+def compile_cnn(cfg: CNNConfig,
+                scales: Optional[Dict[int, float]] = None) -> Program:
+    """Lower a CNNConfig to an engine program.
+
+    Without `scales` the program executes dynamically (eager-equivalent);
+    that program is cached per config (CNNConfig is frozen/hashable), so
+    the eager cnn_forward wrapper builds each graph once.  With calibrated
+    per-edge scales the requant-folding pass produces the static int8 plan.
+    """
+    if scales is None:
+        return _dynamic_program(cfg)
+    g = build_graph(cfg)
+    return Program(g, cfg, fold_requant(g, scales))
+
+
+def execute(program: Program, params, images: jax.Array,
+            eng: EngineConfig,
+            observer: Optional[Callable[[OpNode, jax.Array], None]] = None
+            ) -> jax.Array:
+    """Run the program.  images: [N, H, W, C] float.  Returns logits."""
+    if program.static:
+        return _execute_static(program, params, images, eng)
+    return _execute_dynamic(program, params, images, eng, observer)
+
+
+# ---------------------------------------------------------------------------
+# Dynamic mode (eager-equivalent; also the calibration vehicle)
+# ---------------------------------------------------------------------------
+
+def _refcounts(g: Graph) -> Dict[int, int]:
+    counts: Dict[int, int] = {}
+    for n in g.nodes:
+        for i in n.inputs:
+            counts[i] = counts.get(i, 0) + 1
+    return counts
+
+
+def _release(vals: Dict, counts: Dict[int, int], n: OpNode, g: Graph) -> None:
+    """Drop activations after their last consumer so eager (un-jitted)
+    execution keeps O(live edges) -- not O(all nodes) -- tensors alive,
+    matching the replaced hand-written forward's rebinding behavior."""
+    for i in n.inputs:
+        counts[i] -= 1
+        if counts[i] == 0 and i != g.output:
+            del vals[i]
+
+
+def _execute_dynamic(program: Program, params, images, eng: EngineConfig,
+                     observer=None) -> jax.Array:
+    g = program.graph
+    counts = _refcounts(g)
+    vals: Dict[int, jax.Array] = {}
+    for n in g.nodes:
+        if isinstance(n, InputOp):
+            v = images
+        elif isinstance(n, ConvOp):
+            w, b = get_param(params, n.w), get_param(params, n.b)
+            if n.first_layer:
+                v = ops.first_layer_conv(vals[n.inputs[0]], w, b, n.stride,
+                                         n.padding, n.act, eng)
+                v = v.astype(jnp.float32)
+            else:
+                v = ops.conv2d_pe(vals[n.inputs[0]], w, b, n.stride,
+                                  n.padding, n.act, eng)
+        elif isinstance(n, DwcOp):
+            w, b = get_param(params, n.w), get_param(params, n.b)
+            v = ops.dwc2d(vals[n.inputs[0]], w, b, n.stride, n.padding,
+                          n.act, eng)
+        elif isinstance(n, AddOp):
+            v = ops.misc_add(vals[n.inputs[0]], vals[n.inputs[1]], n.act, eng)
+        elif isinstance(n, PoolOp):
+            x = vals[n.inputs[0]]
+            if n.pool == "global":
+                v = ref.global_avgpool(x)
+            elif n.pool == "avg":
+                v = ops.avgpool2d(x, n.kernel, n.stride, eng)
+            else:
+                v = ref.maxpool2d(x, n.kernel, n.stride)
+        elif isinstance(n, ConcatOp):
+            v = jnp.concatenate([vals[i] for i in n.inputs], axis=-1)
+        elif isinstance(n, LinearOp):
+            w, b = get_param(params, n.w), get_param(params, n.b)
+            v = ops.linear(vals[n.inputs[0]], w, b, n.act, eng,
+                           out_dtype=jnp.float32)
+        else:
+            raise TypeError(f"unknown op {type(n).__name__}")
+        vals[n.id] = v
+        if observer is not None:
+            observer(n, v)
+        _release(vals, counts, n, g)
+    return vals[g.output]
+
+
+# ---------------------------------------------------------------------------
+# Static mode (calibrated end-to-end int8 dataflow)
+# ---------------------------------------------------------------------------
+
+def _require_qtensor(w, n: OpNode):
+    if not isinstance(w, QTensor):
+        raise ValueError(
+            f"static program: {type(n).__name__} #{n.id} expects int8 "
+            f"QTensor weights at {n.w}; quantize params with "
+            "core.engine.quantize_params first")
+    return w
+
+
+def _execute_static(program: Program, params, images,
+                    eng: EngineConfig) -> jax.Array:
+    g, plan = program.graph, program.plan
+    scale_of = plan.out_scale
+    counts = _refcounts(g)
+    vals: Dict[int, QTensor] = {}
+
+    def out_scale_for(n: OpNode):
+        return scale_of[n.id] if plan.emit_int8[n.id] else None
+
+    for n in g.nodes:
+        os = out_scale_for(n)
+        if isinstance(n, InputOp):
+            # One static quantization at the boundary; int8 from here on.
+            v = QTensor(quantize_static(images, jnp.float32(os)), os)
+        elif isinstance(n, ConvOp):
+            w = _require_qtensor(get_param(params, n.w), n)
+            b = get_param(params, n.b)
+            fn = ops.first_layer_conv if n.first_layer else ops.conv2d_pe
+            r = fn(vals[n.inputs[0]], w, b, n.stride, n.padding, n.act, eng,
+                   out_scale=os)
+            v = QTensor(r, os)
+        elif isinstance(n, DwcOp):
+            w = _require_qtensor(get_param(params, n.w), n)
+            b = get_param(params, n.b)
+            r = ops.dwc2d(vals[n.inputs[0]], w, b, n.stride, n.padding,
+                          n.act, eng, out_scale=os)
+            v = QTensor(r, os)
+        elif isinstance(n, AddOp):
+            a, bq = vals[n.inputs[0]], vals[n.inputs[1]]
+            r = ops.misc_add(a.q, bq.q, n.act, eng,
+                             sa=float(a.scale), sb=float(bq.scale),
+                             out_scale=os)
+            v = QTensor(r, os)
+        elif isinstance(n, PoolOp):
+            x = vals[n.inputs[0]]
+            if n.pool == "max":
+                # Order-preserving on int8: values and scale pass through.
+                v = QTensor(ref.maxpool2d(x.q, n.kernel, n.stride), os)
+            elif n.pool == "global":
+                # Sum in int32 (like every engine accumulator), then one
+                # fused scale+requant epilogue -- no f32 fmap materialized.
+                acc = jnp.sum(x.q.astype(jnp.int32), axis=(1, 2))
+                px = x.q.shape[1] * x.q.shape[2]
+                r = acc.astype(jnp.float32) * (float(x.scale) / px)
+                v = (QTensor(quantize_static(r, jnp.float32(os)), os)
+                     if os is not None else r)
+            else:
+                acc = jax.lax.reduce_window(
+                    x.q.astype(jnp.int32), 0, jax.lax.add,
+                    (1, n.kernel, n.kernel, 1), (1, n.stride, n.stride, 1),
+                    "VALID")
+                r = acc.astype(jnp.float32) * (float(x.scale) / n.kernel ** 2)
+                v = QTensor(quantize_static(r, jnp.float32(os)), os)
+        elif isinstance(n, ConcatOp):
+            parts = []
+            for i in n.inputs:
+                xi = vals[i]
+                if xi.scale == os:            # requant folded into producer
+                    parts.append(xi.q)
+                else:                         # MISC-side int8->int8 rescale
+                    parts.append(_rescale_int8(xi.q, float(xi.scale), os))
+            v = QTensor(jnp.concatenate(parts, axis=-1), os)
+        elif isinstance(n, LinearOp):
+            w = _require_qtensor(get_param(params, n.w), n)
+            b = get_param(params, n.b)
+            x = vals[n.inputs[0]]
+            r = ops.linear(x, w, b, n.act, eng, out_dtype=jnp.float32,
+                           out_scale=os)
+            v = QTensor(r, os) if os is not None else r
+        else:
+            raise TypeError(f"unknown op {type(n).__name__}")
+        vals[n.id] = v
+        _release(vals, counts, n, g)
+
+    out = vals[g.output]
+    return out.dequant() if isinstance(out, QTensor) else out
+
+
+def _rescale_int8(q: jax.Array, s_in: float, s_out: float) -> jax.Array:
+    """int8 -> int8 rescale without materializing an f32 tensor between
+    engines (a MISC-core epilogue in hardware)."""
+    r = jnp.clip(jnp.round(q.astype(jnp.float32) * (s_in / s_out)),
+                 -127, 127)
+    return r.astype(jnp.int8)

@@ -1,0 +1,139 @@
+"""Compiler passes: requant folding + engine-epilogue fusion planning.
+
+Input: an op graph (graph.py) and per-edge calibrated activation scales
+(calibrate.py).  Output: a QuantPlan that the static executor follows --
+for every edge, the int8 scale it is carried at, and for every op, whether
+its NL/RACNL epilogue requantizes straight to the consumer's scale.
+
+The point (paper Section III-A / IV-B2): with static Vitis-AI-style scales,
+activations stay int8 from engine to engine.  Each PE's epilogue performs
+  dequant(int32 acc) -> bias -> activation -> requant(out_scale)
+in one fused pass, so the only f32 tensor the whole program materializes is
+the final logits.  The dynamic path (no plan) instead round-trips every edge
+through f32 and re-quantizes per call -- the gap these passes close.
+
+Folding rules:
+  * max-pool is scale-preserving: it reuses its producer's scale verbatim
+    (int8 values pass through untouched, no requant at all);
+  * concat unifies its branch scales: each single-consumer producer requants
+    directly to the concat's scale inside its own epilogue, so the concat is
+    a pure bank interleave;
+  * everything else requants in its producing engine's epilogue to its own
+    calibrated scale.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+from repro.compiler.graph import (AddOp, ConcatOp, ConvOp, DwcOp, Graph,
+                                  InputOp, PoolOp)
+
+_MIN_SCALE = 1e-8
+
+
+@dataclass(frozen=True)
+class QuantPlan:
+    """Static-int8 execution plan for one graph."""
+    # node id -> scale its OUTPUT edge is carried at (int8 value * scale = f32)
+    out_scale: Dict[int, float]
+    # node id -> does the node emit int8 (False only for the logits)
+    emit_int8: Dict[int, bool]
+    # edges whose requant was folded into the producer epilogue for a
+    # *different* consumer scale (concat unification): (producer, consumer)
+    folded: Tuple[Tuple[int, int], ...]
+    stats: Dict[str, int] = field(default_factory=dict)
+
+
+def fold_requant(graph: Graph, scales: Dict[int, float]) -> QuantPlan:
+    """Assign every edge a static int8 scale and fold requants into the
+    producing engines' epilogues."""
+    missing = [n.id for n in graph.nodes if n.id not in scales]
+    if missing:
+        raise ValueError(
+            f"calibration scales missing for nodes {missing}; "
+            "run compiler.calibrate over representative batches first")
+
+    out_scale = {i: max(float(scales[i]), _MIN_SCALE) for i in scales}
+    emit_int8 = {n.id: True for n in graph.nodes}
+    emit_int8[graph.output] = False          # logits stay f32
+    consumers = graph.consumers()
+    folded: List[Tuple[int, int]] = []
+
+    for n in graph.nodes:
+        if isinstance(n, PoolOp) and n.pool == "max":
+            # Scale-preserving: int8 values flow through the MISC comparator
+            # untouched, so the output edge inherits the input's scale.
+            out_scale[n.id] = out_scale[n.inputs[0]]
+        elif isinstance(n, ConcatOp):
+            # Unify branch scales: each branch engine requants to the concat
+            # scale in its own epilogue (possible only when this concat is
+            # the branch's sole consumer; otherwise the executor rescales
+            # int8->int8 at the concat input instead).
+            s = out_scale[n.id]
+            for p in n.inputs:
+                if len(consumers[p]) == 1 and isinstance(
+                        graph.nodes[p], (ConvOp, DwcOp, AddOp)):
+                    out_scale[p] = s
+                    folded.append((p, n.id))
+
+    stats = dict(fusion_stats(graph))
+    stats["folded_requants"] = len(folded)
+    stats["dynamic_f32_roundtrips"] = dynamic_roundtrip_count(graph)
+    return QuantPlan(out_scale=out_scale, emit_int8=emit_int8,
+                     folded=tuple(folded), stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# Fusion analysis (conv -> add -> relu residual chains on the MISC core)
+# ---------------------------------------------------------------------------
+
+def residual_chains(graph: Graph) -> List[Tuple[int, int]]:
+    """(conv_id, add_id) pairs where a Conv PE output feeds a MISC add --
+    the paper's conv->add->relu bottleneck epilogue."""
+    chains = []
+    for n in graph.nodes:
+        if isinstance(n, AddOp):
+            for p in n.inputs:
+                if isinstance(graph.nodes[p], (ConvOp, DwcOp)):
+                    chains.append((p, n.id))
+    return chains
+
+
+def fusion_stats(graph: Graph) -> Dict[str, int]:
+    chains = residual_chains(graph)
+    return {
+        "residual_chains": len(chains),
+        "misc_adds": graph.count(AddOp),
+        "convs": graph.count(ConvOp),
+        "dwcs": graph.count(DwcOp),
+    }
+
+
+def f32_roundtrip_edges(graph: Graph, plan: QuantPlan
+                        ) -> List[Tuple[int, int]]:
+    """Edges that materialize f32 between two engines under the plan.
+
+    An edge (p -> c) round-trips when the producer emits f32 and the consumer
+    is a quantized engine that would have to re-quantize it.  A correct plan
+    has none: the only f32 value is the graph output, which has no consumer.
+    """
+    bad = []
+    for n in graph.nodes:
+        for p in n.inputs:
+            if not plan.emit_int8.get(p, False) and not isinstance(
+                    graph.nodes[p], InputOp):
+                bad.append((p, n.id))
+    return bad
+
+
+def dynamic_roundtrip_count(graph: Graph) -> int:
+    """How many edges the eager dynamic path round-trips through f32:
+    every consumed edge between compute ops (the producer dequantizes to f32,
+    the consumer re-quantizes per call).  The static plan's contrast line."""
+    count = 0
+    for n in graph.nodes:
+        for p in n.inputs:
+            if not isinstance(graph.nodes[p], InputOp):
+                count += 1
+    return count

@@ -21,6 +21,9 @@ QUANT_KEYS = frozenset({
     "wq", "wk", "wv", "wo", "wg", "wu", "wd", "wi",
     "in_proj", "out_proj", "x_proj", "dt_proj", "in_x", "in_gate",
     "head", "router", "embed",
+    # CNN zoo (models/cnn.py schema): stem / stage convs / depthwise taps /
+    # squeeze-expand / classifier head -- the engine-program weights.
+    "stem_w", "w", "w1", "w2", "w3", "wskip", "we", "wp", "ws", "head_w",
 })
 
 

@@ -1,0 +1,15 @@
+"""Pallas API compatibility across jax versions.
+
+jax >= 0.5 exposes `pltpu.CompilerParams`; 0.4.x calls the same dataclass
+`pltpu.TPUCompilerParams`.  Every kernel builds its compiler params through
+this helper so the repo runs on either.
+"""
+from __future__ import annotations
+
+import jax.experimental.pallas.tpu as pltpu
+
+_CLS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def compiler_params(**kwargs):
+    return _CLS(**kwargs)

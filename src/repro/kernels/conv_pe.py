@@ -30,6 +30,7 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.kernels.ref import act_fn
+from repro.kernels._pallas_compat import compiler_params
 
 
 def _kernel(a_ref, b_ref, a_scale_ref, w_scale_ref, bias_ref, o_ref, acc_ref,
@@ -95,7 +96,7 @@ def matmul_int8_fused(a_q: jax.Array, b_q: jax.Array,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), odt),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],         # PsumStack
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a_q, b_q, a_scale.astype(jnp.float32).reshape(m, 1),
@@ -148,7 +149,7 @@ def matmul_f_fused(a: jax.Array, b: jax.Array,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b, bias2d)

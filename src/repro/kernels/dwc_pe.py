@@ -31,9 +31,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
 
 from repro.kernels.ref import act_fn
+from repro.kernels._pallas_compat import compiler_params
 
 
 def _dwc2d_kernel(x_ref, w_ref, bias_ref, wscale_ref, o_ref,
@@ -77,7 +77,10 @@ def dwc2d(x: jax.Array, w: jax.Array, bias: Optional[jax.Array],
     quant = a_scale is not None
     # Fold the (scalar per-tensor) activation scale into the per-channel
     # weight scale so the epilogue is one multiply -- the RACNL requant.
-    wsc = (jnp.asarray(w_scale, jnp.float32).reshape(1, 1, c) * float(a_scale)
+    # a_scale may be a Python float (static programs) or a traced scalar
+    # (dynamic quantization under jit).
+    wsc = (jnp.asarray(w_scale, jnp.float32).reshape(1, 1, c)
+           * jnp.asarray(a_scale, jnp.float32)
            if quant else jnp.zeros((1, 1, c), jnp.float32))
     bias_arr = (bias.astype(jnp.float32).reshape(1, 1, c) if bias is not None
                 else jnp.zeros((1, 1, c), jnp.float32))
@@ -95,7 +98,7 @@ def dwc2d(x: jax.Array, w: jax.Array, bias: Optional[jax.Array],
         ],
         out_specs=pl.BlockSpec((1, ho, wo, bc), lambda i, j: (i, 0, 0, j)),
         out_shape=jax.ShapeDtypeStruct((n, ho, wo, c), odt),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(x, w, bias_arr, wsc)
@@ -135,7 +138,7 @@ def dwc1d_causal(x: jax.Array, w: jax.Array,
         ],
         out_specs=pl.BlockSpec((1, l, bc), lambda i, j: (i, 0, j)),
         out_shape=jax.ShapeDtypeStruct((b, l, c), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(xp, w, bias_arr)

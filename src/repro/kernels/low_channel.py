@@ -24,14 +24,14 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
 
 from repro.kernels.ref import act_fn
+from repro.kernels._pallas_compat import compiler_params
 
 
-def _kernel(x_ref, w_ref, bias_ref, o_ref, *,
+def _kernel(x_ref, w_ref, bias_ref, scale_ref, o_ref, *,
             k: int, stride: int, ho: int, wo: int, act: str,
-            quant: bool, scale: float):
+            quant: bool, out_scale: Optional[float]):
     x = x_ref[0]                        # [Hp, Wp, IC]
     ic = x.shape[-1]
     oc = o_ref.shape[-1]
@@ -48,9 +48,11 @@ def _kernel(x_ref, w_ref, bias_ref, o_ref, *,
                                 preferred_element_type=acc_dtype)
     xf = acc.astype(jnp.float32)
     if quant:
-        xf = xf * scale
+        xf = xf * scale_ref[0]             # [OC] per-channel dequant
     xf = xf + bias_ref[0]
     xf = act_fn(act)(xf)
+    if out_scale is not None:              # fused requant (NL epilogue)
+        xf = jnp.clip(jnp.round(xf / out_scale), -127, 127)
     o_ref[0] = xf.reshape(ho, wo, oc).astype(o_ref.dtype)
 
 
@@ -58,34 +60,42 @@ def low_channel_conv(x: jax.Array, w: jax.Array, bias: Optional[jax.Array],
                      stride: int, act: str = "none",
                      a_scale: Optional[float] = None,
                      w_scale: Optional[float] = None,
+                     out_scale: Optional[float] = None,
                      out_dtype=jnp.float32, *,
                      interpret: bool = False) -> jax.Array:
     """First-layer conv on pre-padded input (VALID).
 
     x: [N, Hp, Wp, IC] (IC small), w: [k, k, IC, OC], bias: [OC].
-    Quantized path uses a single fused scale (per-tensor weight scale --
-    first layers are calibration-friendly, like the paper's PL unit).
+    Quantized path fuses the activation scale with the weight scale
+    (per-tensor scalar or per-output-channel [OC]); a_scale / w_scale may
+    be Python floats or (traced) arrays.  out_scale requants to int8 in
+    the epilogue and must be static.
     """
     n, hp, wp, ic = x.shape
     k, _, _, oc = w.shape
     ho = (hp - k) // stride + 1
     wo = (wp - k) // stride + 1
     quant = a_scale is not None
-    scale = float(a_scale) * float(w_scale) if quant else 1.0
+    scale = (jnp.asarray(a_scale, jnp.float32)
+             * jnp.asarray(w_scale, jnp.float32) if quant
+             else jnp.ones((), jnp.float32))
+    scale_arr = jnp.broadcast_to(scale.reshape(-1), (oc,)).reshape(1, oc)
     bias_arr = (bias.astype(jnp.float32).reshape(1, oc) if bias is not None
                 else jnp.zeros((1, oc), jnp.float32))
+    odt = jnp.int8 if out_scale is not None else out_dtype
     return pl.pallas_call(
         functools.partial(_kernel, k=k, stride=stride, ho=ho, wo=wo, act=act,
-                          quant=quant, scale=scale),
+                          quant=quant, out_scale=out_scale),
         grid=(n,),
         in_specs=[
             pl.BlockSpec((1, hp, wp, ic), lambda i: (i, 0, 0, 0)),
             pl.BlockSpec((k, k, ic, oc), lambda i: (0, 0, 0, 0)),
             pl.BlockSpec((1, oc), lambda i: (0, 0)),
+            pl.BlockSpec((1, oc), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((1, ho, wo, oc), lambda i: (i, 0, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, ho, wo, oc), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, oc), odt),
+        compiler_params=compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
-    )(x, w, bias_arr)
+    )(x, w, bias_arr, scale_arr)

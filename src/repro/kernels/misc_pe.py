@@ -14,9 +14,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
 
 from repro.kernels.ref import act_fn
+from repro.kernels._pallas_compat import compiler_params
 
 
 def _add_kernel(a_ref, b_ref, o_ref, *, sa: float, sb: float, act: str,
@@ -52,7 +52,7 @@ def misc_add(a: jax.Array, b: jax.Array, sa: float = 1.0, sb: float = 1.0,
                   pl.BlockSpec((block, lanes), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((block, lanes), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows_p, lanes), odt),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(af, bf)
@@ -89,7 +89,7 @@ def avgpool2d(x: jax.Array, window: int, stride: int,
         in_specs=[pl.BlockSpec((1, h, w, bc), lambda i, j: (i, 0, 0, j))],
         out_specs=pl.BlockSpec((1, ho, wo, bc), lambda i, j: (i, 0, 0, j)),
         out_shape=jax.ShapeDtypeStruct((n, ho, wo, c), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(x)

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from repro.core import dse
 from repro.core.config import EngineConfig
-from repro.core.quant import QTensor, quantize_act_dynamic
+from repro.core.quant import QTensor, quantize_act_dynamic, quantize_static
 from repro.kernels import conv_pe, dwc_pe, low_channel, misc_pe, ref
 
 
@@ -51,23 +51,35 @@ def pick_blocks(m: int, n: int, k: int, in_bytes: int,
 # Conv PE: quantized linear (the LM projection / 1x1-conv path)
 # ---------------------------------------------------------------------------
 
-def linear_int8(x: jax.Array, w: QTensor, bias: Optional[jax.Array],
+def linear_int8(x, w: QTensor, bias: Optional[jax.Array],
                 act: str, cfg: EngineConfig,
-                out_dtype=jnp.float32) -> jax.Array:
-    """x: float [..., K]; w: QTensor(q=[K, N] int8, scale=[1, N])."""
-    lead = x.shape[:-1]
-    kdim = x.shape[-1]
+                out_dtype=jnp.float32,
+                out_scale: Optional[float] = None) -> jax.Array:
+    """x: float [..., K] (dynamic per-token act quant) OR QTensor with a
+    static pre-calibrated per-tensor scale (the compiled engine-program
+    path); w: QTensor(q=[K, N] int8, scale=[1, N]).
+
+    out_scale: static requant scale -> int8 output via the NL epilogue
+    (activations stay int8 engine-to-engine); None -> float output.
+    """
+    static = isinstance(x, QTensor)
+    xv = x.q if static else x
+    lead = xv.shape[:-1]
+    kdim = xv.shape[-1]
     n = w.q.shape[-1]
     m = 1
     for d in lead:
         m *= d
-    x2 = x.reshape(m, kdim)
-    xq = quantize_act_dynamic(x2, per_token=True)          # a_scale [M, 1]
+    x2 = xv.reshape(m, kdim)
+    if static:
+        xq = QTensor(x2, jnp.full((m, 1), float(x.scale), jnp.float32))
+    else:
+        xq = quantize_act_dynamic(x2, per_token=True)      # a_scale [M, 1]
     w_scale = w.scale.reshape(1, n)
 
     if cfg.baseline:
         out = ref.matmul_int8_unfused(xq.q, w.q, xq.scale, w_scale, bias, act,
-                                      out_dtype=out_dtype)
+                                      out_scale=out_scale, out_dtype=out_dtype)
     elif cfg.backend == "pallas":
         bm, bn, bk = pick_blocks(m, n, kdim, 1, cfg)
         mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(kdim, bk)
@@ -78,11 +90,11 @@ def linear_int8(x: jax.Array, w: QTensor, bias: Optional[jax.Array],
         b = (jnp.pad(bias.astype(jnp.float32), (0, np_ - n))
              if bias is not None else None)
         out = conv_pe.matmul_int8_fused(
-            aq, bq, asc, wsc, b, act, out_dtype=out_dtype,
+            aq, bq, asc, wsc, b, act, out_scale=out_scale, out_dtype=out_dtype,
             bm=bm, bn=bn, bk=bk, interpret=cfg.interpret)[:m, :n]
     else:
         out = ref.matmul_int8_fused(xq.q, w.q, xq.scale, w_scale, bias, act,
-                                    out_dtype=out_dtype)
+                                    out_scale=out_scale, out_dtype=out_dtype)
     return out.reshape(*lead, n)
 
 
@@ -106,13 +118,24 @@ def linear_f(x: jax.Array, w: jax.Array, bias: Optional[jax.Array],
     return ref.act_fn(act)(out).astype(out_dtype)
 
 
-def linear(x: jax.Array, w, bias, act: str, cfg: EngineConfig,
-           out_dtype=None) -> jax.Array:
-    """Dispatch on quant mode and weight container type."""
+def linear(x, w, bias, act: str, cfg: EngineConfig,
+           out_dtype=None, out_scale: Optional[float] = None) -> jax.Array:
+    """Dispatch on quant mode and weight container type.
+
+    x may be a QTensor (pre-quantized int8 activations with a static scale);
+    that path requires w8a8 + QTensor weights.  out_scale (static) requests
+    int8 output via the fused requant epilogue.
+    """
+    if isinstance(w, QTensor) and cfg.quant == "w8a8":
+        return linear_int8(x, w, bias, act, cfg,
+                           out_dtype=out_dtype or jnp.float32,
+                           out_scale=out_scale)
+    if isinstance(x, QTensor) or out_scale is not None:
+        raise ValueError(
+            "static int8 activations / out_scale require quant='w8a8' "
+            "with QTensor weights (got quant=%r, w=%s)"
+            % (cfg.quant, type(w).__name__))
     if isinstance(w, QTensor):
-        if cfg.quant == "w8a8":
-            return linear_int8(x, w, bias, act, cfg,
-                               out_dtype=out_dtype or jnp.float32)
         return linear_w8(x, w, bias, act, cfg,
                          out_dtype=out_dtype or x.dtype)
     return linear_f(x, w, bias, act, cfg, out_dtype=out_dtype)
@@ -122,22 +145,33 @@ def linear(x: jax.Array, w, bias, act: str, cfg: EngineConfig,
 # Conv2D via Conv PE (im2col -> GEMM), the CNN standard-conv path
 # ---------------------------------------------------------------------------
 
-def conv2d_pe(x: jax.Array, w: jax.Array, bias: Optional[jax.Array],
+def conv2d_pe(x, w, bias: Optional[jax.Array],
               stride: int, padding: str, act: str,
-              cfg: EngineConfig, out_dtype=jnp.float32) -> jax.Array:
-    """Standard conv: x [N,H,W,IC] float, w [k,k,IC,OC] float or QTensor.
+              cfg: EngineConfig, out_dtype=jnp.float32,
+              out_scale: Optional[float] = None) -> jax.Array:
+    """Standard conv: x [N,H,W,IC] float or QTensor (static int8 activations
+    with a per-tensor scale); w [k,k,IC,OC] float or QTensor.
 
-    Quant modes quantize activations dynamically per-image; the conv lowers
-    to the Conv PE GEMM with K = k*k*IC (the paper's IC-cascade contraction).
+    Float x under a quant mode quantizes activations dynamically per-image;
+    QTensor x skips that round-trip (the compiled engine-program path).  The
+    conv lowers to the Conv PE GEMM with K = k*k*IC (the paper's IC-cascade
+    contraction); out_scale requants to int8 in the fused NL epilogue.
+    SAME zero-padding is exact for int8 inputs (symmetric quant, zero
+    point 0).
     """
+    static = isinstance(x, QTensor)
+    if static and not isinstance(w, QTensor):
+        x = x.dequant()                       # float weights: float math
+        static = False
+    xv = x.q if static else x
     wq = w.q if isinstance(w, QTensor) else w
     k = wq.shape[0]
     ic, oc = wq.shape[2], wq.shape[3]
     if padding == "SAME":
-        ph = _same_pad(x.shape[1], k, stride)
-        pw = _same_pad(x.shape[2], k, stride)
-        x = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
-    n, hp, wp, _ = x.shape
+        ph = _same_pad(xv.shape[1], k, stride)
+        pw = _same_pad(xv.shape[2], k, stride)
+        xv = jnp.pad(xv, ((0, 0), ph, pw, (0, 0)))
+    n, hp, wp, _ = xv.shape
     ho = (hp - k) // stride + 1
     wo = (wp - k) // stride + 1
     # im2col: [N*HO*WO, k*k*IC]
@@ -145,7 +179,7 @@ def conv2d_pe(x: jax.Array, w: jax.Array, bias: Optional[jax.Array],
     for kh in range(k):
         for kw in range(k):
             xs = jax.lax.slice(
-                x, (0, kh, kw, 0),
+                xv, (0, kh, kw, 0),
                 (n, kh + (ho - 1) * stride + 1, kw + (wo - 1) * stride + 1, ic),
                 (1, stride, stride, 1))
             patches.append(xs)
@@ -153,8 +187,12 @@ def conv2d_pe(x: jax.Array, w: jax.Array, bias: Optional[jax.Array],
     wmat = wq.reshape(k * k * ic, oc)
     if isinstance(w, QTensor):
         wt = QTensor(wmat, w.scale.reshape(1, oc))
-        out = linear(col, wt, bias, act, cfg, out_dtype=out_dtype)
+        col_in = QTensor(col, x.scale) if static else col
+        out = linear(col_in, wt, bias, act, cfg, out_dtype=out_dtype,
+                     out_scale=out_scale)
     else:
+        if out_scale is not None:
+            raise ValueError("out_scale requires QTensor weights")
         out = linear_f(col, wmat, bias, act, cfg, out_dtype=out_dtype)
     return out.reshape(n, ho, wo, oc)
 
@@ -169,45 +207,65 @@ def _same_pad(size: int, k: int, stride: int):
 # DWC PE
 # ---------------------------------------------------------------------------
 
-def dwc2d(x: jax.Array, w, bias: Optional[jax.Array], stride: int,
+def dwc2d(x, w, bias: Optional[jax.Array], stride: int,
           padding: str, act: str, cfg: EngineConfig,
-          out_dtype=jnp.float32) -> jax.Array:
-    """Depthwise conv. x [N,H,W,C] float; w [k,k,C] float or QTensor.
+          out_dtype=jnp.float32,
+          out_scale: Optional[float] = None) -> jax.Array:
+    """Depthwise conv. x [N,H,W,C] float or QTensor (static int8 with a
+    per-tensor scale); w [k,k,C] float or QTensor.  out_scale requants to
+    int8 in the RACNL epilogue.
 
     Without the DWC engine (baseline), this runs as the paper's "low
     utilization" path: dense GEMM with a channel-diagonal weight matrix.
     """
+    static = isinstance(x, QTensor)
     is_q = isinstance(w, QTensor)
+    if static and not is_q:
+        x = x.dequant()               # float weights: float math
+        static = False
     wq = w.q if is_q else w
     k = wq.shape[0]
     c = wq.shape[2]
-    if padding == "SAME":
-        ph = _same_pad(x.shape[1], k, stride)
-        pw = _same_pad(x.shape[2], k, stride)
-        x = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
-
     if not cfg.use_dwc_engine:
         # Baseline: depthwise as dense conv with diagonalized weights
         # (one input channel per group lowered to a full GEMM -- wasteful by
-        # construction, like running DWC on the Conv PE).
+        # construction, like running DWC on the Conv PE).  Static int8 inputs
+        # pay the full dequant/requant round-trip here -- exactly the cost
+        # the DWC engine's fused epilogue avoids.
+        if static:
+            x = x.dequant()
+        if padding == "SAME":
+            ph = _same_pad(x.shape[1], k, stride)
+            pw = _same_pad(x.shape[2], k, stride)
+            x = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
         wf = w.dequant() if is_q else wq
         dense = jnp.zeros((k, k, c, c), jnp.float32)
         idx = jnp.arange(c)
         dense = dense.at[:, :, idx, idx].set(wf.astype(jnp.float32))
-        return conv2d_pe(x, dense, bias, stride, "VALID", act,
-                         cfg, out_dtype=out_dtype)
+        out = conv2d_pe(x, dense, bias, stride, "VALID", act,
+                        cfg, out_dtype=out_dtype)
+        if out_scale is not None:
+            return quantize_static(out, jnp.float32(out_scale))
+        return out
 
-    quant = is_q and cfg.quant == "w8a8"
+    quant = (is_q and cfg.quant == "w8a8") or static
     if quant:
-        xq = quantize_act_dynamic(x, per_token=False)
-        a_scale = xq.scale
-        xin = xq.q
+        if static:
+            xin, a_scale = x.q, float(x.scale)
+        else:
+            xq = quantize_act_dynamic(x, per_token=False)
+            a_scale = xq.scale
+            xin = xq.q
         w_scale = w.scale.reshape(-1)
         w_in = w.q
     else:
         xin = x
         w_in = w.dequant(x.dtype) if is_q else w
         a_scale = w_scale = None
+    if padding == "SAME":
+        ph = _same_pad(xin.shape[1], k, stride)
+        pw = _same_pad(xin.shape[2], k, stride)
+        xin = jnp.pad(xin, ((0, 0), ph, pw, (0, 0)))
 
     cp = _round_up(c, 128)
     bc = min(128, cp)
@@ -221,13 +279,15 @@ def dwc2d(x: jax.Array, w, bias: Optional[jax.Array], stride: int,
 
     if cfg.backend == "pallas":
         out = dwc_pe.dwc2d(xin, w_in, bias, stride, act,
-                           a_scale=(float(a_scale) if quant else None),
-                           w_scale=w_scale, out_dtype=out_dtype,
+                           a_scale=a_scale if quant else None,
+                           w_scale=w_scale, out_scale=out_scale,
+                           out_dtype=out_dtype,
                            bc=bc, interpret=cfg.interpret)
     else:
         out = ref.dwc2d(xin, w_in, bias, stride, act,
                         a_scale=a_scale if quant else None,
-                        w_scale=w_scale, out_dtype=out_dtype)
+                        w_scale=w_scale, out_scale=out_scale,
+                        out_dtype=out_dtype)
     return out[..., :c]
 
 
@@ -251,38 +311,51 @@ def dwc1d_causal(x: jax.Array, w: jax.Array, bias: Optional[jax.Array],
 # Low-Channel Conv Unit
 # ---------------------------------------------------------------------------
 
-def first_layer_conv(x: jax.Array, w, bias: Optional[jax.Array],
+def first_layer_conv(x, w, bias: Optional[jax.Array],
                      stride: int, padding: str, act: str,
-                     cfg: EngineConfig, out_dtype=jnp.float32) -> jax.Array:
+                     cfg: EngineConfig, out_dtype=jnp.float32,
+                     out_scale: Optional[float] = None) -> jax.Array:
     """Stage-0 conv. Dispatches to the low-channel unit when enabled,
-    otherwise to the general Conv PE (the paper's 13.1%-utilization path)."""
+    otherwise to the general Conv PE (the paper's 13.1%-utilization path).
+
+    x may be a QTensor (the compiled program quantizes the input image with
+    the calibrated static scale); out_scale requants the stem output to int8
+    so the whole engine pipeline stays int8 from the first layer on.
+    """
+    static = isinstance(x, QTensor)
     if not cfg.use_low_channel_unit:
         return conv2d_pe(x, w, bias, stride, padding, act, cfg,
-                         out_dtype=out_dtype)
+                         out_dtype=out_dtype, out_scale=out_scale)
     is_q = isinstance(w, QTensor)
+    if static and not is_q:
+        x = x.dequant()               # float weights: float math
+        static = False
     wq = w.q if is_q else w
     k = wq.shape[0]
-    if padding == "SAME":
-        ph = _same_pad(x.shape[1], k, stride)
-        pw = _same_pad(x.shape[2], k, stride)
-        x = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
-    quant = is_q and cfg.quant == "w8a8"
+    quant = (is_q and cfg.quant == "w8a8") or static
     if quant:
-        xq = quantize_act_dynamic(x, per_token=False)
-        xin, a_scale = xq.q, float(xq.scale)
+        if static:
+            xin, a_scale = x.q, float(x.scale)   # compile-time constant
+        else:
+            xq = quantize_act_dynamic(x, per_token=False)
+            xin, a_scale = xq.q, xq.scale        # traced scalar (jit-safe)
         w_in = w.q
-        w_scale = float(jnp.max(w.scale))   # per-tensor for the small unit
+        w_scale = w.scale.reshape(-1)       # per-output-channel [OC]
     else:
-        xin = x
-        w_in = w.dequant(x.dtype) if is_q else w
+        xin = x                     # static was cleared by the fallback above
+        w_in = w.dequant(xin.dtype) if is_q else w
         a_scale = w_scale = None
+    if padding == "SAME":
+        ph = _same_pad(xin.shape[1], k, stride)
+        pw = _same_pad(xin.shape[2], k, stride)
+        xin = jnp.pad(xin, ((0, 0), ph, pw, (0, 0)))
     if cfg.backend == "pallas":
         return low_channel.low_channel_conv(
             xin, w_in, bias, stride, act, a_scale=a_scale, w_scale=w_scale,
-            out_dtype=out_dtype, interpret=cfg.interpret)
+            out_scale=out_scale, out_dtype=out_dtype, interpret=cfg.interpret)
     return ref.low_channel_conv(xin, w_in, bias, stride, act,
                                 a_scale=a_scale, w_scale=w_scale,
-                                out_dtype=out_dtype)
+                                out_scale=out_scale, out_dtype=out_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -291,16 +364,24 @@ def first_layer_conv(x: jax.Array, w, bias: Optional[jax.Array],
 
 def misc_add(a: jax.Array, b: jax.Array, act: str, cfg: EngineConfig,
              sa: float = 1.0, sb: float = 1.0,
-             out_dtype=jnp.float32) -> jax.Array:
+             out_dtype=jnp.float32,
+             out_scale: Optional[float] = None) -> jax.Array:
+    """Residual add.  In the compiled int8 program a/b are int8 and sa/sb are
+    their static edge scales; out_scale requants the sum in the same pass."""
     if not cfg.misc_on_engine:
         # Baseline: separate ops (paper: PL DSP adders).
         x = jax.lax.optimization_barrier(
             a.astype(jnp.float32) * sa + b.astype(jnp.float32) * sb)
-        return ref.act_fn(act)(x).astype(out_dtype)
+        x = ref.act_fn(act)(x)
+        if out_scale is not None:
+            return quantize_static(x, jnp.float32(out_scale))
+        return x.astype(out_dtype)
     if cfg.backend == "pallas":
-        return misc_pe.misc_add(a, b, sa, sb, act, out_dtype=out_dtype,
+        return misc_pe.misc_add(a, b, sa, sb, act, out_scale=out_scale,
+                                out_dtype=out_dtype,
                                 interpret=cfg.interpret)
-    return ref.misc_add(a, b, sa, sb, act, out_dtype=out_dtype)
+    return ref.misc_add(a, b, sa, sb, act, out_scale=out_scale,
+                        out_dtype=out_dtype)
 
 
 def avgpool2d(x: jax.Array, window: int, stride: int, cfg: EngineConfig,

@@ -147,6 +147,7 @@ def low_channel_conv(x: jax.Array, w: jax.Array, bias: Optional[jax.Array],
                      stride: int, act: str = "none",
                      a_scale: Optional[jax.Array] = None,
                      w_scale: Optional[jax.Array] = None,
+                     out_scale: Optional[jax.Array] = None,
                      out_dtype=jnp.float32) -> jax.Array:
     """Standard conv on pre-padded input (VALID), small IC.
 
@@ -174,7 +175,11 @@ def low_channel_conv(x: jax.Array, w: jax.Array, bias: Optional[jax.Array],
         xf = xf * a_scale * w_scale
     if bias is not None:
         xf = xf + bias
-    return act_fn(act)(xf).astype(out_dtype)
+    xf = act_fn(act)(xf)
+    if out_scale is not None:
+        q = jnp.clip(jnp.round(xf / out_scale), -127, 127)
+        return q.astype(jnp.int8)
+    return xf.astype(out_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -203,9 +208,13 @@ def avgpool2d(x: jax.Array, window: int, stride: int,
 
 
 def maxpool2d(x: jax.Array, window: int, stride: int) -> jax.Array:
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        init = -jnp.inf
+    else:  # int8 path: the MISC comparator works on quantized values directly
+        init = jnp.array(jnp.iinfo(x.dtype).min, x.dtype)
     return jax.lax.reduce_window(
-        x, -jnp.inf if jnp.issubdtype(x.dtype, jnp.floating) else jnp.iinfo(x.dtype).min,
-        jax.lax.max, (1, window, window, 1), (1, stride, stride, 1), "VALID")
+        x, init, jax.lax.max,
+        (1, window, window, 1), (1, stride, stride, 1), "VALID")
 
 
 def global_avgpool(x: jax.Array, out_dtype=jnp.float32) -> jax.Array:

@@ -19,18 +19,27 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.models.params import resolve_pspec
 
 
+def make_mesh(shape, axes) -> Mesh:
+    """jax.make_mesh with an AxisType guard: older jax (< 0.5) has neither
+    `jax.sharding.AxisType` nor the `axis_types=` kwarg; newer jax defaults
+    new axes to Auto anyway, so passing it explicitly is only done when the
+    API exists."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh() -> Mesh:
     """1x1 mesh over the single CPU device (smoke tests)."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def chips(mesh: Mesh) -> int:

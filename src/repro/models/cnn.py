@@ -1,6 +1,7 @@
 """CNN zoo -- the paper's own evaluation models, running on the DPUV4E engine.
 
-Every conv lowers through the engine API:
+Every model lowers through the compiler (repro.compiler) to an engine
+op-graph whose nodes dispatch to the engine API:
   * stage-0 stem      -> ops.first_layer_conv (Low-Channel Conv Unit, C5)
   * standard convs    -> ops.conv2d_pe        (Conv PE im2col GEMM, C2/C3)
   * depthwise convs   -> ops.dwc2d            (DWC PE, C4)
@@ -17,13 +18,9 @@ Stage kinds (CNNConfig.stages):
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
-
 import jax
-import jax.numpy as jnp
 
-from repro.core.config import CNNConfig, ConvSpec, EngineConfig
-from repro.kernels import ops, ref
+from repro.core.config import CNNConfig, EngineConfig
 from repro.models.params import ParamSpec
 
 
@@ -102,51 +99,18 @@ def cnn_schema(cfg: CNNConfig) -> dict:
 
 def cnn_forward(params: dict, images: jax.Array, cfg: CNNConfig,
                 eng: EngineConfig) -> jax.Array:
-    """images: [N, H, W, C] float in [-1, 1].  Returns logits [N, classes]."""
-    x = ops.first_layer_conv(images, params["stem_w"], params["stem_b"],
-                             cfg.stem_stride, "SAME", "relu", eng)
-    x = x.astype(jnp.float32)
-    for st, blocks in zip(cfg.stages, params["stages"]):
-        for r, p in enumerate(blocks):
-            stride = st.stride if r == 0 else 1
-            if st.kind == "conv":
-                x = ops.conv2d_pe(x, p["w"], p["b"], stride, "SAME",
-                                  "relu", eng)
-            elif st.kind == "bottleneck":
-                h = ops.conv2d_pe(x, p["w1"], p["b1"], 1, "SAME", "relu", eng)
-                h = ops.conv2d_pe(h, p["w2"], p["b2"], stride, "SAME",
-                                  "relu", eng)
-                h = ops.conv2d_pe(h, p["w3"], p["b3"], 1, "SAME", "none", eng)
-                skip = x
-                if "wskip" in p:
-                    skip = ops.conv2d_pe(x, p["wskip"], p["bskip"], stride,
-                                         "SAME", "none", eng)
-                x = ops.misc_add(h, skip, "relu", eng)
-            elif st.kind == "inverted":
-                h = ops.conv2d_pe(x, p["we"], p["be"], 1, "SAME", "relu6", eng)
-                h = ops.dwc2d(h, p["wd"], p["bd"], stride, "SAME",
-                              "relu6", eng)
-                h = ops.conv2d_pe(h, p["wp"], p["bp"], 1, "SAME", "none", eng)
-                if stride == 1 and h.shape == x.shape:
-                    x = ops.misc_add(h, x, "none", eng)
-                else:
-                    x = h
-            elif st.kind == "dwsep":
-                h = ops.dwc2d(x, p["wd"], p["bd"], stride, "SAME", "relu", eng)
-                x = ops.conv2d_pe(h, p["wp"], p["bp"], 1, "SAME", "relu", eng)
-            elif st.kind == "fire":
-                sq = ops.conv2d_pe(x, p["ws"], p["bs"], stride, "SAME",
-                                   "relu", eng)
-                e1 = ops.conv2d_pe(sq, p["w1"], p["b1"], 1, "SAME",
-                                   "relu", eng)
-                e3 = ops.conv2d_pe(sq, p["w3"], p["b3"], 1, "SAME",
-                                   "relu", eng)
-                x = jnp.concatenate([e1, e3], axis=-1)
-            elif st.kind == "pool":
-                x = ref.maxpool2d(x, st.kernel, st.stride)
-    x = ref.global_avgpool(x)
-    return ops.linear(x, params["head_w"], params["head_b"], "none", eng,
-                      out_dtype=jnp.float32)
+    """images: [N, H, W, C] float in [-1, 1].  Returns logits [N, classes].
+
+    Thin compile-and-execute wrapper: the CNN lowers to the compiler's
+    op-graph IR and runs through the dynamic engine program, op-for-op
+    identical to the historical eager path (training and the existing tests
+    see no difference).  For the paper's calibrated static-int8 dataflow,
+    compile once with repro.compiler.compile_calibrated and execute that
+    program instead.
+    """
+    from repro import compiler
+    program = compiler.compile_cnn(cfg)
+    return compiler.execute(program, params, images, eng)
 
 
 def cnn_flops(cfg: CNNConfig, params: dict) -> float:

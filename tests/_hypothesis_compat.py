@@ -1,0 +1,115 @@
+"""Fallback shim for `hypothesis` in offline environments.
+
+Property-test modules import `given / settings / strategies` from here when
+the real package is absent.  The shim replays each property over a small
+deterministic set of examples drawn from the declared strategies, so the
+tests still exercise several points of the input space (just not hundreds,
+and without shrinking).  When hypothesis IS installed the shim is unused.
+
+Usage (in test modules):
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:                       # offline container
+        from _hypothesis_compat import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import inspect
+
+N_EXAMPLES = 5          # examples replayed per property
+
+
+class _Strategy:
+    """A deterministic sample list standing in for a hypothesis strategy."""
+
+    def __init__(self, samples):
+        self.samples = list(samples)
+
+
+def _spread(lo: int, hi: int, n: int):
+    """n deterministic integers covering [lo, hi] (endpoints included)."""
+    if hi <= lo:
+        return [lo]
+    vals = sorted({lo + round((hi - lo) * i / (n - 1)) for i in range(n)})
+    return vals
+
+
+class strategies:
+    """Mirror of the tiny hypothesis.strategies surface the suite uses."""
+
+    @staticmethod
+    def integers(min_value=0, max_value=100):
+        return _Strategy(_spread(min_value, max_value, N_EXAMPLES))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_):
+        lo, hi = float(min_value), float(max_value)
+        if hi <= lo:
+            return _Strategy([lo])
+        # geometric spread when the range spans decades, else linear
+        if lo > 0 and hi / lo > 100.0:
+            r = (hi / lo) ** (1.0 / (N_EXAMPLES - 1))
+            return _Strategy([lo * r ** i for i in range(N_EXAMPLES)])
+        step = (hi - lo) / (N_EXAMPLES - 1)
+        return _Strategy([lo + step * i for i in range(N_EXAMPLES)])
+
+    @staticmethod
+    def sampled_from(elements):
+        return _Strategy(list(elements))
+
+    @staticmethod
+    def booleans():
+        return _Strategy([False, True])
+
+    @staticmethod
+    def lists(elem, min_size=0, max_size=5, **_):
+        sizes = _spread(min_size, max_size, 3)
+        pool = elem.samples
+        return _Strategy([(pool * (s // len(pool) + 1))[:s] for s in sizes])
+
+
+st = strategies
+
+
+def given(**strategy_kwargs):
+    """Replay the property over a rotated cross-section of the strategies."""
+
+    def deco(fn):
+        names = list(strategy_kwargs)
+        pools = [strategy_kwargs[n].samples for n in names]
+        n_runs = max((len(p) for p in pools), default=1)
+        n_runs = max(n_runs, N_EXAMPLES)
+
+        def wrapper(*args, **kwargs):
+            for i in range(n_runs):
+                # stride-1 rotation with a per-kwarg offset: every pool
+                # element is reached (n_runs >= len(pool)) while the
+                # combinations still vary across kwargs
+                ex = {n: pool[(i + j) % len(pool)]
+                      for j, (n, pool) in enumerate(zip(names, pools))}
+                fn(*args, **kwargs, **ex)
+
+        # Hide the strategy parameters from pytest's fixture resolution
+        # (real hypothesis does the same); remaining params stay fixtures.
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = inspect.Signature(
+            [p for name, p in sig.parameters.items()
+             if name not in strategy_kwargs])
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.hypothesis_compat = True
+        return wrapper
+
+    return deco
+
+
+def settings(*args, **kwargs):
+    """No-op decorator (deadline / max_examples have no meaning here)."""
+    if args and callable(args[0]):
+        return args[0]
+
+    def deco(fn):
+        return fn
+
+    return deco

@@ -3,7 +3,10 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # offline container
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import engine as eng_lib
 from repro.core.config import EngineConfig

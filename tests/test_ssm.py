@@ -3,7 +3,10 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # offline container
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs import ARCHS, reduced
 from repro.core.config import EngineConfig
