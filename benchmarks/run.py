@@ -15,8 +15,9 @@ def main() -> None:
                     help="skip CPU wall-clock measurements")
     args = ap.parse_args()
 
-    from benchmarks import (fig8_dwc, pipeline_int8, roofline, table1_dse,
-                            table2_resources, table3_e2e, table4_mlperf)
+    from benchmarks import (fig8_dwc, pipeline_int8, roofline, serve_cnn,
+                            table1_dse, table2_resources, table3_e2e,
+                            table4_mlperf)
 
     suites = [
         ("table1", lambda: table1_dse.run()),
@@ -25,6 +26,7 @@ def main() -> None:
         ("table4", lambda: table4_mlperf.run()),
         ("fig8", lambda: fig8_dwc.run(measure=not args.fast)),
         ("pipeline", lambda: pipeline_int8.run(measure=not args.fast)),
+        ("serve", lambda: serve_cnn.run(measure=not args.fast)),
         ("roofline", lambda: roofline.run()),
     ]
     print("name,us_per_call,derived")

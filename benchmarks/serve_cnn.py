@@ -1,0 +1,174 @@
+"""CNN serving throughput: program cache + wave batching + overlap credit.
+
+Three evidence lines for the serving layer (serve/cnn_engine.py):
+
+  * MODELED: the per-engine-unit overlap model (perf_model.py) -- in the
+    pipelined steady state throughput is set by the busiest unit (Conv PE
+    vs DWC PE vs MISC), so depthwise-heavy models gain the most from the
+    Conv/DWC concurrency the schedule exposes (scheduled-vs-sequential).
+  * MEASURED cache: wall-clock of a repeated-model request trace served
+    cached vs uncached (capacity 0 -> every request recompiles +
+    recalibrates + retraces), plus the cache hit-rate of the trace.
+  * MEASURED waves: per-request latency of wave-batched vs one-by-one
+    execution on the same cached program.
+
+    PYTHONPATH=src python -m benchmarks.serve_cnn [--summary]
+
+--summary prints the one-line program-cache hit-rate (scripts/check.sh
+appends it to the gate output).
+"""
+import time
+
+import numpy as np
+
+from benchmarks import perf_model as pm
+from repro.configs.cnn_zoo import CNN_ZOO
+
+TRACE_MODELS = ("squeezenet", "mobilenetv2", "resnet50")
+TRACE_LEN = 40                              # requests over the 3 models
+SERVE_HW = 32                               # reduced input for CPU wall-clock
+WAVE = 4
+
+
+def _reduced(name):
+    import dataclasses
+    return dataclasses.replace(CNN_ZOO[name], input_hw=SERVE_HW)
+
+
+def _build_fleet(seed=0):
+    """(cfg, float params, calibration batch) per trace model."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import cnn
+    from repro.models.params import init_params
+
+    fleet = []
+    rng = np.random.default_rng(seed)
+    for i, name in enumerate(TRACE_MODELS):
+        cfg = _reduced(name)
+        params = init_params(cnn.cnn_schema(cfg), jax.random.PRNGKey(i))
+        calib = jnp.asarray(rng.normal(
+            size=(2, cfg.input_hw, cfg.input_hw, cfg.input_ch)
+        ).astype(np.float32) * 0.5)
+        fleet.append((cfg, params, calib))
+    return fleet
+
+
+def _trace(seed=0):
+    """A repeated-model request trace: each request names a model and
+    carries one image.  Model repetition mirrors production traffic (a
+    small working set revisited), which is what the cache monetizes."""
+    rng = np.random.default_rng(seed)
+    names = [TRACE_MODELS[int(i)] for i in
+             rng.integers(0, len(TRACE_MODELS), TRACE_LEN)]
+    sizes = {n: _reduced(n).input_hw for n in TRACE_MODELS}
+    return [(n, rng.normal(size=(sizes[n], sizes[n], 3)).astype(np.float32))
+            for n in names]
+
+
+def _serve_trace(engine, fleet, trace):
+    for cfg, params, calib in fleet:
+        engine.register(cfg, params, calib_batches=[calib])
+    t0 = time.perf_counter()
+    for name, img in trace:
+        engine.submit(name, img)
+        engine.flush()                  # request-at-a-time arrival
+    return time.perf_counter() - t0
+
+
+def serve_stats(wave_batch: bool = True, fleet=None, trace=None):
+    """Serve the standard trace through a cached engine; return its stats
+    (the hit-rate line check.sh prints comes from here)."""
+    from repro.core import engine as eng_lib
+    from repro.serve.cnn_engine import CNNServeEngine
+
+    fleet = _build_fleet() if fleet is None else fleet
+    trace = _trace() if trace is None else trace
+    engine = CNNServeEngine(eng_lib.paper_engine(), wave_size=WAVE,
+                            cache_capacity=len(TRACE_MODELS) + 1)
+    wall = _serve_trace(engine, fleet, trace)
+    stats = engine.stats()
+    stats["wall_s"] = wall
+    if wave_batch:
+        # the same trace arriving all at once: full waves per model
+        engine2 = CNNServeEngine(eng_lib.paper_engine(), wave_size=WAVE,
+                                 cache_capacity=len(TRACE_MODELS) + 1,
+                                 cache=engine.cache)   # warm shared cache
+        for cfg, params, calib in fleet:
+            engine2.register(cfg, params, calib_batches=[calib])
+        for name, img in trace:
+            engine2.submit(name, img)
+        t0 = time.perf_counter()
+        engine2.flush()
+        stats["wall_batched_s"] = time.perf_counter() - t0
+        stats["batched_occupancy"] = engine2.wave_stats.occupancy
+    return stats
+
+
+def _measure_uncached(fleet, trace):
+    """capacity=0: every request misses, recompiles, and retraces."""
+    from repro.core import engine as eng_lib
+    from repro.serve.cnn_engine import CNNServeEngine
+
+    engine = CNNServeEngine(eng_lib.paper_engine(), wave_size=WAVE,
+                            cache_capacity=0)
+    return _serve_trace(engine, fleet, trace), engine.stats()
+
+
+def run(measure: bool = True):
+    rows = []
+    for name, cfg in CNN_ZOO.items():
+        credit = pm.overlap_credit(cfg, pm.OURS)
+        fps_seq = pm.modeled_fps(cfg, pm.OURS)
+        fps_pipe = pm.modeled_fps_pipelined(cfg, pm.OURS)
+        rows.append((
+            f"serve/model/{name}", 0.0,
+            f"scheduled_fps={fps_pipe:.0f},sequential_fps={fps_seq:.0f},"
+            f"overlap_credit={credit:.2f}"))
+    if measure:
+        fleet = _build_fleet()
+        trace = _trace()
+        stats = serve_stats(fleet=fleet, trace=trace)
+        t_uncached, _ = _measure_uncached(fleet, trace[:6])
+        t_uncached_per = t_uncached / 6
+        t_cached_per = stats["wall_s"] / len(trace)
+        rows.append((
+            f"serve/trace/cached", t_cached_per * 1e6,
+            f"hit_rate={stats['cache_hit_rate']:.3f},"
+            f"requests={stats['requests']},"
+            f"compiles={stats['cache_misses']},"
+            f"per_req={t_cached_per * 1e3:.1f}ms,"
+            f"uncached_per_req={t_uncached_per * 1e3:.1f}ms,"
+            f"cache_speedup={t_uncached_per / t_cached_per:.1f}x"))
+        rows.append((
+            f"serve/trace/waves", stats["wall_batched_s"] * 1e6,
+            f"batched_wall={stats['wall_batched_s'] * 1e3:.1f}ms,"
+            f"one_by_one_wall={stats['wall_s'] * 1e3:.1f}ms,"
+            f"occupancy={stats['batched_occupancy']:.2f},wave={WAVE}"))
+    return rows
+
+
+def summary_line() -> str:
+    stats = serve_stats(wave_batch=False)
+    return (f"program-cache hit-rate: {100 * stats['cache_hit_rate']:.1f}% "
+            f"({stats['cache_hits']}/{stats['cache_hits'] + stats['cache_misses']} hits, "
+            f"{stats['cache_misses']} compiles over {stats['requests']} "
+            f"requests, {len(TRACE_MODELS)} models)")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--summary", action="store_true",
+                    help="one-line program-cache hit-rate only")
+    ap.add_argument("--fast", action="store_true",
+                    help="model-only rows (skip wall-clock)")
+    args = ap.parse_args()
+    if args.summary:
+        print(summary_line())
+    else:
+        print("name,us_per_call,derived")
+        for row_name, us, derived in run(measure=not args.fast):
+            print(f"{row_name},{us:.1f},{derived}")

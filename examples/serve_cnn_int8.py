@@ -1,0 +1,61 @@
+"""Serve multiple CNNs from one engine: compile -> cache -> batch -> schedule.
+
+Registers two zoo models on a CNNServeEngine, then serves a repeated-model
+request trace: each (model, calibration, engine) triple compiles to a
+static-int8 program exactly once (program-cache hits after that), requests
+batch into fixed-size waves, and the programs dispatch through the
+concurrent-PE level schedule.
+
+    PYTHONPATH=src python examples/serve_cnn_int8.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import compiler
+from repro.configs.cnn_zoo import MOBILENET_V2, SQUEEZENET
+from repro.core import engine as eng_lib
+from repro.models import cnn
+from repro.models.params import init_params
+from repro.serve.cnn_engine import CNNServeEngine
+
+
+def main():
+    rng = np.random.default_rng(0)
+    engine = CNNServeEngine(eng_lib.paper_engine(), wave_size=4,
+                            cache_capacity=4)
+
+    # 1. register models: float params + representative calibration batches
+    for i, base in enumerate((SQUEEZENET, MOBILENET_V2)):
+        cfg = dataclasses.replace(base, input_hw=32)
+        params = init_params(cnn.cnn_schema(cfg), jax.random.PRNGKey(i))
+        calib = jnp.asarray(rng.normal(
+            size=(4, cfg.input_hw, cfg.input_hw, 3)).astype(np.float32) * 0.5)
+        engine.register(cfg, params, calib_batches=[calib])
+
+    # 2. a request trace that revisits the models: the first request per
+    #    model compiles + calibrates, every later one is a program-cache hit
+    trace = [engine.models()[int(i)] for i in
+             rng.integers(0, 2, size=12)]
+    served = 0
+    for start in range(0, len(trace), 4):        # requests arrive in bursts
+        for name in trace[start:start + 4]:
+            img = rng.normal(size=(32, 32, 3)).astype(np.float32)
+            engine.submit(name, img)
+        served += len(engine.flush())            # waves per model
+    print(f"served {served} requests")
+
+    # 3. the evidence: compiles happened once per model, waves were batched,
+    #    and the programs carry the concurrent-PE schedule
+    for k, v in engine.stats().items():
+        print(f"  {k}: {v}")
+    prog = engine.program_for("squeezenet")      # fire e1/e3 convs co-level
+    print(f"  schedule: {prog.schedule.stats}")
+    print(f"  f32 round-trips (static): {prog.f32_roundtrips()} "
+          f"(dynamic {compiler.compile_cnn(prog.cfg).f32_roundtrips()})")
+
+
+if __name__ == "__main__":
+    main()

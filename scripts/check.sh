@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # Tier-1 gate: collection must be clean (catches import-time regressions
-# like a hard dependency on an uninstalled package), then the full suite.
+# like a hard dependency on an uninstalled package), then the full suite,
+# then the serving benchmark's one-line program-cache summary.
 #
 #   scripts/check.sh [extra pytest args...]
 set -euo pipefail
@@ -9,7 +10,12 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== pytest collection =="
+# covers every suite, including the serving/schedule parity harness
+# (tests/test_cnn_serving.py, tests/test_schedule.py, tests/test_compiler.py)
 python -m pytest -q --collect-only >/dev/null
 
 echo "== tier-1 suite =="
 python -m pytest -x -q "$@"
+
+echo "== serving cache =="
+python -m benchmarks.serve_cnn --summary

@@ -5,33 +5,43 @@ Pipeline:
     graph.build_graph(cfg)                  # typed op-graph IR
     calibrate.calibrate(g, params, batches) # per-edge activation scales
     passes.fold_requant(g, scales)          # static int8 plan (+ fusion)
+    schedule.level_schedule(g)              # concurrent-PE dispatch waves
     executor.execute(program, ...)          # run on ref / pallas / baseline
 
 `compile_cnn(cfg)` yields the dynamic (eager-equivalent) program used by
 models.cnn.cnn_forward; `compile_calibrated(...)` yields the static int8
-program where activations stay int8 engine-to-engine.
+program where activations stay int8 engine-to-engine.  Both carry the
+level schedule by default (`scheduled=False` opts out, for parity tests);
+compiled dynamic programs are memoized in executor.program_cache(), and the
+serving layer (repro.serve.cnn_engine) keys full calibrated programs by
+(CNNConfig, EngineConfig, calibration-id) in its own ProgramCache.
 """
 from repro.compiler.calibrate import calibrate
-from repro.compiler.executor import Program, compile_cnn, execute
+from repro.compiler.executor import (Program, compile_cnn, execute,
+                                     program_cache)
 from repro.compiler.graph import (AddOp, ConcatOp, ConvOp, DwcOp, Graph,
                                   InputOp, LinearOp, PoolOp, build_graph,
                                   get_param)
 from repro.compiler.passes import (QuantPlan, dynamic_roundtrip_count,
                                    f32_roundtrip_edges, fold_requant,
                                    fusion_stats, residual_chains)
+from repro.compiler.schedule import (Schedule, engine_unit, level_schedule,
+                                     schedule_stats, validate_schedule)
 
 
-def compile_calibrated(cfg, params, batches, eng=None) -> Program:
+def compile_calibrated(cfg, params, batches, eng=None,
+                       scheduled: bool = True) -> Program:
     """Float params + representative batches -> static int8 engine program."""
     g = build_graph(cfg)
     scales = calibrate(g, params, batches, cfg, eng=eng)
-    return compile_cnn(cfg, scales=scales)
+    return compile_cnn(cfg, scales=scales, scheduled=scheduled)
 
 
 __all__ = [
     "AddOp", "ConcatOp", "ConvOp", "DwcOp", "Graph", "InputOp", "LinearOp",
-    "PoolOp", "Program", "QuantPlan", "build_graph", "calibrate",
+    "PoolOp", "Program", "QuantPlan", "Schedule", "build_graph", "calibrate",
     "compile_calibrated", "compile_cnn", "dynamic_roundtrip_count",
-    "execute", "f32_roundtrip_edges", "fold_requant", "fusion_stats",
-    "get_param", "residual_chains",
+    "engine_unit", "execute", "f32_roundtrip_edges", "fold_requant",
+    "fusion_stats", "get_param", "level_schedule", "program_cache",
+    "residual_chains", "schedule_stats", "validate_schedule",
 ]

@@ -13,14 +13,27 @@ Two execution modes, selected by whether the program carries a QuantPlan:
     consumes int8 and emits int8 via its fused requant epilogue, and the
     only f32 tensor materialized is the logits.
 
+Either mode consumes the program's Schedule (compiler/schedule.py) when one
+is attached: ops are dispatched level-by-level, and every op of a level is
+evaluated against the previous levels' values only -- concurrent-PE
+semantics, where a same-level data dependence would fail loudly instead of
+silently serializing.  A program without a schedule falls back to the raw
+topological node order (bit-identical results either way; the parity suite
+pins that).
+
 Backend selection (ref / pallas / XVDPU-analog baseline) stays inside
 kernels/ops.py: the same compiled program runs on any EngineConfig.
+
+Compiled dynamic programs are memoized in a bounded ProgramCache
+(core/program_cache.py) rather than a raw functools.lru_cache: the same
+store type the serving layer keys calibrated programs with, LRU-bounded
+instead of unbounded, and its hit/miss counters feed the serving
+benchmarks.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Iterable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,17 +43,21 @@ from repro.compiler.graph import (AddOp, ConcatOp, ConvOp, DwcOp, Graph,
                                   InputOp, LinearOp, OpNode, PoolOp,
                                   build_graph, get_param)
 from repro.compiler.passes import QuantPlan, fold_requant
+from repro.compiler.schedule import Schedule, level_schedule
 from repro.core.config import CNNConfig, EngineConfig
 from repro.core.quant import QTensor, quantize_static
 from repro.kernels import ops, ref
+from repro.core.program_cache import ProgramCache, ProgramKey
 
 
 @dataclass(frozen=True)
 class Program:
-    """A compiled engine program: op graph + optional static-int8 plan."""
+    """A compiled engine program: op graph + optional static-int8 plan and
+    concurrent-dispatch schedule."""
     graph: Graph
     cfg: CNNConfig
     plan: Optional[QuantPlan] = None
+    schedule: Optional[Schedule] = None
 
     @property
     def static(self) -> bool:
@@ -53,24 +70,44 @@ class Program:
         return len(passes_lib.f32_roundtrip_edges(self.graph, self.plan))
 
 
-@functools.lru_cache(maxsize=None)
-def _dynamic_program(cfg: CNNConfig) -> Program:
-    return Program(build_graph(cfg), cfg, None)
+# The process-wide store for compiled dynamic programs (the eager
+# cnn_forward path compiles each config once).  Bounded: a long-running
+# trainer or server sweeping many configs no longer grows it without limit.
+_DYNAMIC_CACHE_CAPACITY = 64
+_dynamic_cache = ProgramCache(capacity=_DYNAMIC_CACHE_CAPACITY)
+
+
+def program_cache() -> ProgramCache:
+    """The executor's dynamic-program store (shared with the serving layer's
+    introspection; serving keeps its own cache for calibrated programs)."""
+    return _dynamic_cache
 
 
 def compile_cnn(cfg: CNNConfig,
-                scales: Optional[Dict[int, float]] = None) -> Program:
+                scales: Optional[Dict[int, float]] = None,
+                scheduled: bool = True) -> Program:
     """Lower a CNNConfig to an engine program.
 
     Without `scales` the program executes dynamically (eager-equivalent);
-    that program is cached per config (CNNConfig is frozen/hashable), so
-    the eager cnn_forward wrapper builds each graph once.  With calibrated
-    per-edge scales the requant-folding pass produces the static int8 plan.
+    that program is cached per config (CNNConfig is frozen/hashable) in the
+    bounded program_cache(), so the eager cnn_forward wrapper builds each
+    graph once.  With calibrated per-edge scales the requant-folding pass
+    produces the static int8 plan.  `scheduled=False` omits the concurrency
+    schedule (sequential raw-order dispatch; the parity tests' baseline).
     """
     if scales is None:
-        return _dynamic_program(cfg)
+        key = ProgramKey(cfg, None, None,
+                         "scheduled" if scheduled else "sequential")
+        return _dynamic_cache.get_or_compile(
+            key, lambda: _build_program(cfg, None, scheduled))
+    return _build_program(cfg, scales, scheduled)
+
+
+def _build_program(cfg: CNNConfig, scales, scheduled: bool) -> Program:
     g = build_graph(cfg)
-    return Program(g, cfg, fold_requant(g, scales))
+    plan = fold_requant(g, scales) if scales is not None else None
+    sched = level_schedule(g) if scheduled else None
+    return Program(g, cfg, plan, sched)
 
 
 def execute(program: Program, params, images: jax.Array,
@@ -84,7 +121,7 @@ def execute(program: Program, params, images: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# Dynamic mode (eager-equivalent; also the calibration vehicle)
+# Scheduled dispatch (shared by both modes)
 # ---------------------------------------------------------------------------
 
 def _refcounts(g: Graph) -> Dict[int, int]:
@@ -105,50 +142,78 @@ def _release(vals: Dict, counts: Dict[int, int], n: OpNode, g: Graph) -> None:
             del vals[i]
 
 
-def _execute_dynamic(program: Program, params, images, eng: EngineConfig,
-                     observer=None) -> jax.Array:
+def _dispatch_waves(program: Program) -> Iterable[Tuple[OpNode, ...]]:
+    """The execution order: schedule levels when present, else one op per
+    wave in raw topological order."""
+    g = program.graph
+    if program.schedule is None:
+        for n in g.nodes:
+            yield (n,)
+    else:
+        for level in program.schedule.levels:
+            yield tuple(g.nodes[i] for i in level)
+
+
+def _run_scheduled(program: Program, eval_node, observer=None):
+    """Evaluate the program wave-by-wave.  Each wave's ops read only values
+    produced by earlier waves (`vals` is merged after the whole wave), so a
+    schedule bug that co-levels dependent ops raises KeyError instead of
+    silently reading a half-updated environment."""
     g = program.graph
     counts = _refcounts(g)
-    vals: Dict[int, jax.Array] = {}
-    for n in g.nodes:
+    vals: Dict[int, object] = {}
+    for wave in _dispatch_waves(program):
+        produced = [(n, eval_node(n, vals)) for n in wave]
+        for n, v in produced:
+            vals[n.id] = v
+        for n, v in produced:
+            if observer is not None:
+                observer(n, v)
+            _release(vals, counts, n, g)
+    return vals[g.output]
+
+
+# ---------------------------------------------------------------------------
+# Dynamic mode (eager-equivalent; also the calibration vehicle)
+# ---------------------------------------------------------------------------
+
+def _execute_dynamic(program: Program, params, images, eng: EngineConfig,
+                     observer=None) -> jax.Array:
+
+    def eval_node(n: OpNode, vals: Dict[int, jax.Array]) -> jax.Array:
         if isinstance(n, InputOp):
-            v = images
-        elif isinstance(n, ConvOp):
+            return images
+        if isinstance(n, ConvOp):
             w, b = get_param(params, n.w), get_param(params, n.b)
             if n.first_layer:
                 v = ops.first_layer_conv(vals[n.inputs[0]], w, b, n.stride,
                                          n.padding, n.act, eng)
-                v = v.astype(jnp.float32)
-            else:
-                v = ops.conv2d_pe(vals[n.inputs[0]], w, b, n.stride,
-                                  n.padding, n.act, eng)
-        elif isinstance(n, DwcOp):
+                return v.astype(jnp.float32)
+            return ops.conv2d_pe(vals[n.inputs[0]], w, b, n.stride,
+                                 n.padding, n.act, eng)
+        if isinstance(n, DwcOp):
             w, b = get_param(params, n.w), get_param(params, n.b)
-            v = ops.dwc2d(vals[n.inputs[0]], w, b, n.stride, n.padding,
-                          n.act, eng)
-        elif isinstance(n, AddOp):
-            v = ops.misc_add(vals[n.inputs[0]], vals[n.inputs[1]], n.act, eng)
-        elif isinstance(n, PoolOp):
+            return ops.dwc2d(vals[n.inputs[0]], w, b, n.stride, n.padding,
+                             n.act, eng)
+        if isinstance(n, AddOp):
+            return ops.misc_add(vals[n.inputs[0]], vals[n.inputs[1]],
+                                n.act, eng)
+        if isinstance(n, PoolOp):
             x = vals[n.inputs[0]]
             if n.pool == "global":
-                v = ref.global_avgpool(x)
-            elif n.pool == "avg":
-                v = ops.avgpool2d(x, n.kernel, n.stride, eng)
-            else:
-                v = ref.maxpool2d(x, n.kernel, n.stride)
-        elif isinstance(n, ConcatOp):
-            v = jnp.concatenate([vals[i] for i in n.inputs], axis=-1)
-        elif isinstance(n, LinearOp):
+                return ref.global_avgpool(x)
+            if n.pool == "avg":
+                return ops.avgpool2d(x, n.kernel, n.stride, eng)
+            return ref.maxpool2d(x, n.kernel, n.stride)
+        if isinstance(n, ConcatOp):
+            return jnp.concatenate([vals[i] for i in n.inputs], axis=-1)
+        if isinstance(n, LinearOp):
             w, b = get_param(params, n.w), get_param(params, n.b)
-            v = ops.linear(vals[n.inputs[0]], w, b, n.act, eng,
-                           out_dtype=jnp.float32)
-        else:
-            raise TypeError(f"unknown op {type(n).__name__}")
-        vals[n.id] = v
-        if observer is not None:
-            observer(n, v)
-        _release(vals, counts, n, g)
-    return vals[g.output]
+            return ops.linear(vals[n.inputs[0]], w, b, n.act, eng,
+                              out_dtype=jnp.float32)
+        raise TypeError(f"unknown op {type(n).__name__}")
+
+    return _run_scheduled(program, eval_node, observer)
 
 
 # ---------------------------------------------------------------------------
@@ -168,57 +233,54 @@ def _execute_static(program: Program, params, images,
                     eng: EngineConfig) -> jax.Array:
     g, plan = program.graph, program.plan
     scale_of = plan.out_scale
-    counts = _refcounts(g)
-    vals: Dict[int, QTensor] = {}
 
     def out_scale_for(n: OpNode):
         return scale_of[n.id] if plan.emit_int8[n.id] else None
 
-    for n in g.nodes:
+    def eval_node(n: OpNode, vals: Dict[int, QTensor]):
         os = out_scale_for(n)
         if isinstance(n, InputOp):
             # One static quantization at the boundary; int8 from here on.
-            v = QTensor(quantize_static(images, jnp.float32(os)), os)
-        elif isinstance(n, ConvOp):
+            return QTensor(quantize_static(images, jnp.float32(os)), os)
+        if isinstance(n, ConvOp):
             w = _require_qtensor(get_param(params, n.w), n)
             b = get_param(params, n.b)
             fn = ops.first_layer_conv if n.first_layer else ops.conv2d_pe
             r = fn(vals[n.inputs[0]], w, b, n.stride, n.padding, n.act, eng,
                    out_scale=os)
-            v = QTensor(r, os)
-        elif isinstance(n, DwcOp):
+            return QTensor(r, os)
+        if isinstance(n, DwcOp):
             w = _require_qtensor(get_param(params, n.w), n)
             b = get_param(params, n.b)
             r = ops.dwc2d(vals[n.inputs[0]], w, b, n.stride, n.padding,
                           n.act, eng, out_scale=os)
-            v = QTensor(r, os)
-        elif isinstance(n, AddOp):
+            return QTensor(r, os)
+        if isinstance(n, AddOp):
             a, bq = vals[n.inputs[0]], vals[n.inputs[1]]
             r = ops.misc_add(a.q, bq.q, n.act, eng,
                              sa=float(a.scale), sb=float(bq.scale),
                              out_scale=os)
-            v = QTensor(r, os)
-        elif isinstance(n, PoolOp):
+            return QTensor(r, os)
+        if isinstance(n, PoolOp):
             x = vals[n.inputs[0]]
             if n.pool == "max":
                 # Order-preserving on int8: values and scale pass through.
-                v = QTensor(ref.maxpool2d(x.q, n.kernel, n.stride), os)
-            elif n.pool == "global":
+                return QTensor(ref.maxpool2d(x.q, n.kernel, n.stride), os)
+            if n.pool == "global":
                 # Sum in int32 (like every engine accumulator), then one
                 # fused scale+requant epilogue -- no f32 fmap materialized.
                 acc = jnp.sum(x.q.astype(jnp.int32), axis=(1, 2))
                 px = x.q.shape[1] * x.q.shape[2]
                 r = acc.astype(jnp.float32) * (float(x.scale) / px)
-                v = (QTensor(quantize_static(r, jnp.float32(os)), os)
-                     if os is not None else r)
-            else:
-                acc = jax.lax.reduce_window(
-                    x.q.astype(jnp.int32), 0, jax.lax.add,
-                    (1, n.kernel, n.kernel, 1), (1, n.stride, n.stride, 1),
-                    "VALID")
-                r = acc.astype(jnp.float32) * (float(x.scale) / n.kernel ** 2)
-                v = QTensor(quantize_static(r, jnp.float32(os)), os)
-        elif isinstance(n, ConcatOp):
+                return (QTensor(quantize_static(r, jnp.float32(os)), os)
+                        if os is not None else r)
+            acc = jax.lax.reduce_window(
+                x.q.astype(jnp.int32), 0, jax.lax.add,
+                (1, n.kernel, n.kernel, 1), (1, n.stride, n.stride, 1),
+                "VALID")
+            r = acc.astype(jnp.float32) * (float(x.scale) / n.kernel ** 2)
+            return QTensor(quantize_static(r, jnp.float32(os)), os)
+        if isinstance(n, ConcatOp):
             parts = []
             for i in n.inputs:
                 xi = vals[i]
@@ -226,20 +288,17 @@ def _execute_static(program: Program, params, images,
                     parts.append(xi.q)
                 else:                         # MISC-side int8->int8 rescale
                     parts.append(_rescale_int8(xi.q, float(xi.scale), os))
-            v = QTensor(jnp.concatenate(parts, axis=-1), os)
-        elif isinstance(n, LinearOp):
+            return QTensor(jnp.concatenate(parts, axis=-1), os)
+        if isinstance(n, LinearOp):
             w = _require_qtensor(get_param(params, n.w), n)
             b = get_param(params, n.b)
             x = vals[n.inputs[0]]
             r = ops.linear(x, w, b, n.act, eng, out_dtype=jnp.float32,
                            out_scale=os)
-            v = QTensor(r, os) if os is not None else r
-        else:
-            raise TypeError(f"unknown op {type(n).__name__}")
-        vals[n.id] = v
-        _release(vals, counts, n, g)
+            return QTensor(r, os) if os is not None else r
+        raise TypeError(f"unknown op {type(n).__name__}")
 
-    out = vals[g.output]
+    out = _run_scheduled(program, eval_node)
     return out.dequant() if isinstance(out, QTensor) else out
 
 

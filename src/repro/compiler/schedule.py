@@ -1,0 +1,134 @@
+"""Graph-level scheduler pass: topological leveling for concurrent PEs.
+
+The paper's fabric runs its engines concurrently: the Low-Channel Conv Unit
+proceeds while the Conv PEs work (Section V-B), the DWC PE is a separate
+datapath from the Conv PE, and MISC ops execute on their own core.  The op
+graph exposes that parallelism structurally -- e.g. the two expand convs of
+a fire module, the skip conv of a bottleneck next to its main branch, or a
+DWC branch next to a Conv branch feeding one concat -- but the executor
+historically walked `graph.nodes` strictly sequentially.
+
+This pass levels the graph ASAP-style: level(n) = 1 + max(level(inputs)).
+Two ops in the same level can never depend on each other (any dependence
+forces a strictly larger level), so a level is a dispatch wave the engines
+may run concurrently.  The executor consumes the schedule level-by-level,
+evaluating every op of a level against the *previous* levels' values only --
+a same-level data dependence would fail loudly -- and the perf model credits
+the overlap between engine units the same way it already credits the
+Low-Channel unit's concurrency.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, Tuple
+
+from repro.compiler.graph import (AddOp, ConcatOp, ConvOp, DwcOp, Graph,
+                                  InputOp, LinearOp, OpNode, PoolOp)
+
+# The engine units of the fabric.  Ops mapped to different units in the same
+# level model truly concurrent hardware (distinct datapaths); two same-unit
+# ops in one level still time-share that unit.
+CONV_PE = "conv_pe"
+DWC_PE = "dwc_pe"
+MISC = "misc"
+LOW_CHANNEL = "low_channel"
+MEM = "mem"
+
+_COMPUTE_UNITS = (CONV_PE, DWC_PE, MISC, LOW_CHANNEL)
+
+
+def engine_unit(node: OpNode) -> str:
+    """Which engine executes a node (graph.py's kind -> engine mapping)."""
+    if isinstance(node, ConvOp):
+        return LOW_CHANNEL if node.first_layer else CONV_PE
+    if isinstance(node, LinearOp):
+        return CONV_PE                     # classifier-head GEMM
+    if isinstance(node, DwcOp):
+        return DWC_PE
+    if isinstance(node, (AddOp, PoolOp)):
+        return MISC
+    if isinstance(node, (InputOp, ConcatOp)):
+        return MEM                         # load / bank interleave
+    raise TypeError(f"unknown op {type(node).__name__}")
+
+
+@dataclass(frozen=True)
+class Schedule:
+    """A topological leveling of one graph.
+
+    levels[k] holds the ids of the ops dispatched in wave k, in ascending id
+    order; every input of a level-k op lives in a level < k.
+    """
+    levels: Tuple[Tuple[int, ...], ...]
+    stats: Dict[str, int] = field(default_factory=dict)
+
+    def order(self) -> Iterable[int]:
+        for level in self.levels:
+            yield from level
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.levels)
+
+
+def level_schedule(graph: Graph) -> Schedule:
+    """ASAP-level the graph into concurrent dispatch waves."""
+    level: Dict[int, int] = {}
+    for n in graph.nodes:
+        level[n.id] = (1 + max(level[i] for i in n.inputs)) if n.inputs else 0
+    n_levels = 1 + max(level.values())
+    levels = [[] for _ in range(n_levels)]
+    for n in graph.nodes:                  # nodes are id-ordered already
+        levels[level[n.id]].append(n.id)
+    lvls = tuple(tuple(lv) for lv in levels)
+    return Schedule(lvls, stats=_levels_stats(graph, lvls))
+
+
+def schedule_stats(graph: Graph, sched: Schedule) -> Dict[str, int]:
+    """Concurrency evidence: how much overlap the leveling exposes."""
+    return _levels_stats(graph, sched.levels)
+
+
+def _levels_stats(graph: Graph, levels) -> Dict[str, int]:
+    wide = cross = conv_dwc = 0
+    for lv in levels:
+        units = {engine_unit(graph.nodes[i]) for i in lv}
+        compute = units & set(_COMPUTE_UNITS)
+        if len(lv) > 1:
+            wide += 1
+        if len(compute) > 1:
+            cross += 1
+        if CONV_PE in units and DWC_PE in units:
+            conv_dwc += 1
+    return {
+        "levels": len(levels),
+        "ops": len(graph.nodes),
+        "max_width": max(len(lv) for lv in levels),
+        "wide_levels": wide,
+        "cross_engine_levels": cross,
+        "conv_dwc_levels": conv_dwc,
+    }
+
+
+def validate_schedule(graph: Graph, sched: Schedule) -> None:
+    """Raise if the schedule is not a valid topological leveling that covers
+    every node exactly once."""
+    seen: Dict[int, int] = {}
+    for k, lv in enumerate(sched.levels):
+        for i in lv:
+            if i in seen:
+                raise ValueError(f"node {i} scheduled twice "
+                                 f"(levels {seen[i]} and {k})")
+            seen[i] = k
+    ids = {n.id for n in graph.nodes}
+    if set(seen) != ids:
+        missing = sorted(ids - set(seen))
+        extra = sorted(set(seen) - ids)
+        raise ValueError(f"schedule coverage mismatch: missing={missing} "
+                         f"extra={extra}")
+    for n in graph.nodes:
+        for i in n.inputs:
+            if seen[i] >= seen[n.id]:
+                raise ValueError(
+                    f"edge {i}->{n.id} violates leveling: producer in level "
+                    f"{seen[i]}, consumer in level {seen[n.id]}")

@@ -104,12 +104,17 @@ def cnn_forward(params: dict, images: jax.Array, cfg: CNNConfig,
     Thin compile-and-execute wrapper: the CNN lowers to the compiler's
     op-graph IR and runs through the dynamic engine program, op-for-op
     identical to the historical eager path (training and the existing tests
-    see no difference).  For the paper's calibrated static-int8 dataflow,
-    compile once with repro.compiler.compile_calibrated and execute that
-    program instead.
+    see no difference).  The compiled program comes out of the shared
+    bounded program cache (compiler.program_cache()) and carries the
+    concurrent-PE level schedule, so repeat calls never re-lower.  For the
+    paper's calibrated static-int8 dataflow, compile once with
+    repro.compiler.compile_calibrated and execute that program instead --
+    or serve many models at once through serve.cnn_engine.CNNServeEngine,
+    which keys full (model, engine, calibration) programs in its own cache
+    and batches requests into fixed-size waves.
     """
     from repro import compiler
-    program = compiler.compile_cnn(cfg)
+    program = compiler.compile_cnn(cfg)          # program-cache hit after 1st
     return compiler.execute(program, params, images, eng)
 
 

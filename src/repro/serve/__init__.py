@@ -1,0 +1,9 @@
+"""Serving layer: batched request engines over compiled programs.
+
+Import the submodules directly (this initializer stays empty so importing
+one engine never drags in the other's model stack):
+
+    from repro.serve.engine import ServeEngine            # LM slot scheduler
+    from repro.serve.cnn_engine import CNNServeEngine     # CNN wave scheduler
+    from repro.serve.program_cache import ProgramCache
+"""

@@ -1,0 +1,243 @@
+"""CNN serving engine: cached programs + wave batching + concurrent PEs.
+
+The CNN counterpart of serve/engine.py's ServeEngine (which slots LM
+requests into a fixed decode batch).  One engine serves many registered
+CNNs on one fabric (the f-CNNx setting):
+
+  * compile  -- each (model, engine, calibration) triple lowers once to a
+    static-int8 (or dynamic) engine program;
+  * cache    -- programs live in a keyed LRU ProgramCache, so a request
+    trace that revisits models never re-traces or re-calibrates;
+  * batch    -- incoming single-image requests queue in submission order
+    and flush as fixed-size waves per model (pad-and-mask: the wave shape
+    is static, so each program JITs exactly once);
+  * schedule -- the programs carry the level schedule from
+    compiler/schedule.py, so execution dispatches independent ops (a DWC
+    branch next to a Conv branch, MISC alongside Conv) per concurrent wave.
+
+Usage (examples/serve_cnn_int8.py is the runnable version):
+
+    engine = CNNServeEngine(eng_lib.paper_engine(), wave_size=4)
+    engine.register(cfg, params, calib_batches=[batch])
+    for img in images:
+        engine.submit(cfg.name, img)
+    logits = engine.flush()          # per-request logits, submission order
+    print(engine.stats())            # cache hit-rate, wave occupancy
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import compiler
+from repro.compiler.executor import Program
+from repro.core import engine as eng_lib
+from repro.core.config import CNNConfig, EngineConfig
+from repro.serve.program_cache import ProgramCache, ProgramKey
+
+
+def calibration_digest(batches: Sequence[jax.Array], params=None) -> str:
+    """Stable id of the calibration inputs.  The recorded scales depend on
+    the batches AND the float params (calibrate() runs the model), so both
+    are digested: re-registering a model with new weights but the same
+    batches must miss the cache, not reuse stale activation scales."""
+    h = hashlib.sha1()
+    for b in batches:
+        a = np.asarray(b)
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    if params is not None:
+        for leaf in jax.tree_util.tree_leaves(params):
+            h.update(np.asarray(leaf).tobytes())
+    return h.hexdigest()[:12]
+
+
+@dataclasses.dataclass
+class _Model:
+    cfg: CNNConfig
+    params: object                    # float tree (calibration input)
+    qparams: object                   # engine-quantized tree (execution)
+    calib_batches: Optional[List[jax.Array]]
+    calib_id: Optional[str]
+
+
+@dataclasses.dataclass
+class WaveStats:
+    requests: int = 0
+    waves: int = 0
+    padded: int = 0                   # mask-only slots across all waves
+
+    @property
+    def occupancy(self) -> float:
+        slots = self.requests + self.padded
+        return self.requests / slots if slots else 0.0
+
+
+class CNNServeEngine:
+    """Serve registered CNNs as cached, batched, scheduled engine programs."""
+
+    def __init__(self, eng: EngineConfig, wave_size: int = 4,
+                 cache_capacity: int = 8, scheduled: bool = True,
+                 cache: Optional[ProgramCache] = None):
+        if wave_size < 1:
+            raise ValueError("wave_size must be >= 1")
+        self.eng = eng
+        self.wave_size = wave_size
+        self.scheduled = scheduled
+        self.cache = (ProgramCache(cache_capacity, on_evict=self._on_evict)
+                      if cache is None else cache)
+        self.wave_stats = WaveStats()
+        self._models: Dict[str, _Model] = {}
+        self._jitted: Dict[object, object] = {}
+        self._queue: List[Tuple[int, str, np.ndarray]] = []
+        self._next_ticket = 0
+
+    # -- model registry ------------------------------------------------------
+
+    def register(self, cfg: CNNConfig, params,
+                 calib_batches: Optional[Sequence[jax.Array]] = None,
+                 calib_id: Optional[str] = None) -> str:
+        """Register a model under cfg.name.  `params` is the FLOAT tree;
+        weights are engine-quantized here, and `calib_batches` (when given
+        and the engine is quantized) select the static-int8 program.  The
+        program itself compiles lazily on first request."""
+        batches = list(calib_batches) if calib_batches is not None else None
+        if self.eng.quant == "none":
+            batches = None            # float fabric: dynamic program only
+        if batches is not None and calib_id is None:
+            calib_id = calibration_digest(batches, params)
+        self._models[cfg.name] = _Model(
+            cfg=cfg, params=params,
+            qparams=eng_lib.quantize_params(params, self.eng),
+            calib_batches=batches, calib_id=calib_id)
+        return cfg.name
+
+    def models(self) -> List[str]:
+        return sorted(self._models)
+
+    # -- program cache -------------------------------------------------------
+
+    def _key(self, m: _Model) -> ProgramKey:
+        return ProgramKey(m.cfg, self.eng, m.calib_id,
+                          "scheduled" if self.scheduled else "sequential")
+
+    def _compile(self, m: _Model) -> Program:
+        if m.calib_batches is None:
+            return compiler.compile_cnn(m.cfg, scheduled=self.scheduled)
+        return compiler.compile_calibrated(m.cfg, m.params, m.calib_batches,
+                                           scheduled=self.scheduled)
+
+    def program_for(self, name: str) -> Program:
+        """The model's compiled program: cache hit, or compile-and-insert."""
+        m = self._models[name]
+        return self.cache.get_or_compile(self._key(m),
+                                         lambda: self._compile(m))
+
+    def _on_evict(self, key, program) -> None:
+        self._jitted.pop(key, None)   # drop the evicted program's trace too
+
+    def _executor_for(self, name: str):
+        """A jitted batched execute for the model's program.  The wave shape
+        is fixed ([wave_size, H, W, C]), so each cached program traces once;
+        eviction drops the trace alongside the program."""
+        m = self._models[name]
+        key = self._key(m)
+        program = self.program_for(name)
+        # a shared/injected cache evicts without calling this engine's
+        # _on_evict; prune traces for programs it no longer holds on every
+        # call (not just local misses) so the jit store stays bounded by
+        # the cache even when this engine's own working set is stable
+        self._jitted = {k: f for k, f in self._jitted.items()
+                        if k in self.cache}
+        fn = self._jitted.get(key)
+        if fn is None or fn[0] is not program:
+            run = jax.jit(
+                lambda p, im: compiler.execute(program, p, im, self.eng))
+            fn = (program, run)
+            self._jitted[key] = fn
+        return fn[1]
+
+    # -- request batching ----------------------------------------------------
+
+    def submit(self, name: str, image: np.ndarray) -> int:
+        """Queue one [H, W, C] image request; returns its ticket (the index
+        of its logits in the next flush())."""
+        if name not in self._models:
+            raise KeyError(f"model {name!r} not registered "
+                           f"(have {self.models()})")
+        image = np.asarray(image)
+        cfg = self._models[name].cfg
+        want = (cfg.input_hw, cfg.input_hw, cfg.input_ch)
+        if image.shape != want:
+            # reject at submission: a bad request must not reach flush(),
+            # where the queue is already drained and a shape error would
+            # drop every other pending request with it
+            raise ValueError(f"submit() takes one {want} image per "
+                             f"{name!r} request, got shape {image.shape}")
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._queue.append((ticket, name, image))
+        return ticket
+
+    def flush(self) -> List[np.ndarray]:
+        """Run every queued request and return logits in submission order.
+
+        Requests group per model (preserving each model's internal order)
+        and execute as fixed-size waves: the last wave of a model pads with
+        zero images whose outputs are masked away."""
+        results = self._flush_results()
+        return [results[t] for t in sorted(results)]
+
+    def _flush_results(self) -> Dict[int, np.ndarray]:
+        by_model: Dict[str, List[Tuple[int, np.ndarray]]] = {}
+        for ticket, name, image in self._queue:
+            by_model.setdefault(name, []).append((ticket, image))
+        self._queue.clear()
+        results: Dict[int, np.ndarray] = {}
+        for name, items in by_model.items():
+            run = self._executor_for(name)
+            qparams = self._models[name].qparams
+            for start in range(0, len(items), self.wave_size):
+                wave_items = items[start:start + self.wave_size]
+                n = len(wave_items)
+                wave = np.zeros((self.wave_size,) + wave_items[0][1].shape,
+                                np.float32)
+                for i, (_, img) in enumerate(wave_items):
+                    wave[i] = img
+                logits = np.asarray(run(qparams, jnp.asarray(wave)))
+                self.wave_stats.requests += n
+                self.wave_stats.waves += 1
+                self.wave_stats.padded += self.wave_size - n
+                for i, (ticket, _) in enumerate(wave_items):
+                    results[ticket] = logits[i]     # mask the pad slots
+        return results
+
+    def infer(self, name: str, images) -> np.ndarray:
+        """Convenience: submit a [N, H, W, C] batch as N requests and flush.
+        Returns logits [N, num_classes]."""
+        images = np.asarray(images)
+        tickets = [self.submit(name, img) for img in images]
+        results = self._flush_results()
+        return np.stack([results[t] for t in tickets])
+
+    # -- stats ---------------------------------------------------------------
+
+    def stats(self) -> Dict[str, object]:
+        c = self.cache.stats
+        return {
+            "models": len(self._models),
+            "cache_hits": c.hits,
+            "cache_misses": c.misses,
+            "cache_evictions": c.evictions,
+            "cache_hit_rate": c.hit_rate,
+            "programs_cached": len(self.cache),
+            "waves": self.wave_stats.waves,
+            "requests": self.wave_stats.requests,
+            "padded_slots": self.wave_stats.padded,
+            "wave_occupancy": self.wave_stats.occupancy,
+        }

@@ -1,0 +1,10 @@
+"""Serving-facing alias of the program store (see core/program_cache.py).
+
+The implementation lives in repro.core so the compiler's executor can
+memoize dynamic programs without importing the serving package (keeping
+compiler -> core one-way); this module is the serving layer's canonical
+import path for it.
+"""
+from repro.core.program_cache import CacheStats, ProgramCache, ProgramKey
+
+__all__ = ["CacheStats", "ProgramCache", "ProgramKey"]

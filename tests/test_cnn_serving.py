@@ -1,0 +1,271 @@
+"""CNN serving invariants: wave batching matches per-image execution, the
+program cache hits/misses/evicts correctly, and the executor's dynamic
+program store is bounded (regression for the old unbounded lru_cache)."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import compiler
+from repro.compiler import executor as ex
+from repro.configs.cnn_zoo import CNN_ZOO
+from repro.core import engine as eng_lib
+from repro.core.config import EngineConfig
+from repro.models import cnn
+from repro.models.params import init_params
+from repro.serve.cnn_engine import CNNServeEngine, calibration_digest
+from repro.serve.program_cache import ProgramCache, ProgramKey
+
+HW = 32
+W8 = EngineConfig(quant="w8a8", backend="ref")
+
+
+def _model(name, seed=0):
+    cfg = dataclasses.replace(CNN_ZOO[name], input_hw=HW)
+    params = init_params(cnn.cnn_schema(cfg), jax.random.PRNGKey(seed))
+    return cfg, params
+
+
+def _images(n, ch=3, seed=0):
+    return np.random.default_rng(seed).normal(
+        size=(n, HW, HW, ch)).astype(np.float32) * 0.5
+
+
+def _calib():
+    return [jnp.asarray(_images(2, seed=7))]
+
+
+# ---------------------------------------------------------------------------
+# Wave batching
+# ---------------------------------------------------------------------------
+
+class TestWaveBatching:
+    def test_waves_match_per_image_execution(self):
+        """5 requests through wave_size=2 (3 waves, 1 padded slot) return
+        the same logits as executing each image alone through the same
+        compiled program."""
+        cfg, params = _model("squeezenet")
+        engine = CNNServeEngine(W8, wave_size=2)
+        engine.register(cfg, params, calib_batches=_calib())
+        images = _images(5)
+        got = engine.infer(cfg.name, images)
+        assert got.shape == (5, cfg.num_classes)
+        assert engine.wave_stats.waves == 3
+        assert engine.wave_stats.padded == 1
+        prog = engine.program_for(cfg.name)
+        qparams = eng_lib.quantize_params(params, W8)
+        for i in range(5):
+            solo = np.array(compiler.execute(
+                prog, qparams, jnp.asarray(images[i:i + 1]), W8))
+            np.testing.assert_allclose(got[i], solo[0], rtol=1e-4, atol=1e-4)
+
+    def test_submission_order_preserved_across_models(self):
+        """Interleaved requests for two models come back in ticket order,
+        each equal to its own model's direct execution."""
+        cfg_a, params_a = _model("squeezenet", seed=0)
+        cfg_b, params_b = _model("mobilenetv2", seed=1)
+        engine = CNNServeEngine(W8, wave_size=4)
+        engine.register(cfg_a, params_a, calib_batches=_calib())
+        engine.register(cfg_b, params_b, calib_batches=_calib())
+        images = _images(6)
+        order = [cfg_a.name, cfg_b.name, cfg_b.name,
+                 cfg_a.name, cfg_b.name, cfg_a.name]
+        for name, img in zip(order, images):
+            engine.submit(name, img)
+        out = engine.flush()
+        assert len(out) == 6
+        for i, name in enumerate(order):
+            cfg = cfg_a if name == cfg_a.name else cfg_b
+            params = params_a if name == cfg_a.name else params_b
+            prog = engine.program_for(name)
+            solo = np.array(compiler.execute(
+                prog, eng_lib.quantize_params(params, W8),
+                jnp.asarray(images[i:i + 1]), W8))
+            np.testing.assert_allclose(out[i], solo[0], rtol=1e-4, atol=1e-4)
+
+    def test_float_engine_matches_cnn_forward(self):
+        """quant='none' serving (dynamic program) equals the eager path."""
+        cfg, params = _model("squeezenet")
+        eng = EngineConfig(quant="none", backend="ref")
+        engine = CNNServeEngine(eng, wave_size=4)
+        engine.register(cfg, params)
+        images = _images(4)
+        got = engine.infer(cfg.name, images)
+        want = np.array(cnn.cnn_forward(params, jnp.asarray(images), cfg,
+                                        eng))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_submit_validates(self):
+        cfg, params = _model("squeezenet")
+        engine = CNNServeEngine(W8)
+        engine.register(cfg, params, calib_batches=_calib())
+        with pytest.raises(KeyError):
+            engine.submit("nope", _images(1)[0])
+        with pytest.raises(ValueError):
+            engine.submit(cfg.name, _images(2))      # batch, not one image
+
+
+# ---------------------------------------------------------------------------
+# Program cache behavior through the engine
+# ---------------------------------------------------------------------------
+
+class TestProgramCaching:
+    def test_hit_on_second_request(self):
+        cfg, params = _model("squeezenet")
+        engine = CNNServeEngine(W8, wave_size=2)
+        engine.register(cfg, params, calib_batches=_calib())
+        engine.infer(cfg.name, _images(2))
+        first = engine.cache.stats.misses
+        p1 = engine.program_for(cfg.name)
+        engine.infer(cfg.name, _images(2, seed=1))
+        assert engine.cache.stats.misses == first    # no recompile
+        assert engine.cache.stats.hits >= 2
+        assert engine.program_for(cfg.name) is p1    # same compiled object
+
+    def test_miss_and_recompile_on_engine_change(self):
+        """Two engines sharing one cache: the key includes EngineConfig, so
+        a different engine config recompiles instead of aliasing."""
+        cfg, params = _model("squeezenet")
+        shared = ProgramCache(capacity=4)
+        e1 = CNNServeEngine(W8, wave_size=2, cache=shared)
+        e2 = CNNServeEngine(
+            EngineConfig(quant="w8a8", backend="ref", baseline=True),
+            wave_size=2, cache=shared)
+        calib = _calib()
+        e1.register(cfg, params, calib_batches=calib)
+        e2.register(cfg, params, calib_batches=calib)
+        p1 = e1.program_for(cfg.name)
+        assert shared.stats.misses == 1
+        p2 = e2.program_for(cfg.name)
+        assert shared.stats.misses == 2              # engine change -> miss
+        assert p1 is not p2
+        assert e1.program_for(cfg.name) is p1        # both entries live
+        assert e2.program_for(cfg.name) is p2
+        assert shared.stats.hits == 2
+
+    def test_miss_on_calibration_change(self):
+        cfg, params = _model("squeezenet")
+        engine = CNNServeEngine(W8, wave_size=2)
+        engine.register(cfg, params, calib_batches=_calib())
+        p1 = engine.program_for(cfg.name)
+        other = [jnp.asarray(_images(2, seed=99))]
+        assert calibration_digest(other) != calibration_digest(_calib())
+        engine.register(cfg, params, calib_batches=other)
+        p2 = engine.program_for(cfg.name)
+        assert p2 is not p1
+        assert engine.cache.stats.misses == 2
+
+    def test_miss_on_params_change(self):
+        """Re-registering new weights under the same config + calibration
+        batches must recompile: the calibrated scales depend on the params,
+        so reusing the old program would execute against stale scales."""
+        cfg, params = _model("squeezenet", seed=0)
+        _, params2 = _model("squeezenet", seed=1)
+        engine = CNNServeEngine(W8, wave_size=2)
+        engine.register(cfg, params, calib_batches=_calib())
+        p1 = engine.program_for(cfg.name)
+        engine.register(cfg, params2, calib_batches=_calib())
+        p2 = engine.program_for(cfg.name)
+        assert p2 is not p1
+        assert engine.cache.stats.misses == 2
+        # the plans genuinely differ: different weights -> different scales
+        assert p1.plan.out_scale != p2.plan.out_scale
+
+    def test_lru_eviction_respects_capacity(self):
+        """capacity=2 with 3 models: the least-recently-used program is
+        evicted, and revisiting it recompiles."""
+        engine = CNNServeEngine(W8, wave_size=2, cache_capacity=2)
+        names = []
+        for i, zoo in enumerate(("squeezenet", "mobilenetv2", "resnet50")):
+            cfg, params = _model(zoo, seed=i)
+            names.append(engine.register(cfg, params, calib_batches=_calib()))
+        a, b, c = names
+        pa = engine.program_for(a)
+        engine.program_for(b)
+        assert len(engine.cache) == 2 and engine.cache.stats.evictions == 0
+        engine.program_for(a)                        # refresh a's recency
+        engine.program_for(c)                        # evicts b (LRU)
+        assert len(engine.cache) == 2
+        assert engine.cache.stats.evictions == 1
+        assert engine.program_for(a) is pa           # a survived (refreshed)
+        misses = engine.cache.stats.misses
+        engine.program_for(b)                        # b was evicted
+        assert engine.cache.stats.misses == misses + 1
+
+
+# ---------------------------------------------------------------------------
+# ProgramCache unit behavior
+# ---------------------------------------------------------------------------
+
+class TestProgramCacheUnit:
+    def test_lru_order_and_eviction_callback(self):
+        evicted = []
+        c = ProgramCache(capacity=2, on_evict=lambda k, v: evicted.append(k))
+        c.put("a", 1)
+        c.put("b", 2)
+        assert c.get("a") == 1                       # refresh a
+        c.put("c", 3)                                # evicts b
+        assert evicted == ["b"]
+        assert "a" in c and "c" in c and "b" not in c
+
+    def test_get_or_compile_counts(self):
+        c = ProgramCache(capacity=2)
+        calls = []
+        fn = lambda: calls.append(1) or len(calls)
+        assert c.get_or_compile("k", fn) == 1
+        assert c.get_or_compile("k", fn) == 1        # cached
+        assert len(calls) == 1
+        assert (c.stats.hits, c.stats.misses, c.stats.compiles) == (1, 1, 1)
+        assert c.stats.hit_rate == 0.5
+        assert "hit-rate 50.0%" in c.stats.summary()
+
+    def test_zero_capacity_never_stores(self):
+        c = ProgramCache(capacity=0)
+        assert c.get_or_compile("k", lambda: 1) == 1
+        assert c.get_or_compile("k", lambda: 2) == 2  # recompiled
+        assert len(c) == 0 and c.stats.misses == 2
+
+    def test_program_key_hashable_and_distinct(self):
+        cfg, _ = _model("squeezenet")
+        k1 = ProgramKey(cfg, W8, "abc", "scheduled")
+        k2 = ProgramKey(cfg, W8, "abc", "scheduled")
+        k3 = ProgramKey(cfg, W8, "abd", "scheduled")
+        assert k1 == k2 and hash(k1) == hash(k2) and k1 != k3
+
+
+# ---------------------------------------------------------------------------
+# Executor dynamic-program store (regression: was an unbounded lru_cache)
+# ---------------------------------------------------------------------------
+
+class TestDynamicProgramStore:
+    def test_repeat_compile_hits(self):
+        cfg, _ = _model("squeezenet")
+        p1 = compiler.compile_cnn(cfg)
+        p2 = compiler.compile_cnn(cfg)
+        assert p1 is p2
+        # the sequential variant is a distinct cached program
+        p3 = compiler.compile_cnn(cfg, scheduled=False)
+        assert p3 is not p1 and p3.schedule is None
+        assert compiler.compile_cnn(cfg, scheduled=False) is p3
+
+    def test_store_is_bounded(self):
+        """Sweeping more configs than the capacity must not grow the store
+        without limit (the old functools.lru_cache(maxsize=None) did)."""
+        cache = compiler.program_cache()
+        cap = cache.capacity
+        base, _ = _model("squeezenet")
+        for i in range(cap + 8):
+            compiler.compile_cnn(dataclasses.replace(
+                base, name=f"sweep{i}", num_classes=8 + i))
+        assert len(cache) <= cap
+
+    def test_static_programs_not_in_dynamic_store(self):
+        """Calibrated programs are keyed by the serving cache, not the
+        executor's dynamic store (their scales are not part of its key)."""
+        cfg, params = _model("squeezenet")
+        before = len(compiler.program_cache())
+        prog = compiler.compile_calibrated(cfg, params, _calib())
+        assert prog.static
+        assert len(compiler.program_cache()) == before

@@ -245,3 +245,62 @@ class TestStaticProgram:
         with pytest.raises(ValueError, match="QTensor"):
             compiler.execute(prog, params, x,
                              EngineConfig(quant="w8a8", backend="ref"))
+
+
+# ---------------------------------------------------------------------------
+# Golden dynamic-vs-static parity across the whole zoo, on both backends
+# ---------------------------------------------------------------------------
+
+# Max |static - dynamic| logit gap, as a fraction of max |dynamic logit|
+# (absolute logit magnitudes at random init vary by orders of magnitude
+# across the zoo, so the bound is relative).  Values are ~2.5x the measured
+# gap at seed 0, hw=32: the requant-rounding drift of each model's depth /
+# branch structure.  A regression that breaks the static plan (wrong scale,
+# dropped fold, misrouted epilogue) blows far past these.
+GOLDEN_GAP_FRAC = {
+    "resnet50": 0.10,
+    "resnet152": 0.13,
+    "mobilenetv1": 0.20,
+    "mobilenetv2": 0.35,
+    "efficientnet": 0.18,
+    "squeezenet": 0.12,
+    "yolov3": 0.12,
+    "yolov5n": 0.10,
+}
+
+
+@pytest.fixture(scope="module")
+def zoo_golden():
+    """Shared per-config setup: one calibration + compile per model, reused
+    by both backend parametrizations."""
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg, params, x = _setup(name)
+            prog = compiler.compile_calibrated(cfg, params, [x])
+            f = np.array(cnn.cnn_forward(
+                params, x, cfg, EngineConfig(quant="none", backend="ref")))
+            cache[name] = (cfg, params, x, prog, f)
+        return cache[name]
+
+    return get
+
+
+class TestGoldenZooParity:
+    @pytest.mark.parametrize("backend", ["ref", "pallas"])
+    @pytest.mark.parametrize("name", sorted(CNN_ZOO))
+    def test_dynamic_vs_static_gap_bounded(self, name, backend, zoo_golden):
+        """Every zoo config: the compiled static-int8 program tracks the
+        eager dynamic w8a8 path within the golden max-logit-gap bound, and
+        both correlate with the float reference."""
+        cfg, params, x, prog, f = zoo_golden(name)
+        eng = EngineConfig(quant="w8a8", backend=backend, interpret=True)
+        qparams = eng_lib.quantize_params(params, eng)
+        dyn = np.array(cnn.cnn_forward(qparams, x, cfg, eng))
+        stat = np.array(compiler.execute(prog, qparams, x, eng))
+        assert np.isfinite(stat).all() and np.isfinite(dyn).all()
+        gap = np.max(np.abs(stat - dyn))
+        bound = GOLDEN_GAP_FRAC[name] * np.max(np.abs(dyn))
+        assert gap <= bound, (name, backend, gap, bound)
+        assert np.corrcoef(f.ravel(), stat.ravel())[0, 1] > 0.9

@@ -1,0 +1,221 @@
+"""Scheduler pass properties: every schedule is a valid topological leveling
+covering all ops exactly once, and scheduled execution is bit-identical to
+sequential raw-order execution for both dynamic and static programs.
+
+Property tests draw random CNNConfigs (stage kinds, widths, strides) through
+the hypothesis shim, so the invariants hold structurally -- not just on the
+zoo models."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # offline container
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro import compiler
+from repro.compiler import schedule as sched_lib
+from repro.configs.cnn_zoo import CNN_ZOO
+from repro.core import engine as eng_lib
+from repro.core.config import CNNConfig, ConvSpec as C, EngineConfig
+from repro.models import cnn
+from repro.models.params import init_params
+
+# fire first: it is the branchy kind (concat of two expand convs), so the
+# shim's prefix-sampling lists() always exercises co-leveled ops
+KINDS = ("fire", "conv", "pool", "bottleneck", "inverted", "dwsep")
+
+
+def _stage(kind: str, out_ch: int, stride: int) -> C:
+    if kind == "pool":
+        return C("pool", kernel=2, stride=2)
+    if kind == "inverted":
+        return C(kind, out_ch=out_ch, kernel=3, stride=stride, repeat=1,
+                 expand=2)
+    return C(kind, out_ch=out_ch, kernel=3, stride=stride, repeat=1)
+
+
+def _random_cfg(kinds, stem_ch: int, out_ch: int, stride: int) -> CNNConfig:
+    stages = tuple(_stage(k, out_ch, stride) for k in kinds)
+    name = f"prop_{'-'.join(kinds)}_{stem_ch}_{out_ch}_{stride}"
+    # hw=32 keeps every feature map non-empty even for pool-heavy draws
+    return CNNConfig(name=name, input_hw=32, input_ch=3, stem_kernel=3,
+                     stem_stride=2, stem_ch=stem_ch, stages=stages,
+                     num_classes=8)
+
+
+def _setup(cfg: CNNConfig, batch: int = 1):
+    params = init_params(cnn.cnn_schema(cfg), jax.random.PRNGKey(0))
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(batch, cfg.input_hw, cfg.input_hw, cfg.input_ch)
+    ).astype(np.float32) * 0.5)
+    return params, x
+
+
+# ---------------------------------------------------------------------------
+# Structural properties of the leveling
+# ---------------------------------------------------------------------------
+
+class TestLevelingProperties:
+    @settings(deadline=None)
+    @given(kinds=st.lists(st.sampled_from(KINDS), min_size=1, max_size=4),
+           stem_ch=st.sampled_from([4, 8]),
+           out_ch=st.sampled_from([8, 16]),
+           stride=st.sampled_from([1, 2]))
+    def test_schedule_is_valid_topological_leveling(self, kinds, stem_ch,
+                                                    out_ch, stride):
+        """Every op's inputs land in strictly earlier levels, and the levels
+        cover every node exactly once."""
+        g = compiler.build_graph(_random_cfg(kinds, stem_ch, out_ch, stride))
+        s = compiler.level_schedule(g)
+        # coverage: each node exactly once
+        flat = list(s.order())
+        assert sorted(flat) == [n.id for n in g.nodes]
+        assert len(flat) == len(set(flat))
+        # leveling: strict precedence of inputs
+        level_of = {i: k for k, lv in enumerate(s.levels) for i in lv}
+        for n in g.nodes:
+            for i in n.inputs:
+                assert level_of[i] < level_of[n.id], (n.id, i)
+        # no empty levels, and the validator agrees
+        assert all(len(lv) > 0 for lv in s.levels)
+        compiler.validate_schedule(g, s)
+
+    @settings(deadline=None)
+    @given(kinds=st.lists(st.sampled_from(KINDS), min_size=1, max_size=4),
+           stem_ch=st.sampled_from([4, 8]),
+           out_ch=st.sampled_from([8, 16]),
+           stride=st.sampled_from([1, 2]))
+    def test_stats_consistent(self, kinds, stem_ch, out_ch, stride):
+        g = compiler.build_graph(_random_cfg(kinds, stem_ch, out_ch, stride))
+        s = compiler.level_schedule(g)
+        assert s.stats["ops"] == len(g.nodes)
+        assert s.stats["levels"] == s.n_levels
+        assert s.stats["max_width"] == max(len(lv) for lv in s.levels)
+        assert s.stats["wide_levels"] == sum(len(lv) > 1 for lv in s.levels)
+
+    def test_every_zoo_graph_schedules(self):
+        for name, cfg in CNN_ZOO.items():
+            g = compiler.build_graph(cfg)
+            s = compiler.level_schedule(g)
+            compiler.validate_schedule(g, s)
+            # a chain can never be shorter than its longest path; equality
+            # holds exactly when the graph is a pure chain
+            assert s.n_levels <= len(g.nodes)
+
+    def test_branches_co_leveled(self):
+        """The concurrency the pass exists to expose: a fire module's two
+        expand convs land in the same dispatch level."""
+        g = compiler.build_graph(CNN_ZOO["squeezenet"])
+        s = compiler.level_schedule(g)
+        assert s.stats["max_width"] >= 2
+        assert s.stats["wide_levels"] >= 8           # 8 fire modules
+        for n in g.nodes:
+            if isinstance(n, compiler.ConcatOp):
+                lv = {k for k, level in enumerate(s.levels)
+                      for i in level if i in n.inputs}
+                assert len(lv) == 1                  # e1 and e3 together
+
+    def test_validator_rejects_bad_schedules(self):
+        g = compiler.build_graph(CNN_ZOO["squeezenet"])
+        s = compiler.level_schedule(g)
+        # drop a node
+        broken = sched_lib.Schedule(tuple(s.levels[:-1]))
+        with pytest.raises(ValueError, match="coverage"):
+            compiler.validate_schedule(g, broken)
+        # duplicate a node
+        dup = sched_lib.Schedule(s.levels + (s.levels[0],))
+        with pytest.raises(ValueError, match="twice"):
+            compiler.validate_schedule(g, dup)
+        # co-level a dependent pair
+        merged = sched_lib.Schedule(
+            (s.levels[0] + s.levels[1],) + s.levels[2:])
+        with pytest.raises(ValueError, match="leveling"):
+            compiler.validate_schedule(g, merged)
+
+    def test_engine_unit_mapping(self):
+        g = compiler.build_graph(CNN_ZOO["mobilenetv2"])
+        units = {compiler.engine_unit(n) for n in g.nodes}
+        assert sched_lib.LOW_CHANNEL in units        # stem
+        assert sched_lib.DWC_PE in units             # depthwise stages
+        assert sched_lib.CONV_PE in units
+        assert sched_lib.MISC in units               # residual adds / pools
+
+
+# ---------------------------------------------------------------------------
+# Execution parity: scheduled dispatch == sequential raw order, bitwise
+# ---------------------------------------------------------------------------
+
+def _strip_schedule(program):
+    return dataclasses.replace(program, schedule=None)
+
+
+class TestScheduledExecutionParity:
+    @settings(deadline=None)
+    @given(kinds=st.lists(st.sampled_from(KINDS), min_size=1, max_size=3),
+           out_ch=st.sampled_from([8, 16]))
+    def test_dynamic_bit_identical(self, kinds, out_ch):
+        cfg = _random_cfg(kinds, 4, out_ch, 1)
+        params, x = _setup(cfg)
+        eng = EngineConfig(quant="none", backend="ref")
+        scheduled = compiler.compile_cnn(cfg, scheduled=True)
+        sequential = compiler.compile_cnn(cfg, scheduled=False)
+        assert scheduled.schedule is not None and sequential.schedule is None
+        a = np.array(compiler.execute(scheduled, params, x, eng))
+        b = np.array(compiler.execute(sequential, params, x, eng))
+        np.testing.assert_array_equal(a, b)
+
+    @settings(deadline=None)
+    @given(kinds=st.lists(st.sampled_from(KINDS), min_size=1, max_size=3),
+           out_ch=st.sampled_from([8, 16]))
+    def test_static_bit_identical(self, kinds, out_ch):
+        cfg = _random_cfg(kinds, 4, out_ch, 1)
+        params, x = _setup(cfg)
+        eng = EngineConfig(quant="w8a8", backend="ref")
+        qparams = eng_lib.quantize_params(params, eng)
+        prog = compiler.compile_calibrated(cfg, params, [x])
+        assert prog.static and prog.schedule is not None
+        a = np.array(compiler.execute(prog, qparams, x, eng))
+        b = np.array(compiler.execute(_strip_schedule(prog), qparams, x, eng))
+        np.testing.assert_array_equal(a, b)
+
+    @pytest.mark.parametrize("name", ["squeezenet", "resnet50"])
+    def test_zoo_static_bit_identical(self, name):
+        """Branchy zoo models (real co-leveled ops): scheduled static-int8
+        execution is bit-identical to sequential, jitted and eager."""
+        cfg = dataclasses.replace(CNN_ZOO[name], input_hw=32)
+        params, x = _setup(cfg, batch=2)
+        eng = EngineConfig(quant="w8a8", backend="ref")
+        qparams = eng_lib.quantize_params(params, eng)
+        prog = compiler.compile_calibrated(cfg, params, [x])
+        assert prog.schedule.stats["wide_levels"] > 0
+        seq = _strip_schedule(prog)
+        a = np.array(compiler.execute(prog, qparams, x, eng))
+        b = np.array(compiler.execute(seq, qparams, x, eng))
+        np.testing.assert_array_equal(a, b)
+        ja = np.array(jax.jit(
+            lambda p, im: compiler.execute(prog, p, im, eng))(qparams, x))
+        jb = np.array(jax.jit(
+            lambda p, im: compiler.execute(seq, p, im, eng))(qparams, x))
+        np.testing.assert_array_equal(ja, jb)
+
+    def test_calibration_identical_under_scheduling(self):
+        """The observer hook sees the same tensors whichever dispatch order
+        runs: scales recorded through a scheduled program match the
+        calibrate() pass (which walks sequentially) exactly."""
+        from repro.core.quant import Calibrator
+
+        cfg = dataclasses.replace(CNN_ZOO["squeezenet"], input_hw=32)
+        params, x = _setup(cfg)
+        eng = EngineConfig(quant="none", backend="ref")
+        g = compiler.build_graph(cfg)
+        sequential = compiler.calibrate(g, params, [x], cfg)
+        cal = Calibrator()
+        compiler.execute(compiler.compile_cnn(cfg, scheduled=True), params,
+                         x, eng, observer=lambda n, v: cal.observe(str(n.id), v))
+        scheduled = {int(k): float(v) for k, v in cal.scales().items()}
+        assert scheduled == sequential
