@@ -16,8 +16,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig8_dwc, pipeline_int8, roofline, serve_cnn,
-                            table1_dse, table2_resources, table3_e2e,
-                            table4_mlperf)
+                            serve_lm, table1_dse, table2_resources,
+                            table3_e2e, table4_mlperf)
 
     suites = [
         ("table1", lambda: table1_dse.run()),
@@ -27,6 +27,7 @@ def main() -> None:
         ("fig8", lambda: fig8_dwc.run(measure=not args.fast)),
         ("pipeline", lambda: pipeline_int8.run(measure=not args.fast)),
         ("serve", lambda: serve_cnn.run(measure=not args.fast)),
+        ("serve_lm", lambda: serve_lm.run(measure=not args.fast)),
         ("roofline", lambda: roofline.run()),
     ]
     print("name,us_per_call,derived")

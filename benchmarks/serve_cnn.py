@@ -79,7 +79,8 @@ def _serve_trace(engine, fleet, trace):
 
 def serve_stats(wave_batch: bool = True, fleet=None, trace=None):
     """Serve the standard trace through a cached engine; return its stats
-    (the hit-rate line check.sh prints comes from here)."""
+    (the hit-rate + occupancy line check.sh prints comes from here)."""
+    from repro import compiler
     from repro.core import engine as eng_lib
     from repro.serve.cnn_engine import CNNServeEngine
 
@@ -90,6 +91,17 @@ def serve_stats(wave_batch: bool = True, fleet=None, trace=None):
     wall = _serve_trace(engine, fleet, trace)
     stats = engine.stats()
     stats["wall_s"] = wall
+    # per-level engine occupancy of the served programs, ASAP vs ALAP
+    occ, occ_alap = [], []
+    for cfg, _, _ in fleet:
+        program = engine.program_for(cfg.name)
+        occ.append(compiler.engine_occupancy(
+            program.graph, program.schedule)["occupancy"])
+        occ_alap.append(compiler.engine_occupancy(
+            program.graph,
+            compiler.level_schedule(program.graph, "alap"))["occupancy"])
+    stats["engine_occupancy"] = float(np.mean(occ))
+    stats["engine_occupancy_alap"] = float(np.mean(occ_alap))
     if wave_batch:
         # the same trace arriving all at once: full waves per model
         engine2 = CNNServeEngine(eng_lib.paper_engine(), wave_size=WAVE,
@@ -154,7 +166,10 @@ def summary_line() -> str:
     return (f"program-cache hit-rate: {100 * stats['cache_hit_rate']:.1f}% "
             f"({stats['cache_hits']}/{stats['cache_hits'] + stats['cache_misses']} hits, "
             f"{stats['cache_misses']} compiles over {stats['requests']} "
-            f"requests, {len(TRACE_MODELS)} models)")
+            f"requests, {len(TRACE_MODELS)} models); "
+            f"per-level engine occupancy "
+            f"{100 * stats['engine_occupancy']:.1f}% asap / "
+            f"{100 * stats['engine_occupancy_alap']:.1f}% alap")
 
 
 if __name__ == "__main__":

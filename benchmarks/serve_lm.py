@@ -1,0 +1,130 @@
+"""LM serving through the unified program path: compiled prefill programs
+from the keyed ProgramCache, per-level engine occupancy, cache hit-rate.
+
+Evidence lines for the model-agnostic IR (serve/engine.py + compiler):
+
+  * the transformer prefill of each arch compiles once to an engine
+    program; repeated serves (and a second engine sharing the cache) hit
+    the ProgramCache instead of re-lowering / re-calibrating / re-tracing;
+  * the program's level schedule exposes cross-engine concurrency (QKV
+    GEMMs co-leveled on the Conv PE next to MISC norms); per-level engine
+    occupancy is reported for both ASAP and ALAP leveling.
+
+    PYTHONPATH=src python -m benchmarks.serve_lm [--summary]
+
+--summary prints the one-line LM program-cache + occupancy summary
+(scripts/check.sh appends it to the gate output).
+"""
+import time
+
+import numpy as np
+
+ARCH_NAMES = ("qwen2-1.5b", "gemma2-2b")
+PROMPTS = 6
+PROMPT_LEN = 8
+NEW_TOKENS = 2
+
+
+def _fleet(seed=0):
+    import jax
+    import jax.numpy as jnp
+
+    from repro import configs
+    from repro.models import transformer as T
+    from repro.models.params import init_params
+
+    rng = np.random.default_rng(seed)
+    fleet = []
+    for i, name in enumerate(ARCH_NAMES):
+        arch = configs.reduced(configs.get_arch(name))
+        params = init_params(T.lm_schema(arch), jax.random.PRNGKey(i))
+        calib = [jnp.array(rng.integers(0, arch.vocab_size, (2, PROMPT_LEN))
+                           .astype(np.int32))]
+        prompts = [rng.integers(0, arch.vocab_size, size=PROMPT_LEN)
+                   for _ in range(PROMPTS)]
+        fleet.append((arch, params, calib, prompts))
+    return fleet
+
+
+def serve_stats():
+    """Serve each arch twice through one shared ProgramCache; return the
+    cache counters plus per-arch prefill schedule occupancy (asap + alap)."""
+    from repro import compiler
+    from repro.core.config import EngineConfig
+    from repro.serve.engine import ServeEngine
+    from repro.serve.program_cache import ProgramCache
+
+    eng = EngineConfig(quant="w8a8", backend="ref")
+    cache = ProgramCache(capacity=len(ARCH_NAMES) + 1)
+    rows = {}
+    t0 = time.perf_counter()
+    for arch, params, calib, prompts in _fleet():
+        engine = ServeEngine(arch, params, eng, batch_size=2, max_seq=32,
+                             calib_batches=calib, cache=cache)
+        engine.generate(prompts, max_new_tokens=NEW_TOKENS)   # compile+serve
+        engine.generate(prompts, max_new_tokens=NEW_TOKENS)   # re-serve: hits
+        program = engine.prefill_program()
+        occ = compiler.engine_occupancy(program.graph, program.schedule)
+        alap = compiler.level_schedule(program.graph, "alap")
+        occ_alap = compiler.engine_occupancy(program.graph, alap)
+        rows[arch.name] = {
+            "levels": program.schedule.n_levels,
+            "occupancy": occ["occupancy"],
+            "occupancy_alap": occ_alap["occupancy"],
+            "static": program.static,
+            "f32_roundtrips": program.f32_roundtrips(),
+        }
+    c = cache.stats
+    return {
+        "archs": rows,
+        "wall_s": time.perf_counter() - t0,
+        "cache_hits": c.hits,
+        "cache_misses": c.misses,
+        "cache_hit_rate": c.hit_rate,
+        "requests": c.requests,
+    }
+
+
+def run(measure: bool = True):
+    if not measure:
+        return []
+    stats = serve_stats()
+    out = []
+    for name, r in stats["archs"].items():
+        out.append((
+            f"serve_lm/prefill/{name}", 0.0,
+            f"levels={r['levels']},occupancy={r['occupancy']:.2f},"
+            f"occupancy_alap={r['occupancy_alap']:.2f},"
+            f"static={int(r['static'])},roundtrips={r['f32_roundtrips']}"))
+    out.append((
+        "serve_lm/trace/cached", stats["wall_s"] * 1e6,
+        f"hit_rate={stats['cache_hit_rate']:.3f},"
+        f"hits={stats['cache_hits']},compiles={stats['cache_misses']},"
+        f"requests={stats['requests']}"))
+    return out
+
+
+def summary_line() -> str:
+    stats = serve_stats()
+    occ = np.mean([r["occupancy"] for r in stats["archs"].values()])
+    occ_alap = np.mean([r["occupancy_alap"] for r in stats["archs"].values()])
+    return (f"lm program-cache hit-rate: {100 * stats['cache_hit_rate']:.1f}% "
+            f"({stats['cache_hits']}/{stats['requests']} hits, "
+            f"{stats['cache_misses']} compiles, {len(stats['archs'])} archs); "
+            f"prefill engine occupancy {100 * occ:.1f}% asap / "
+            f"{100 * occ_alap:.1f}% alap")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--summary", action="store_true",
+                    help="one-line LM program-cache + occupancy summary only")
+    args = ap.parse_args()
+    if args.summary:
+        print(summary_line())
+    else:
+        print("name,us_per_call,derived")
+        for row_name, us, derived in run():
+            print(f"{row_name},{us:.1f},{derived}")

@@ -19,3 +19,4 @@ python -m pytest -x -q "$@"
 
 echo "== serving cache =="
 python -m benchmarks.serve_cnn --summary
+python -m benchmarks.serve_lm --summary

@@ -1,47 +1,76 @@
-"""CNN -> engine-program compiler (the paper's instruction-driven flow).
+"""Model -> engine-program compiler (the paper's instruction-driven flow).
 
-Pipeline:
+Pipeline (model-agnostic: the same IR and passes serve both frontends):
 
-    graph.build_graph(cfg)                  # typed op-graph IR
+    graph.build_graph(cfg)                  # CNN  -> typed op-graph IR
+    graph.lower_transformer(arch)           # LM prefill -> same IR
     calibrate.calibrate(g, params, batches) # per-edge activation scales
     passes.fold_requant(g, scales)          # static int8 plan (+ fusion)
-    schedule.level_schedule(g)              # concurrent-PE dispatch waves
+    passes.fold_weight_layouts(g, params)   # compile-time weight layouts
+    schedule.level_schedule(g, policy)      # concurrent-PE dispatch waves
     executor.execute(program, ...)          # run on ref / pallas / baseline
 
-`compile_cnn(cfg)` yields the dynamic (eager-equivalent) program used by
-models.cnn.cnn_forward; `compile_calibrated(...)` yields the static int8
-program where activations stay int8 engine-to-engine.  Both carry the
-level schedule by default (`scheduled=False` opts out, for parity tests);
-compiled dynamic programs are memoized in executor.program_cache(), and the
-serving layer (repro.serve.cnn_engine) keys full calibrated programs by
-(CNNConfig, EngineConfig, calibration-id) in its own ProgramCache.
+`compile_cnn(cfg)` / `compile_lm(arch)` yield the dynamic (eager-equivalent)
+programs used by models.cnn.cnn_forward and the serving fallback;
+`compile_calibrated(...)` / `compile_lm_calibrated(...)` yield static int8
+programs: CNN activations stay int8 engine-to-engine, and every LM GEMM
+input arrives pre-quantized at its calibrated static scale.  All programs
+carry the level schedule by default (`scheduled=False` opts out, for parity
+tests; `policy="alap"` slides slack ops toward consumers).  Compiled dynamic
+programs are memoized in executor.program_cache(), and the serving layer
+(repro.serve) keys full calibrated programs by (model config, EngineConfig,
+calibration-id) in its own ProgramCache.
 """
-from repro.compiler.calibrate import calibrate
-from repro.compiler.executor import (Program, compile_cnn, execute,
-                                     program_cache)
-from repro.compiler.graph import (AddOp, ConcatOp, ConvOp, DwcOp, Graph,
-                                  InputOp, LinearOp, PoolOp, build_graph,
-                                  get_param)
+from repro.compiler.calibrate import (PercentileCalibrator, calibrate,
+                                      make_calibrator)
+from repro.compiler.executor import (Program, compile_cnn, compile_lm,
+                                     execute, program_cache,
+                                     schedule_variant)
+from repro.compiler.graph import (AddOp, AttnOp, ConcatOp, ConvOp, DwcOp,
+                                  EmbedOp, Graph, HeadOp, InputOp, LinearOp,
+                                  MulOp, NormOp, PoolOp, build_graph,
+                                  can_lower, get_param, lower_transformer,
+                                  lowering_blockers)
 from repro.compiler.passes import (QuantPlan, dynamic_roundtrip_count,
                                    f32_roundtrip_edges, fold_requant,
-                                   fusion_stats, residual_chains)
-from repro.compiler.schedule import (Schedule, engine_unit, level_schedule,
-                                     schedule_stats, validate_schedule)
+                                   fold_weight_layouts, fusion_stats,
+                                   residual_chains, set_param)
+from repro.compiler.schedule import (Schedule, engine_occupancy, engine_unit,
+                                     level_schedule, schedule_stats,
+                                     validate_schedule)
 
 
 def compile_calibrated(cfg, params, batches, eng=None,
-                       scheduled: bool = True) -> Program:
+                       scheduled: bool = True, policy: str = "asap",
+                       method: str = "absmax") -> Program:
     """Float params + representative batches -> static int8 engine program."""
     g = build_graph(cfg)
-    scales = calibrate(g, params, batches, cfg, eng=eng)
-    return compile_cnn(cfg, scales=scales, scheduled=scheduled)
+    scales = calibrate(g, params, batches, cfg, eng=eng, method=method)
+    return compile_cnn(cfg, scales=scales, scheduled=scheduled, policy=policy)
+
+
+def compile_lm_calibrated(arch, params, batches, eng=None,
+                          scheduled: bool = True, policy: str = "asap",
+                          method: str = "absmax",
+                          prefill: bool = False) -> Program:
+    """Float params + representative token batches -> static int8 LM
+    prefill program (every `ops.linear` input gets a static scale)."""
+    g = lower_transformer(arch, last_only=prefill)
+    scales = calibrate(g, params, batches, arch, eng=eng, method=method)
+    return compile_lm(arch, scales=scales, scheduled=scheduled,
+                      policy=policy, prefill=prefill)
 
 
 __all__ = [
-    "AddOp", "ConcatOp", "ConvOp", "DwcOp", "Graph", "InputOp", "LinearOp",
-    "PoolOp", "Program", "QuantPlan", "Schedule", "build_graph", "calibrate",
-    "compile_calibrated", "compile_cnn", "dynamic_roundtrip_count",
-    "engine_unit", "execute", "f32_roundtrip_edges", "fold_requant",
-    "fusion_stats", "get_param", "level_schedule", "program_cache",
-    "residual_chains", "schedule_stats", "validate_schedule",
+    "AddOp", "AttnOp", "ConcatOp", "ConvOp", "DwcOp", "EmbedOp", "Graph",
+    "HeadOp", "InputOp", "LinearOp", "MulOp", "NormOp",
+    "PercentileCalibrator", "PoolOp", "Program", "QuantPlan", "Schedule",
+    "build_graph", "calibrate", "can_lower", "compile_calibrated",
+    "compile_cnn", "compile_lm", "compile_lm_calibrated",
+    "dynamic_roundtrip_count", "engine_occupancy", "engine_unit", "execute",
+    "f32_roundtrip_edges", "fold_requant", "fold_weight_layouts",
+    "fusion_stats", "get_param", "level_schedule", "lower_transformer",
+    "lowering_blockers", "make_calibrator", "program_cache",
+    "residual_chains", "schedule_stats", "schedule_variant", "set_param",
+    "validate_schedule",
 ]

@@ -2,10 +2,23 @@
 
 The Vitis-AI step of the paper's flow (Section III-A): run representative
 inputs through the float model and derive a static symmetric int8 scale for
-every activation edge.  We reuse core.quant.Calibrator (running absmax) and
-observe every graph edge by executing the program in dynamic float mode with
-an observer hook -- so the recorded ranges are exactly the tensors the
-engines will carry.
+every activation edge.  We observe every graph edge by executing the program
+in dynamic float mode with an observer hook -- so the recorded ranges are
+exactly the tensors the engines will carry.  The same pass calibrates CNN
+programs (image batches) and LM prefill programs (token batches): the
+observer walks whatever graph the frontend lowered.
+
+Two calibrators, selected by `method`:
+
+  * "absmax" (default) -- running max |x| over all batches
+    (core.quant.Calibrator); the historical Vitis-AI-style choice.
+  * "pXX.X" (e.g. "p99.9") -- percentile of |x| over all observed elements,
+    via a streaming power-of-two-rescaling histogram.  Robust to activation
+    outliers (one huge element no longer wastes the whole int8 range), at
+    the cost of clipping the tail.
+
+The method string is part of the serving calibration-id, so ProgramCache
+entries for different calibrators never collide.
 
 Scales are returned as plain Python floats keyed by node id: they become
 compile-time constants of the static program (closure constants under jit,
@@ -17,18 +30,81 @@ from __future__ import annotations
 from typing import Dict, Iterable, Optional
 
 import jax
+import numpy as np
 
 from repro.compiler import executor as ex
 from repro.compiler.graph import Graph
-from repro.core.config import CNNConfig, EngineConfig
-from repro.core.quant import Calibrator
+from repro.core.config import EngineConfig
+from repro.core.quant import INT8_MAX, Calibrator
+
+_MIN_SCALE = 1e-8
+
+
+class PercentileCalibrator:
+    """Streaming |x| percentile over batches (per-tensor, like Calibrator).
+
+    Keeps a fixed-bin histogram per edge; when a batch exceeds the current
+    range the histogram is rescaled by a power of two (bins merged in pairs),
+    so memory stays O(bins) however many batches stream through.
+    """
+
+    def __init__(self, q: float = 99.9, bins: int = 2048):
+        if not 0.0 < q <= 100.0:
+            raise ValueError(f"percentile {q} out of (0, 100]")
+        if bins < 2 or bins % 2:
+            raise ValueError(f"bins must be even and >= 2 "
+                             f"(the range rescale merges bin pairs), got {bins}")
+        self.q = q
+        self.bins = bins
+        self._hist: Dict[str, np.ndarray] = {}
+        self._range: Dict[str, float] = {}
+
+    def observe(self, name: str, x) -> None:
+        a = np.abs(np.asarray(x, dtype=np.float32)).ravel()
+        amax = float(a.max()) if a.size else 0.0
+        rng = self._range.get(name, 0.0)
+        hist = self._hist.get(name)
+        if hist is None:
+            hist = np.zeros(self.bins, np.int64)
+            rng = max(amax, _MIN_SCALE)
+        while amax > rng:                     # power-of-two rescale
+            hist = hist.reshape(self.bins // 2, 2).sum(axis=1)
+            hist = np.concatenate([hist, np.zeros(self.bins // 2, np.int64)])
+            rng *= 2.0
+        hist += np.histogram(a, bins=self.bins, range=(0.0, rng))[0]
+        self._hist[name] = hist
+        self._range[name] = rng
+
+    def scales(self) -> dict:
+        out = {}
+        for name, hist in self._hist.items():
+            total = hist.sum()
+            cum = np.cumsum(hist)
+            idx = int(np.searchsorted(cum, self.q / 100.0 * total))
+            idx = min(idx, self.bins - 1)
+            amax = (idx + 1) / self.bins * self._range[name]
+            out[name] = max(amax / INT8_MAX, _MIN_SCALE)
+        return out
+
+
+def make_calibrator(method: str):
+    """"absmax" -> running-absmax; "pXX.X" -> percentile calibrator."""
+    if method == "absmax":
+        return Calibrator()
+    if method.startswith("p"):
+        return PercentileCalibrator(q=float(method[1:]))
+    raise ValueError(f"unknown calibration method {method!r} "
+                     "(want 'absmax' or e.g. 'p99.9')")
 
 
 def calibrate(graph: Graph, params, batches: Iterable[jax.Array],
-              cfg: CNNConfig,
-              eng: Optional[EngineConfig] = None) -> Dict[int, float]:
-    """Run `batches` (each [N, H, W, C] float) through the float ref path and
-    return {node_id: activation scale}.
+              cfg,
+              eng: Optional[EngineConfig] = None,
+              method: str = "absmax") -> Dict[int, float]:
+    """Run `batches` through the float ref path and return
+    {node_id: activation scale}.  Batches are whatever the graph's InputOp
+    consumes: [N, H, W, C] images for a CNN graph, [B, L] token ids for an
+    LM prefill graph.
 
     `params` must be the FLOAT parameter tree: calibration measures the
     ranges quantized inference must reproduce, so it runs before (and
@@ -37,16 +113,16 @@ def calibrate(graph: Graph, params, batches: Iterable[jax.Array],
     eng = eng or EngineConfig(quant="none", backend="ref")
     if eng.quant != "none":
         raise ValueError("calibration runs on the float path (quant='none')")
-    cal = Calibrator()
+    cal = make_calibrator(method)
     prog = ex.Program(graph, cfg, None)
 
     def observe(node, value):
         cal.observe(str(node.id), value)
 
     ran = False
-    for images in batches:
+    for batch in batches:
         ran = True
-        ex.execute(prog, params, images, eng, observer=observe)
+        ex.execute(prog, params, batch, eng, observer=observe)
     if not ran:
         raise ValueError("calibration needs at least one batch")
     return {int(k): float(v) for k, v in cal.scales().items()}

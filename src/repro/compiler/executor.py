@@ -1,17 +1,28 @@
 """Engine-program executor: runs a compiled op graph on any backend.
 
+Programs from both frontends execute here: CNN graphs (build_graph) and LM
+prefill graphs (lower_transformer), including mixed fleets sharing one
+engine -- the op evaluators dispatch on node kind, not on model family.
+
 Two execution modes, selected by whether the program carries a QuantPlan:
 
-  * dynamic (plan=None) -- reproduces the historical eager `cnn_forward`
-    exactly: every op dispatches through kernels/ops.py with the engine
-    config's quant mode, activations round-trip through f32 between ops and
-    are re-quantized dynamically per call.  This is the float/training path
-    and the "dynamic-f32 pipeline" baseline of the benchmarks.
+  * dynamic (plan=None) -- reproduces the historical eager paths exactly
+    (`cnn_forward`, `T.forward`): every op dispatches through kernels/ops.py
+    with the engine config's quant mode, GEMM activations are re-quantized
+    dynamically per call.  This is the float/training path and the
+    "dynamic-f32 pipeline" baseline of the benchmarks.
 
-  * static (plan from passes.fold_requant) -- the paper's dataflow: the
-    input image is quantized once with its calibrated scale, every engine
-    consumes int8 and emits int8 via its fused requant epilogue, and the
-    only f32 tensor materialized is the logits.
+  * static (plan from passes.fold_requant) -- the paper's dataflow: for a
+    CNN the input image is quantized once with its calibrated scale and
+    every engine consumes and emits int8 via its fused requant epilogue; for
+    an LM program every Conv PE GEMM consumes int8 at a static calibrated
+    scale (the producing MISC op's requant epilogue), while the float-domain
+    MISC work (attention math, residual stream, gate product) stays f32.
+
+LM prefill programs additionally support `collect`: each AttnOp deposits its
+(roped-k, v) pair keyed by layer index, which the serving layer writes into
+the decode KV cache -- so one compiled program yields both the prefill
+logits and the cache fill, like `T.prefill`.
 
 Either mode consumes the program's Schedule (compiler/schedule.py) when one
 is attached: ops are dispatched level-by-level, and every op of a level is
@@ -33,29 +44,32 @@ benchmarks.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, Iterable, Optional, Tuple
+from typing import Callable, Dict, Hashable, Iterable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.compiler import passes as passes_lib
-from repro.compiler.graph import (AddOp, ConcatOp, ConvOp, DwcOp, Graph,
-                                  InputOp, LinearOp, OpNode, PoolOp,
-                                  build_graph, get_param)
+from repro.compiler.graph import (AddOp, AttnOp, ConcatOp, ConvOp, DwcOp,
+                                  EmbedOp, Graph, HeadOp, InputOp, LinearOp,
+                                  MulOp, NormOp, OpNode, PoolOp, build_graph,
+                                  get_param, lower_transformer)
 from repro.compiler.passes import QuantPlan, fold_requant
 from repro.compiler.schedule import Schedule, level_schedule
-from repro.core.config import CNNConfig, EngineConfig
+from repro.core.config import ArchConfig, CNNConfig, EngineConfig
 from repro.core.quant import QTensor, quantize_static
 from repro.kernels import ops, ref
+from repro.models import layers as L
 from repro.core.program_cache import ProgramCache, ProgramKey
 
 
 @dataclass(frozen=True)
 class Program:
     """A compiled engine program: op graph + optional static-int8 plan and
-    concurrent-dispatch schedule."""
+    concurrent-dispatch schedule.  `cfg` is the frontend config the graph
+    was lowered from (CNNConfig or ArchConfig)."""
     graph: Graph
-    cfg: CNNConfig
+    cfg: Hashable
     plan: Optional[QuantPlan] = None
     schedule: Optional[Schedule] = None
 
@@ -83,9 +97,16 @@ def program_cache() -> ProgramCache:
     return _dynamic_cache
 
 
+def schedule_variant(scheduled: bool, policy: str) -> str:
+    """The ProgramKey variant string for a scheduling choice."""
+    if not scheduled:
+        return "sequential"
+    return "scheduled" if policy == "asap" else f"scheduled-{policy}"
+
+
 def compile_cnn(cfg: CNNConfig,
                 scales: Optional[Dict[int, float]] = None,
-                scheduled: bool = True) -> Program:
+                scheduled: bool = True, policy: str = "asap") -> Program:
     """Lower a CNNConfig to an engine program.
 
     Without `scales` the program executes dynamically (eager-equivalent);
@@ -93,31 +114,59 @@ def compile_cnn(cfg: CNNConfig,
     bounded program_cache(), so the eager cnn_forward wrapper builds each
     graph once.  With calibrated per-edge scales the requant-folding pass
     produces the static int8 plan.  `scheduled=False` omits the concurrency
-    schedule (sequential raw-order dispatch; the parity tests' baseline).
+    schedule (sequential raw-order dispatch; the parity tests' baseline);
+    `policy` selects ASAP or ALAP leveling (schedule.level_schedule).
     """
     if scales is None:
-        key = ProgramKey(cfg, None, None,
-                         "scheduled" if scheduled else "sequential")
+        key = ProgramKey(cfg, None, None, schedule_variant(scheduled, policy))
         return _dynamic_cache.get_or_compile(
-            key, lambda: _build_program(cfg, None, scheduled))
-    return _build_program(cfg, scales, scheduled)
+            key, lambda: _finish_program(build_graph(cfg), cfg, None,
+                                         scheduled, policy))
+    return _finish_program(build_graph(cfg), cfg, scales, scheduled, policy)
 
 
-def _build_program(cfg: CNNConfig, scales, scheduled: bool) -> Program:
-    g = build_graph(cfg)
+def compile_lm(arch: ArchConfig,
+               scales: Optional[Dict[int, float]] = None,
+               scheduled: bool = True, policy: str = "asap",
+               prefill: bool = False) -> Program:
+    """Lower a transformer ArchConfig (prefill path) to an engine program.
+
+    `prefill=True` emits only the last position's logits (the serving
+    variant whose AttnOps feed the KV-cache fill via `collect`); otherwise
+    the program computes full-sequence logits like `T.forward`.  Dynamic
+    programs are memoized per (arch, variant) in the bounded
+    program_cache(); calibrated ones are keyed by the serving layer.
+    """
+    variant = schedule_variant(scheduled, policy)
+    variant += ":prefill" if prefill else ":full"
+    if scales is None:
+        key = ProgramKey(arch, None, None, variant)
+        return _dynamic_cache.get_or_compile(
+            key, lambda: _finish_program(
+                lower_transformer(arch, last_only=prefill), arch, None,
+                scheduled, policy))
+    return _finish_program(lower_transformer(arch, last_only=prefill), arch,
+                           scales, scheduled, policy)
+
+
+def _finish_program(g: Graph, cfg, scales, scheduled: bool,
+                    policy: str = "asap") -> Program:
     plan = fold_requant(g, scales) if scales is not None else None
-    sched = level_schedule(g) if scheduled else None
+    sched = level_schedule(g, policy) if scheduled else None
     return Program(g, cfg, plan, sched)
 
 
-def execute(program: Program, params, images: jax.Array,
+def execute(program: Program, params, inputs: jax.Array,
             eng: EngineConfig,
-            observer: Optional[Callable[[OpNode, jax.Array], None]] = None
-            ) -> jax.Array:
-    """Run the program.  images: [N, H, W, C] float.  Returns logits."""
+            observer: Optional[Callable[[OpNode, jax.Array], None]] = None,
+            collect: Optional[dict] = None) -> jax.Array:
+    """Run the program.  `inputs` is whatever the graph's InputOp consumes:
+    [N, H, W, C] float images (CNN) or [B, L] int32 token ids (LM).
+    Returns logits.  `collect`, when given, is filled with each AttnOp's
+    (k, v) pair keyed by layer index (the serving KV-cache fill)."""
     if program.static:
-        return _execute_static(program, params, images, eng)
-    return _execute_dynamic(program, params, images, eng, observer)
+        return _execute_static(program, params, inputs, eng, collect)
+    return _execute_dynamic(program, params, inputs, eng, observer, collect)
 
 
 # ---------------------------------------------------------------------------
@@ -174,11 +223,77 @@ def _run_scheduled(program: Program, eval_node, observer=None):
 
 
 # ---------------------------------------------------------------------------
+# LM op evaluators (shared by both modes; the float-domain MISC work)
+# ---------------------------------------------------------------------------
+
+def _rope_memo():
+    """One cos/sin table per (B, L, head_dim, theta) per execute() call --
+    every AttnOp of a program reuses it, like the eager forward."""
+    cache: Dict[Tuple, Tuple[jax.Array, jax.Array]] = {}
+
+    def rope(b: int, l: int, hd: int, theta: float):
+        key = (b, l, hd, theta)
+        if key not in cache:
+            pos = jnp.broadcast_to(jnp.arange(l)[None], (b, l))
+            cache[key] = L.rope_angles(pos, hd, theta)
+        return cache[key]
+
+    return rope
+
+
+def _embed_eval(n: EmbedOp, tokens: jax.Array, params) -> jax.Array:
+    emb = get_param(params, n.w)
+    if isinstance(emb, QTensor):
+        rows = jnp.take(emb.q, tokens, axis=0).astype(jnp.float32)
+        x = rows * jnp.take(emb.scale, tokens, axis=0)
+    else:
+        x = jnp.take(emb, tokens, axis=0).astype(jnp.float32)
+    if n.emb_scale:
+        x = x * jnp.asarray(n.emb_scale, jnp.float32)
+    return x
+
+
+def _attn_eval(n: AttnOp, q: jax.Array, k: jax.Array, v: jax.Array,
+               rope, collect: Optional[dict]) -> jax.Array:
+    b, l = q.shape[0], q.shape[1]
+    g = n.n_heads // n.n_kv_heads
+    q = q.reshape(b, l, n.n_kv_heads, g, n.head_dim)
+    k = k.reshape(b, l, n.n_kv_heads, n.head_dim)
+    v = v.reshape(b, l, n.n_kv_heads, n.head_dim)
+    cos, sin = rope(b, l, n.head_dim, n.rope_theta)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    out = L.flash_attention(q, k, v, causal=True, window=n.window,
+                            logit_softcap=n.softcap)
+    if collect is not None:
+        collect[n.layer] = (k, v)          # post-RoPE k, like T.prefill
+    return out.reshape(b, l, n.n_heads * n.head_dim)
+
+
+def _head_eval(n: HeadOp, x: jax.Array, params) -> jax.Array:
+    w = get_param(params, n.w)
+    xf = x.astype(jnp.float32)
+    if n.last_only:
+        xf = xf[:, -1:]
+    sig = "bld,vd->blv" if n.tied else "bld,dv->blv"
+    if isinstance(w, QTensor):
+        logits = jnp.einsum(sig, xf, w.q.astype(jnp.float32))
+        logits = logits * w.scale.reshape(1, 1, -1)
+    else:
+        logits = jnp.einsum(sig, xf, w.astype(jnp.float32))
+    if n.softcap > 0:
+        logits = jnp.tanh(logits / n.softcap) * n.softcap
+    return logits
+
+
+# ---------------------------------------------------------------------------
 # Dynamic mode (eager-equivalent; also the calibration vehicle)
 # ---------------------------------------------------------------------------
 
 def _execute_dynamic(program: Program, params, images, eng: EngineConfig,
-                     observer=None) -> jax.Array:
+                     observer=None, collect: Optional[dict] = None
+                     ) -> jax.Array:
+    rope = _rope_memo()
 
     def eval_node(n: OpNode, vals: Dict[int, jax.Array]) -> jax.Array:
         if isinstance(n, InputOp):
@@ -211,6 +326,19 @@ def _execute_dynamic(program: Program, params, images, eng: EngineConfig,
             w, b = get_param(params, n.w), get_param(params, n.b)
             return ops.linear(vals[n.inputs[0]], w, b, n.act, eng,
                               out_dtype=jnp.float32)
+        if isinstance(n, EmbedOp):
+            return _embed_eval(n, vals[n.inputs[0]], params)
+        if isinstance(n, NormOp):
+            return L.rms_norm(vals[n.inputs[0]], get_param(params, n.w),
+                              n.eps)
+        if isinstance(n, MulOp):
+            return (vals[n.inputs[0]] * vals[n.inputs[1]]
+                    ).astype(jnp.float32)
+        if isinstance(n, AttnOp):
+            return _attn_eval(n, vals[n.inputs[0]], vals[n.inputs[1]],
+                              vals[n.inputs[2]], rope, collect)
+        if isinstance(n, HeadOp):
+            return _head_eval(n, vals[n.inputs[0]], params)
         raise TypeError(f"unknown op {type(n).__name__}")
 
     return _run_scheduled(program, eval_node, observer)
@@ -230,16 +358,33 @@ def _require_qtensor(w, n: OpNode):
 
 
 def _execute_static(program: Program, params, images,
-                    eng: EngineConfig) -> jax.Array:
+                    eng: EngineConfig, collect: Optional[dict] = None
+                    ) -> jax.Array:
     g, plan = program.graph, program.plan
     scale_of = plan.out_scale
+    rope = _rope_memo()
 
     def out_scale_for(n: OpNode):
         return scale_of[n.id] if plan.emit_int8[n.id] else None
 
+    def _q_or_raw(r, os):
+        """A float-domain MISC op's requant epilogue: int8 when the plan
+        carries the edge int8 (all consumers are GEMM engines), f32 else."""
+        if os is None:
+            return r
+        return QTensor(quantize_static(r, jnp.float32(os)), os)
+
+    def _raw(v):
+        return v.dequant() if isinstance(v, QTensor) else v
+
+    def _scaled(v):
+        return (v.q, float(v.scale)) if isinstance(v, QTensor) else (v, 1.0)
+
     def eval_node(n: OpNode, vals: Dict[int, QTensor]):
         os = out_scale_for(n)
         if isinstance(n, InputOp):
+            if os is None:
+                return images              # token ids pass through raw
             # One static quantization at the boundary; int8 from here on.
             return QTensor(quantize_static(images, jnp.float32(os)), os)
         if isinstance(n, ConvOp):
@@ -256,11 +401,13 @@ def _execute_static(program: Program, params, images,
                           n.act, eng, out_scale=os)
             return QTensor(r, os)
         if isinstance(n, AddOp):
-            a, bq = vals[n.inputs[0]], vals[n.inputs[1]]
-            r = ops.misc_add(a.q, bq.q, n.act, eng,
-                             sa=float(a.scale), sb=float(bq.scale),
-                             out_scale=os)
-            return QTensor(r, os)
+            # Mixed domains compose: a CNN residual add sees two int8 edges,
+            # an LM residual add sees the f32 stream + the block's int8
+            # GEMM output (dequantized by its static scale in this pass).
+            a, sa = _scaled(vals[n.inputs[0]])
+            b, sb = _scaled(vals[n.inputs[1]])
+            r = ops.misc_add(a, b, n.act, eng, sa=sa, sb=sb, out_scale=os)
+            return QTensor(r, os) if os is not None else r
         if isinstance(n, PoolOp):
             x = vals[n.inputs[0]]
             if n.pool == "max":
@@ -296,6 +443,26 @@ def _execute_static(program: Program, params, images,
             r = ops.linear(x, w, b, n.act, eng, out_dtype=jnp.float32,
                            out_scale=os)
             return QTensor(r, os) if os is not None else r
+        if isinstance(n, EmbedOp):
+            return _q_or_raw(_embed_eval(n, _raw(vals[n.inputs[0]]), params),
+                             os)
+        if isinstance(n, NormOp):
+            # f32 norm math on the MISC core; the requant epilogue is what
+            # hands the consumer GEMMs their static-int8 activations.
+            r = L.rms_norm(_raw(vals[n.inputs[0]]), get_param(params, n.w),
+                           n.eps)
+            return _q_or_raw(r, os)
+        if isinstance(n, MulOp):
+            r = (_raw(vals[n.inputs[0]]) * _raw(vals[n.inputs[1]])
+                 ).astype(jnp.float32)
+            return _q_or_raw(r, os)
+        if isinstance(n, AttnOp):
+            r = _attn_eval(n, _raw(vals[n.inputs[0]]),
+                           _raw(vals[n.inputs[1]]),
+                           _raw(vals[n.inputs[2]]), rope, collect)
+            return _q_or_raw(r, os)
+        if isinstance(n, HeadOp):
+            return _head_eval(n, _raw(vals[n.inputs[0]]), params)
         raise TypeError(f"unknown op {type(n).__name__}")
 
     out = _run_scheduled(program, eval_node)

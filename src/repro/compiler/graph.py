@@ -1,10 +1,15 @@
-"""Typed op-graph IR: the engine program a CNN lowers to.
+"""Typed op-graph IR: the model-agnostic engine program.
 
 The paper's DPU is instruction-driven (Section III-A): the Vitis-AI compiler
 turns a model graph into Conv PE / DWC PE / MISC instructions and the engines
 execute the resulting program.  This module is our analogue of that IR: a
 flat, topologically-ordered tuple of typed op nodes, each naming its input
-edges (producer node ids) and the parameter-tree paths it reads.
+edges (producer node ids) and the parameter-tree paths it reads.  Two
+frontends lower into it: `build_graph(CNNConfig)` for the paper's CNN zoo
+and `lower_transformer(ArchConfig)` for LM prefill -- the paper's thesis
+that one engine covers whole models ("extend the functionality of each PE",
+Section III) made concrete: GEMM-shaped ops ride the Conv PE, everything
+else the MISC core.
 
 Node kinds and the engine that executes them:
 
@@ -14,8 +19,13 @@ Node kinds and the engine that executes them:
   AddOp     -> MISC core (residual add + NL epilogue)
   PoolOp    -> MISC core ("max" | "avg" | "global")
   ConcatOp  -> bank interleave (channel concat; free at the memory level)
-  LinearOp  -> Conv PE (the classifier head GEMM)
-  InputOp   -> the image placeholder (edge 0)
+  LinearOp  -> Conv PE (classifier head / LM projection GEMM)
+  MulOp     -> MISC core (elementwise gate, SwiGLU/GeGLU)
+  NormOp    -> MISC core (RMS norm + requant epilogue)
+  AttnOp    -> MISC core (RoPE + online-softmax attention between GEMMs)
+  EmbedOp   -> memory level (token-row gather)
+  HeadOp    -> Conv PE (the LM logits GEMM, tied or untied)
+  InputOp   -> the program input placeholder (edge 0: image or token ids)
 
 A node's id doubles as the id of its output edge, so per-edge metadata
 (calibrated activation scales, emit dtypes) is keyed by node id.
@@ -25,7 +35,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.config import CNNConfig
+from repro.core.config import ArchConfig, CNNConfig
 
 # A path into the params pytree, e.g. ("stages", 2, 0, "w1").
 ParamPath = Tuple
@@ -87,6 +97,56 @@ class LinearOp(OpNode):
     w: ParamPath = ()
     b: Optional[ParamPath] = None
     act: str = "none"
+
+
+# --- LM (transformer prefill) op kinds --------------------------------------
+
+@dataclass(frozen=True)
+class EmbedOp(OpNode):
+    """Token embedding gather.  emb_scale is the resolved multiplier
+    (sqrt(d_model) for gemma-style archs, 0.0 = off)."""
+    w: ParamPath = ()
+    emb_scale: float = 0.0
+
+
+@dataclass(frozen=True)
+class NormOp(OpNode):
+    """RMS norm on the MISC core; its requant epilogue is what hands the
+    Conv PE GEMMs their static-int8 inputs in a calibrated program."""
+    w: ParamPath = ()
+    eps: float = 1e-6
+
+
+@dataclass(frozen=True)
+class MulOp(OpNode):
+    """Elementwise product (SwiGLU/GeGLU gate) on the MISC core."""
+    pass
+
+
+@dataclass(frozen=True)
+class AttnOp(OpNode):
+    """RoPE + online-softmax attention between the QKV and output GEMMs.
+    inputs = (q, k, v) projection edges, each [B, L, heads*head_dim].
+    `layer` keys the collected (k, v) pair for serving-cache fill."""
+    layer: int = 0
+    layer_kind: str = "global"
+    n_heads: int = 1
+    n_kv_heads: int = 1
+    head_dim: int = 1
+    rope_theta: float = 10000.0
+    softcap: float = 0.0
+    window: int = 0                  # >0: local attention window
+
+
+@dataclass(frozen=True)
+class HeadOp(OpNode):
+    """LM logits GEMM.  tied=True reads the embedding table ([V, d], used
+    transposed); otherwise a [d, V] head matrix.  last_only=True emits only
+    the final position's logits (the serving-prefill program)."""
+    w: ParamPath = ()
+    tied: bool = True
+    softcap: float = 0.0
+    last_only: bool = False
 
 
 @dataclass(frozen=True)
@@ -194,3 +254,93 @@ def build_graph(cfg: CNNConfig) -> Graph:
     x = b.add(PoolOp, [x], pool="global")
     x = b.add(LinearOp, [x], w=("head_w",), b=("head_b",))
     return Graph(tuple(b.nodes), output=x, name=cfg.name)
+
+
+# ---------------------------------------------------------------------------
+# Transformer prefill lowering (models/transformer.py forward/prefill)
+# ---------------------------------------------------------------------------
+
+def lowering_blockers(arch: ArchConfig) -> List[str]:
+    """Why `lower_transformer` would refuse this arch (empty = lowerable).
+    SSM / recurrent mixers, MoE, encoder-decoder and modality frontends stay
+    on the eager path this generation of the IR."""
+    reasons = []
+    kinds = {arch.layer_kind(i) for i in range(arch.n_layers)}
+    if kinds - {"global", "local"}:
+        reasons.append(f"non-attention mixers {sorted(kinds - {'global', 'local'})}")
+    if arch.is_moe:
+        reasons.append("MoE routing")
+    if arch.family == "audio" or arch.encoder_layers > 0:
+        reasons.append("encoder-decoder")
+    if arch.mrope or arch.frontend:
+        reasons.append("modality frontend / M-RoPE")
+    if arch.d_ff <= 0:
+        reasons.append("no MLP half")
+    return reasons
+
+
+def can_lower(arch: ArchConfig) -> bool:
+    return not lowering_blockers(arch)
+
+
+def lower_transformer(arch: ArchConfig, last_only: bool = False) -> Graph:
+    """Lower `T.forward`-style prefill to the engine op-graph.
+
+    The program input is the token-id tensor [B, L]; the output is the logits
+    edge ([B, L, V] full-sequence, or [B, 1, V] with `last_only` -- the
+    serving-prefill variant).  Every projection is a LinearOp on the Conv PE;
+    norms, residual adds, the SwiGLU gate and the attention core run on the
+    MISC core, mirroring the paper's non-convolution operator mapping.
+    Decode stays eager (it is a cache-state recurrence, not a graph).
+    """
+    blockers = lowering_blockers(arch)
+    if blockers:
+        raise NotImplementedError(
+            f"{arch.name}: cannot lower to the engine IR "
+            f"({'; '.join(blockers)}); serve it eagerly")
+    b = _Builder()
+    tokens = b.add(InputOp, [])
+    x = b.add(EmbedOp, [tokens], w=("embed",),
+              emb_scale=arch.d_model ** 0.5 if arch.emb_scale else 0.0)
+    gated = arch.mlp_gated
+    for i in range(arch.n_layers):
+        kind = arch.layer_kind(i)
+        p: ParamPath = ("blocks", i)
+        ap = p + ("attn",)
+        hn = b.add(NormOp, [x], w=p + ("norm",), eps=arch.norm_eps)
+        q = b.add(LinearOp, [hn], w=ap + ("wq",),
+                  b=ap + ("bq",) if arch.qkv_bias else None)
+        k = b.add(LinearOp, [hn], w=ap + ("wk",),
+                  b=ap + ("bk",) if arch.qkv_bias else None)
+        v = b.add(LinearOp, [hn], w=ap + ("wv",),
+                  b=ap + ("bv",) if arch.qkv_bias else None)
+        a = b.add(AttnOp, [q, k, v], layer=i, layer_kind=kind,
+                  n_heads=arch.n_heads, n_kv_heads=arch.n_kv_heads,
+                  head_dim=arch.head_dim, rope_theta=arch.rope_theta,
+                  softcap=arch.attn_softcap,
+                  window=arch.local_window if kind == "local" else 0)
+        h = b.add(LinearOp, [a], w=ap + ("wo",))
+        if arch.post_norms:
+            h = b.add(NormOp, [h], w=p + ("post_attn_norm",),
+                      eps=arch.norm_eps)
+        x = b.add(AddOp, [x, h])
+        # MLP half
+        mn = b.add(NormOp, [x], w=p + ("mlp_norm",), eps=arch.norm_eps)
+        mp = p + ("mlp",)
+        if gated:
+            g = b.add(LinearOp, [mn], w=mp + ("wg",), act=arch.mlp_act)
+            u = b.add(LinearOp, [mn], w=mp + ("wu",))
+            h = b.add(MulOp, [g, u])
+        else:
+            h = b.add(LinearOp, [mn], w=mp + ("wu",), act=arch.mlp_act)
+        h = b.add(LinearOp, [h], w=mp + ("wd",))
+        if arch.post_norms:
+            h = b.add(NormOp, [h], w=p + ("post_mlp_norm",),
+                      eps=arch.norm_eps)
+        x = b.add(AddOp, [x, h])
+    x = b.add(NormOp, [x], w=("final_norm",), eps=arch.norm_eps)
+    x = b.add(HeadOp, [x],
+              w=("embed",) if arch.tie_embeddings else ("head",),
+              tied=arch.tie_embeddings, softcap=arch.final_softcap,
+              last_only=last_only)
+    return Graph(tuple(b.nodes), output=x, name=arch.name)

@@ -20,16 +20,46 @@ Folding rules:
     a pure bank interleave;
   * everything else requants in its producing engine's epilogue to its own
     calibrated scale.
+
+Mixed-domain (LM) graphs: an edge is carried int8 only when its producer can
+emit int8 from its epilogue AND every consumer natively consumes int8.  In a
+CNN graph that is every internal edge (unchanged semantics).  In an LM graph
+the residual stream, the attention q/k/v and the SwiGLU gate stay f32 on the
+MISC core, while every edge feeding a Conv PE GEMM -- the norm outputs, the
+attention context, the gate product -- is requantized once, statically, in
+its producer's epilogue: `ops.linear` then consumes pre-quantized int8
+activations with compile-time scales instead of dynamically re-quantizing
+per token.
+
+fold_weight_layouts() is the compile-time weight-layout pass: the im2col
+reshape of Conv PE weights and the 128-lane zero-padding of DWC weights --
+transforms the kernels historically re-applied on every traced call -- are
+applied once to the parameter tree when a program is bound for serving.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import Dict, List, Tuple
 
-from repro.compiler.graph import (AddOp, ConcatOp, ConvOp, DwcOp, Graph,
-                                  InputOp, PoolOp)
+import jax.numpy as jnp
+
+from repro.compiler.graph import (AddOp, AttnOp, ConcatOp, ConvOp, DwcOp,
+                                  Graph, InputOp, LinearOp, MulOp, NormOp,
+                                  PoolOp, get_param)
+from repro.core.quant import QTensor
 
 _MIN_SCALE = 1e-8
+
+# Which op kinds can emit int8 from their engine epilogue, and which consume
+# int8 natively.  CNN kinds do both (the historical all-int8 dataflow); the
+# LM float-domain ops (norm input, attention math, the gate product inputs,
+# the logits head) keep f32 operands on the MISC core.
+_INT8_EMIT = (InputOp, ConvOp, DwcOp, AddOp, PoolOp, ConcatOp, LinearOp,
+              NormOp, AttnOp, MulOp)
+_INT8_CONSUME = (ConvOp, DwcOp, LinearOp, AddOp, PoolOp, ConcatOp)
+# The quantized-GEMM engines: an f32 edge into one of these is a "roundtrip"
+# (the engine would have to re-quantize dynamically per call).
+_GEMM_OPS = (ConvOp, DwcOp, LinearOp)
 
 
 @dataclass(frozen=True)
@@ -55,9 +85,15 @@ def fold_requant(graph: Graph, scales: Dict[int, float]) -> QuantPlan:
             "run compiler.calibrate over representative batches first")
 
     out_scale = {i: max(float(scales[i]), _MIN_SCALE) for i in scales}
-    emit_int8 = {n.id: True for n in graph.nodes}
-    emit_int8[graph.output] = False          # logits stay f32
     consumers = graph.consumers()
+    emit_int8 = {
+        n.id: (n.id != graph.output
+               and isinstance(n, _INT8_EMIT)
+               and bool(consumers[n.id])
+               and all(isinstance(graph.nodes[c], _INT8_CONSUME)
+                       for c in consumers[n.id]))
+        for n in graph.nodes
+    }
     folded: List[Tuple[int, int]] = []
 
     for n in graph.nodes:
@@ -112,19 +148,99 @@ def fusion_stats(graph: Graph) -> Dict[str, int]:
 
 def f32_roundtrip_edges(graph: Graph, plan: QuantPlan
                         ) -> List[Tuple[int, int]]:
-    """Edges that materialize f32 between two engines under the plan.
+    """Edges that materialize f32 into a quantized GEMM engine under the plan.
 
     An edge (p -> c) round-trips when the producer emits f32 and the consumer
-    is a quantized engine that would have to re-quantize it.  A correct plan
-    has none: the only f32 value is the graph output, which has no consumer.
+    is a GEMM engine (Conv PE / DWC PE / projection) that would have to
+    re-quantize it dynamically.  A correct plan has none: in a CNN program
+    everything internal is int8, and in an LM program every `ops.linear`
+    input arrives pre-quantized at its static calibrated scale (the
+    float-domain MISC edges -- attention math, residual stream -- are not
+    roundtrips; those engines compute in f32 natively).
     """
     bad = []
     for n in graph.nodes:
+        if not isinstance(n, _GEMM_OPS):
+            continue
         for p in n.inputs:
             if not plan.emit_int8.get(p, False) and not isinstance(
                     graph.nodes[p], InputOp):
                 bad.append((p, n.id))
     return bad
+
+
+# ---------------------------------------------------------------------------
+# Compile-time weight-layout folding (im2col reshape, DWC lane padding)
+# ---------------------------------------------------------------------------
+
+def set_param(params, path, value):
+    """Copy-on-write update of a params pytree at a ParamPath."""
+    if not path:
+        return value
+    k = path[0]
+    if isinstance(params, dict):
+        out = dict(params)
+        out[k] = set_param(params[k], path[1:], value)
+        return out
+    if isinstance(params, (list, tuple)):
+        out = list(params)
+        out[k] = set_param(out[k], path[1:], value)
+        return tuple(out) if isinstance(params, tuple) else out
+    raise TypeError(f"cannot descend into {type(params).__name__} at {k!r}")
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def fold_weight_layouts(graph: Graph, params):
+    """Apply the kernels' weight layout transforms once, at compile time.
+
+    Returns a new params tree (copy-on-write; untouched leaves shared) where
+
+      * every non-stem ConvOp weight [k, k, IC, OC] is pre-reshaped to the
+        Conv PE's im2col GEMM layout [k*k*IC, OC] (QTensor scales to
+        [1, OC]), and
+      * every DwcOp weight [k, k, C] (+ bias / per-channel scales) is
+        pre-padded to the DWC engine's 128-lane width.
+
+    kernels/ops.py recognizes both folded forms, so traced programs stop
+    re-laying-out weights on every call (the zero-padding / bank-alignment
+    steps of the paper move from trace time to compile time).  Results are
+    bit-identical: reshape and zero-padding do not touch values.
+    """
+    out = params
+    for n in graph.nodes:
+        if isinstance(n, ConvOp) and not n.first_layer:
+            w = get_param(out, n.w)
+            q = w.q if isinstance(w, QTensor) else w
+            if q.ndim != 4:
+                continue                       # already folded
+            k, _, ic, oc = q.shape
+            mat = q.reshape(k * k * ic, oc)
+            if isinstance(w, QTensor):
+                out = set_param(out, n.w,
+                                QTensor(mat, w.scale.reshape(1, oc)))
+            else:
+                out = set_param(out, n.w, mat)
+        elif isinstance(n, DwcOp):
+            w = get_param(out, n.w)
+            q = w.q if isinstance(w, QTensor) else w
+            c = q.shape[2]
+            cp = _round_up(c, 128)
+            if cp == c:
+                continue                       # already aligned (or folded)
+            pad = ((0, 0), (0, 0), (0, cp - c))
+            if isinstance(w, QTensor):
+                out = set_param(out, n.w, QTensor(
+                    jnp.pad(q, pad),
+                    jnp.pad(w.scale, ((0, 0), (0, 0), (0, cp - c)))))
+            else:
+                out = set_param(out, n.w, jnp.pad(q, pad))
+            if n.b is not None:
+                bias = get_param(out, n.b)
+                out = set_param(out, n.b, jnp.pad(bias, (0, cp - c)))
+    return out
 
 
 def dynamic_roundtrip_count(graph: Graph) -> int:

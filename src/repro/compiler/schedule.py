@@ -16,14 +16,25 @@ evaluating every op of a level against the *previous* levels' values only --
 a same-level data dependence would fail loudly -- and the perf model credits
 the overlap between engine units the same way it already credits the
 Low-Channel unit's concurrency.
+
+`policy="alap"` levels as-late-as-possible inside the same critical-path
+length: ops with slack slide toward their consumers, which tends to
+co-schedule *cross-engine* pairs (a MISC norm next to a Conv PE GEMM) that
+ASAP leaves in separate waves.  Both policies produce valid levelings with
+identical results (the parity suite pins that); per-level engine occupancy
+(engine_occupancy) is the comparison metric the serving benchmark reports.
+
+LM graphs level through the same pass: the three QKV projections of a block
+co-level on the Conv PE, and the gate/up GEMMs of a SwiGLU pair do too.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, Tuple
 
-from repro.compiler.graph import (AddOp, ConcatOp, ConvOp, DwcOp, Graph,
-                                  InputOp, LinearOp, OpNode, PoolOp)
+from repro.compiler.graph import (AddOp, AttnOp, ConcatOp, ConvOp, DwcOp,
+                                  EmbedOp, Graph, HeadOp, InputOp, LinearOp,
+                                  MulOp, NormOp, OpNode, PoolOp)
 
 # The engine units of the fabric.  Ops mapped to different units in the same
 # level model truly concurrent hardware (distinct datapaths); two same-unit
@@ -41,14 +52,14 @@ def engine_unit(node: OpNode) -> str:
     """Which engine executes a node (graph.py's kind -> engine mapping)."""
     if isinstance(node, ConvOp):
         return LOW_CHANNEL if node.first_layer else CONV_PE
-    if isinstance(node, LinearOp):
-        return CONV_PE                     # classifier-head GEMM
+    if isinstance(node, (LinearOp, HeadOp)):
+        return CONV_PE                     # classifier-head / LM GEMMs
     if isinstance(node, DwcOp):
         return DWC_PE
-    if isinstance(node, (AddOp, PoolOp)):
-        return MISC
-    if isinstance(node, (InputOp, ConcatOp)):
-        return MEM                         # load / bank interleave
+    if isinstance(node, (AddOp, PoolOp, NormOp, MulOp, AttnOp)):
+        return MISC                        # non-conv operators (paper III)
+    if isinstance(node, (InputOp, ConcatOp, EmbedOp)):
+        return MEM                         # load / interleave / row gather
     raise TypeError(f"unknown op {type(node).__name__}")
 
 
@@ -71,16 +82,34 @@ class Schedule:
         return len(self.levels)
 
 
-def level_schedule(graph: Graph) -> Schedule:
-    """ASAP-level the graph into concurrent dispatch waves."""
-    level: Dict[int, int] = {}
+def level_schedule(graph: Graph, policy: str = "asap") -> Schedule:
+    """Level the graph into concurrent dispatch waves.
+
+    policy="asap": level(n) = 1 + max(level(inputs)) -- ops fire as soon as
+    their inputs exist.  policy="alap": within the same critical-path length,
+    every op slides to the latest level its consumers allow (slack-window
+    leveling), which co-schedules more cross-engine pairs.
+    """
+    asap: Dict[int, int] = {}
     for n in graph.nodes:
-        level[n.id] = (1 + max(level[i] for i in n.inputs)) if n.inputs else 0
-    n_levels = 1 + max(level.values())
+        asap[n.id] = (1 + max(asap[i] for i in n.inputs)) if n.inputs else 0
+    n_levels = 1 + max(asap.values())
+    if policy == "asap":
+        level = asap
+    elif policy == "alap":
+        consumers = graph.consumers()
+        level = {}
+        for n in reversed(graph.nodes):    # ids are topological
+            cs = consumers[n.id]
+            level[n.id] = (min(level[c] for c in cs) - 1) if cs \
+                else n_levels - 1
+    else:
+        raise ValueError(f"unknown leveling policy {policy!r} "
+                         "(want 'asap' or 'alap')")
     levels = [[] for _ in range(n_levels)]
     for n in graph.nodes:                  # nodes are id-ordered already
         levels[level[n.id]].append(n.id)
-    lvls = tuple(tuple(lv) for lv in levels)
+    lvls = tuple(tuple(lv) for lv in levels if lv)
     return Schedule(lvls, stats=_levels_stats(graph, lvls))
 
 
@@ -108,6 +137,41 @@ def _levels_stats(graph: Graph, levels) -> Dict[str, int]:
         "cross_engine_levels": cross,
         "conv_dwc_levels": conv_dwc,
     }
+
+
+def engine_occupancy(graph: Graph, sched: Schedule) -> Dict[str, float]:
+    """Per-level engine occupancy: how busy each engine unit is across the
+    dispatch waves.
+
+    For every level, a compute unit is "busy" when at least one of its ops
+    dispatches in that wave.  `occupancy` is the mean busy-unit fraction
+    over levels that dispatch any compute at all (MEM-only levels -- the
+    input load -- are excluded); per-unit entries are the fraction of those
+    levels each unit works in.  ALAP's slack sliding raises this against
+    ASAP on branchy graphs, which is the number the serving benchmark
+    compares.
+    """
+    busy = {u: 0 for u in _COMPUTE_UNITS}
+    compute_levels = 0
+    total_busy = 0
+    for lv in sched.levels:
+        units = {engine_unit(graph.nodes[i]) for i in lv} & set(_COMPUTE_UNITS)
+        if not units:
+            continue
+        compute_levels += 1
+        total_busy += len(units)
+        for u in units:
+            busy[u] += 1
+    if compute_levels == 0:
+        return {"occupancy": 0.0, "levels": 0.0}
+    # only rate units the graph uses at all (a pure-LM graph has no DWC work)
+    used = {u for n in graph.nodes
+            for u in [engine_unit(n)] if u in _COMPUTE_UNITS}
+    out = {"occupancy": total_busy / (compute_levels * max(len(used), 1)),
+           "levels": float(compute_levels)}
+    for u in sorted(used):
+        out[u] = busy[u] / compute_levels
+    return out
 
 
 def validate_schedule(graph: Graph, sched: Schedule) -> None:

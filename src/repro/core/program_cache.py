@@ -1,12 +1,14 @@
 """Keyed LRU store for compiled engine programs.
 
-One fabric serves many CNNs (the f-CNNx setting): a request trace revisits
-a small working set of models, so recompiling -- graph build + calibration +
+One fabric serves many models (the f-CNNx setting): a request trace
+revisits a small working set, so recompiling -- graph build + calibration +
 requant folding + XLA trace -- on every request would dominate serving
-latency.  Programs are cached under ``(CNNConfig, EngineConfig,
-calibration-id)``: the config pair pins the lowering and the kernel/quant
-mode, the calibration id pins the static scales, so a hit is guaranteed to
-be the byte-identical program a fresh compile would produce.
+latency.  Programs are cached under ``(model config, EngineConfig,
+calibration-id)`` where the model config is the frontend the graph lowered
+from (a CNNConfig or a transformer ArchConfig): the config pair pins the
+lowering and the kernel/quant mode, the calibration id pins the static
+scales and the calibrator method, so a hit is guaranteed to be the
+byte-identical program a fresh compile would produce.
 
 The store is a plain bounded LRU (this also replaces the unbounded
 ``functools.lru_cache`` the executor used for dynamic programs): hits
@@ -51,12 +53,15 @@ class CacheStats:
 @dataclass(frozen=True)
 class ProgramKey:
     """The cache key: what uniquely determines a compiled program."""
-    cnn: Hashable                     # CNNConfig (frozen dataclass)
+    model: Hashable                   # the frontend config the graph lowers
+                                      # from (CNNConfig or ArchConfig)
     engine: Optional[Hashable]        # EngineConfig, or None when the
                                       # program is backend-agnostic (dynamic)
-    calibration: Optional[str]        # digest of the calibration data, or
-                                      # None for uncalibrated programs
-    variant: str = ""                 # e.g. "scheduled" / "sequential"
+    calibration: Optional[str]        # digest of the calibration data +
+                                      # calibrator method, or None for
+                                      # uncalibrated programs
+    variant: str = ""                 # e.g. "scheduled" / "sequential" /
+                                      # "scheduled:prefill"
 
 
 class ProgramCache:
@@ -89,6 +94,12 @@ class ProgramCache:
                 return default
             self._store.move_to_end(key)
             return self._store[key]
+
+    def peek(self, key: Hashable, default=None):
+        """Non-refreshing lookup for stats/introspection: touches neither
+        recency nor counters, so monitoring cannot perturb eviction order."""
+        with self._lock:
+            return self._store.get(key, default)
 
     def put(self, key: Hashable, value: Any) -> None:
         evicted = []

@@ -150,7 +150,9 @@ def conv2d_pe(x, w, bias: Optional[jax.Array],
               cfg: EngineConfig, out_dtype=jnp.float32,
               out_scale: Optional[float] = None) -> jax.Array:
     """Standard conv: x [N,H,W,IC] float or QTensor (static int8 activations
-    with a per-tensor scale); w [k,k,IC,OC] float or QTensor.
+    with a per-tensor scale); w [k,k,IC,OC] float or QTensor, or the
+    compile-time-folded GEMM layout [k*k*IC, OC]
+    (passes.fold_weight_layouts).
 
     Float x under a quant mode quantizes activations dynamically per-image;
     QTensor x skips that round-trip (the compiled engine-program path).  The
@@ -165,8 +167,21 @@ def conv2d_pe(x, w, bias: Optional[jax.Array],
         static = False
     xv = x.q if static else x
     wq = w.q if isinstance(w, QTensor) else w
-    k = wq.shape[0]
-    ic, oc = wq.shape[2], wq.shape[3]
+    ic = xv.shape[-1]
+    if wq.ndim == 2:
+        # Pre-laid-out GEMM weights [k*k*IC, OC] (passes.fold_weight_layouts
+        # ran the im2col reshape at compile time); recover the window size.
+        oc = wq.shape[1]
+        k = round((wq.shape[0] // ic) ** 0.5)
+        if k * k * ic != wq.shape[0]:
+            raise ValueError(
+                f"folded conv weight K={wq.shape[0]} does not factor as "
+                f"k*k*IC for IC={ic}")
+        wmat = wq
+    else:
+        k = wq.shape[0]
+        oc = wq.shape[3]
+        wmat = wq.reshape(k * k * ic, oc)
     if padding == "SAME":
         ph = _same_pad(xv.shape[1], k, stride)
         pw = _same_pad(xv.shape[2], k, stride)
@@ -184,7 +199,6 @@ def conv2d_pe(x, w, bias: Optional[jax.Array],
                 (1, stride, stride, 1))
             patches.append(xs)
     col = jnp.concatenate(patches, axis=-1).reshape(n * ho * wo, k * k * ic)
-    wmat = wq.reshape(k * k * ic, oc)
     if isinstance(w, QTensor):
         wt = QTensor(wmat, w.scale.reshape(1, oc))
         col_in = QTensor(col, x.scale) if static else col
@@ -212,8 +226,9 @@ def dwc2d(x, w, bias: Optional[jax.Array], stride: int,
           out_dtype=jnp.float32,
           out_scale: Optional[float] = None) -> jax.Array:
     """Depthwise conv. x [N,H,W,C] float or QTensor (static int8 with a
-    per-tensor scale); w [k,k,C] float or QTensor.  out_scale requants to
-    int8 in the RACNL epilogue.
+    per-tensor scale); w [k,k,C] float or QTensor, possibly pre-padded to
+    [k,k,round_up(C,128)] by passes.fold_weight_layouts (bias and scales
+    padded alongside).  out_scale requants to int8 in the RACNL epilogue.
 
     Without the DWC engine (baseline), this runs as the paper's "low
     utilization" path: dense GEMM with a channel-diagonal weight matrix.
@@ -225,7 +240,23 @@ def dwc2d(x, w, bias: Optional[jax.Array], stride: int,
         static = False
     wq = w.q if is_q else w
     k = wq.shape[0]
-    c = wq.shape[2]
+    c = (x.q if static else x).shape[-1]
+    cw = wq.shape[2]
+    prepadded = cw != c
+    if prepadded:
+        if cw != _round_up(c, 128):
+            raise ValueError(f"dwc weight channels {cw} match neither C={c} "
+                             f"nor the 128-lane padded width")
+        if not cfg.use_dwc_engine:
+            # the dense-diagonal baseline works on true channels; un-pad
+            wq = wq[:, :, :c]
+            if is_q:
+                w = QTensor(wq, w.scale[..., :c])
+            else:
+                w = wq
+            if bias is not None:
+                bias = bias[:c]
+            prepadded = False
     if not cfg.use_dwc_engine:
         # Baseline: depthwise as dense conv with diagonalized weights
         # (one input channel per group lowered to a full GEMM -- wasteful by
@@ -271,11 +302,12 @@ def dwc2d(x, w, bias: Optional[jax.Array], stride: int,
     bc = min(128, cp)
     if cp != c:  # lane alignment: the paper's zero-padded weights
         xin = jnp.pad(xin, ((0, 0), (0, 0), (0, 0), (0, cp - c)))
-        w_in = jnp.pad(w_in, ((0, 0), (0, 0), (0, cp - c)))
-        if bias is not None:
-            bias = jnp.pad(bias, (0, cp - c))
-        if w_scale is not None:
-            w_scale = jnp.pad(w_scale, (0, cp - c))
+        if not prepadded:   # else weights/bias/scales were folded at compile
+            w_in = jnp.pad(w_in, ((0, 0), (0, 0), (0, cp - c)))
+            if bias is not None:
+                bias = jnp.pad(bias, (0, cp - c))
+            if w_scale is not None:
+                w_scale = jnp.pad(w_scale, (0, cp - c))
 
     if cfg.backend == "pallas":
         out = dwc_pe.dwc2d(xin, w_in, bias, stride, act,

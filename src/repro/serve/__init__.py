@@ -1,9 +1,13 @@
 """Serving layer: batched request engines over compiled programs.
 
+Both engines ride the shared program-serving base (serve/base.py):
+compile -> keyed ProgramCache -> jit-once -> scheduled dispatch.
+
 Import the submodules directly (this initializer stays empty so importing
 one engine never drags in the other's model stack):
 
     from repro.serve.engine import ServeEngine            # LM slot scheduler
     from repro.serve.cnn_engine import CNNServeEngine     # CNN wave scheduler
+    from repro.serve.base import ProgramServeBase         # shared pipeline
     from repro.serve.program_cache import ProgramCache
 """

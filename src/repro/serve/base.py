@@ -1,0 +1,106 @@
+"""Shared program-serving base: compile -> ProgramCache -> jit -> schedule.
+
+Both serving engines ride this pipeline (the tentpole of the unified serve
+path): `CNNServeEngine` serves registered CNN fleets as wave-batched
+programs, and the LM `ServeEngine` serves transformer prefill from the same
+kind of keyed cache.  The base owns what they share:
+
+  * the keyed LRU ProgramCache (own or injected/shared across engines),
+    keyed by (model config, EngineConfig, calibration-id, variant);
+  * the schedule variant (ASAP / ALAP leveling, or sequential);
+  * the per-program jitted-executable store, pruned against the cache so a
+    shared cache's evictions drop stale traces here too;
+  * cache statistics for the serving benchmarks.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.compiler.executor import Program, schedule_variant
+from repro.core.config import EngineConfig
+from repro.core.program_cache import ProgramCache, ProgramKey
+
+
+def calibration_digest(batches: Sequence, params=None,
+                       method: str = "absmax") -> str:
+    """Stable id of the calibration inputs.  The recorded scales depend on
+    the batches AND the float params (calibrate() runs the model) AND the
+    calibrator method, so all three are digested: re-registering a model
+    with new weights, new batches, or a different calibrator (absmax vs
+    percentile) must miss the cache, not reuse stale activation scales."""
+    h = hashlib.sha1()
+    for b in batches:
+        a = np.asarray(b)
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    if params is not None:
+        for leaf in jax.tree_util.tree_leaves(params):
+            h.update(np.asarray(leaf).tobytes())
+    digest = h.hexdigest()[:12]
+    return digest if method == "absmax" else f"{digest}:{method}"
+
+
+class ProgramServeBase:
+    """Compile-once, cache-keyed, schedule-carrying program serving."""
+
+    def __init__(self, eng: EngineConfig, cache_capacity: int = 8,
+                 scheduled: bool = True, cache: Optional[ProgramCache] = None,
+                 schedule_policy: str = "asap"):
+        self.eng = eng
+        self.scheduled = scheduled
+        self.schedule_policy = schedule_policy
+        self.cache = (ProgramCache(cache_capacity, on_evict=self._on_evict)
+                      if cache is None else cache)
+        self._jitted: Dict[object, object] = {}
+
+    # -- program cache -------------------------------------------------------
+
+    def _variant(self, tag: str = "") -> str:
+        v = schedule_variant(self.scheduled, self.schedule_policy)
+        return f"{v}:{tag}" if tag else v
+
+    def _program_key(self, model_cfg, calib_id: Optional[str],
+                     tag: str = "") -> ProgramKey:
+        return ProgramKey(model_cfg, self.eng, calib_id, self._variant(tag))
+
+    def _cached_program(self, key: ProgramKey,
+                        compile_fn: Callable[[], Program]) -> Program:
+        """Cache hit, or compile-and-insert (counts hits/misses)."""
+        return self.cache.get_or_compile(key, compile_fn)
+
+    def _on_evict(self, key, program) -> None:
+        self._jitted.pop(key, None)   # drop the evicted program's trace too
+
+    # -- jitted executables --------------------------------------------------
+
+    def _jitted_for(self, key, program: Program,
+                    build: Callable[[Program], Callable]):
+        """The program's jitted executable, traced once per cached program.
+
+        A shared/injected cache evicts without calling this engine's
+        _on_evict; prune traces for programs it no longer holds on every
+        call (not just local misses) so the jit store stays bounded by the
+        cache even when this engine's own working set is stable."""
+        self._jitted = {k: f for k, f in self._jitted.items()
+                        if k in self.cache}
+        fn = self._jitted.get(key)
+        if fn is None or fn[0] is not program:
+            fn = (program, build(program))
+            self._jitted[key] = fn
+        return fn[1]
+
+    # -- stats ---------------------------------------------------------------
+
+    def cache_stats(self) -> Dict[str, object]:
+        c = self.cache.stats
+        return {
+            "cache_hits": c.hits,
+            "cache_misses": c.misses,
+            "cache_evictions": c.evictions,
+            "cache_hit_rate": c.hit_rate,
+            "programs_cached": len(self.cache),
+        }

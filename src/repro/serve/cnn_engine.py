@@ -1,8 +1,9 @@
 """CNN serving engine: cached programs + wave batching + concurrent PEs.
 
-The CNN counterpart of serve/engine.py's ServeEngine (which slots LM
-requests into a fixed decode batch).  One engine serves many registered
-CNNs on one fabric (the f-CNNx setting):
+The CNN instance of the shared program-serving pipeline (serve/base.py);
+the LM `ServeEngine` (serve/engine.py) rides the same base for transformer
+prefill.  One engine serves many registered CNNs on one fabric (the f-CNNx
+setting):
 
   * compile  -- each (model, engine, calibration) triple lowers once to a
     static-int8 (or dynamic) engine program;
@@ -12,8 +13,13 @@ CNNs on one fabric (the f-CNNx setting):
     and flush as fixed-size waves per model (pad-and-mask: the wave shape
     is static, so each program JITs exactly once);
   * schedule -- the programs carry the level schedule from
-    compiler/schedule.py, so execution dispatches independent ops (a DWC
-    branch next to a Conv branch, MISC alongside Conv) per concurrent wave.
+    compiler/schedule.py (ASAP or ALAP), so execution dispatches
+    independent ops (a DWC branch next to a Conv branch, MISC alongside
+    Conv) per concurrent wave;
+  * fold     -- the first time a model's program is bound, its weight
+    layout transforms (im2col reshape, DWC lane padding) are constant-
+    folded into the param tree (passes.fold_weight_layouts), so traced
+    programs stop re-laying-out weights per call.
 
 Usage (examples/serve_cnn_int8.py is the runnable version):
 
@@ -27,7 +33,6 @@ Usage (examples/serve_cnn_int8.py is the runnable version):
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -38,23 +43,10 @@ from repro import compiler
 from repro.compiler.executor import Program
 from repro.core import engine as eng_lib
 from repro.core.config import CNNConfig, EngineConfig
-from repro.serve.program_cache import ProgramCache, ProgramKey
+from repro.serve.base import ProgramServeBase, calibration_digest
+from repro.serve.program_cache import ProgramCache
 
-
-def calibration_digest(batches: Sequence[jax.Array], params=None) -> str:
-    """Stable id of the calibration inputs.  The recorded scales depend on
-    the batches AND the float params (calibrate() runs the model), so both
-    are digested: re-registering a model with new weights but the same
-    batches must miss the cache, not reuse stale activation scales."""
-    h = hashlib.sha1()
-    for b in batches:
-        a = np.asarray(b)
-        h.update(str(a.shape).encode())
-        h.update(a.tobytes())
-    if params is not None:
-        for leaf in jax.tree_util.tree_leaves(params):
-            h.update(np.asarray(leaf).tobytes())
-    return h.hexdigest()[:12]
+__all__ = ["CNNServeEngine", "calibration_digest"]
 
 
 @dataclasses.dataclass
@@ -64,6 +56,8 @@ class _Model:
     qparams: object                   # engine-quantized tree (execution)
     calib_batches: Optional[List[jax.Array]]
     calib_id: Optional[str]
+    calibrator: str = "absmax"
+    folded: Optional[Tuple[Program, object]] = None   # layout-folded qparams
 
 
 @dataclasses.dataclass
@@ -78,22 +72,21 @@ class WaveStats:
         return self.requests / slots if slots else 0.0
 
 
-class CNNServeEngine:
+class CNNServeEngine(ProgramServeBase):
     """Serve registered CNNs as cached, batched, scheduled engine programs."""
 
     def __init__(self, eng: EngineConfig, wave_size: int = 4,
                  cache_capacity: int = 8, scheduled: bool = True,
-                 cache: Optional[ProgramCache] = None):
+                 cache: Optional[ProgramCache] = None,
+                 schedule_policy: str = "asap"):
         if wave_size < 1:
             raise ValueError("wave_size must be >= 1")
-        self.eng = eng
+        super().__init__(eng, cache_capacity=cache_capacity,
+                         scheduled=scheduled, cache=cache,
+                         schedule_policy=schedule_policy)
         self.wave_size = wave_size
-        self.scheduled = scheduled
-        self.cache = (ProgramCache(cache_capacity, on_evict=self._on_evict)
-                      if cache is None else cache)
         self.wave_stats = WaveStats()
         self._models: Dict[str, _Model] = {}
-        self._jitted: Dict[object, object] = {}
         self._queue: List[Tuple[int, str, np.ndarray]] = []
         self._next_ticket = 0
 
@@ -101,20 +94,23 @@ class CNNServeEngine:
 
     def register(self, cfg: CNNConfig, params,
                  calib_batches: Optional[Sequence[jax.Array]] = None,
-                 calib_id: Optional[str] = None) -> str:
+                 calib_id: Optional[str] = None,
+                 calibrator: str = "absmax") -> str:
         """Register a model under cfg.name.  `params` is the FLOAT tree;
         weights are engine-quantized here, and `calib_batches` (when given
-        and the engine is quantized) select the static-int8 program.  The
-        program itself compiles lazily on first request."""
+        and the engine is quantized) select the static-int8 program under
+        the chosen `calibrator` ("absmax" or a percentile like "p99.9" --
+        part of the calibration-id, so the two never share a cache entry).
+        The program itself compiles lazily on first request."""
         batches = list(calib_batches) if calib_batches is not None else None
         if self.eng.quant == "none":
             batches = None            # float fabric: dynamic program only
         if batches is not None and calib_id is None:
-            calib_id = calibration_digest(batches, params)
+            calib_id = calibration_digest(batches, params, calibrator)
         self._models[cfg.name] = _Model(
             cfg=cfg, params=params,
             qparams=eng_lib.quantize_params(params, self.eng),
-            calib_batches=batches, calib_id=calib_id)
+            calib_batches=batches, calib_id=calib_id, calibrator=calibrator)
         return cfg.name
 
     def models(self) -> List[str]:
@@ -122,45 +118,42 @@ class CNNServeEngine:
 
     # -- program cache -------------------------------------------------------
 
-    def _key(self, m: _Model) -> ProgramKey:
-        return ProgramKey(m.cfg, self.eng, m.calib_id,
-                          "scheduled" if self.scheduled else "sequential")
+    def _key(self, m: _Model):
+        return self._program_key(m.cfg, m.calib_id)
 
     def _compile(self, m: _Model) -> Program:
         if m.calib_batches is None:
-            return compiler.compile_cnn(m.cfg, scheduled=self.scheduled)
-        return compiler.compile_calibrated(m.cfg, m.params, m.calib_batches,
-                                           scheduled=self.scheduled)
+            return compiler.compile_cnn(m.cfg, scheduled=self.scheduled,
+                                        policy=self.schedule_policy)
+        return compiler.compile_calibrated(
+            m.cfg, m.params, m.calib_batches, scheduled=self.scheduled,
+            policy=self.schedule_policy, method=m.calibrator)
 
     def program_for(self, name: str) -> Program:
         """The model's compiled program: cache hit, or compile-and-insert."""
         m = self._models[name]
-        return self.cache.get_or_compile(self._key(m),
-                                         lambda: self._compile(m))
-
-    def _on_evict(self, key, program) -> None:
-        self._jitted.pop(key, None)   # drop the evicted program's trace too
+        return self._cached_program(self._key(m), lambda: self._compile(m))
 
     def _executor_for(self, name: str):
         """A jitted batched execute for the model's program.  The wave shape
         is fixed ([wave_size, H, W, C]), so each cached program traces once;
         eviction drops the trace alongside the program."""
         m = self._models[name]
-        key = self._key(m)
         program = self.program_for(name)
-        # a shared/injected cache evicts without calling this engine's
-        # _on_evict; prune traces for programs it no longer holds on every
-        # call (not just local misses) so the jit store stays bounded by
-        # the cache even when this engine's own working set is stable
-        self._jitted = {k: f for k, f in self._jitted.items()
-                        if k in self.cache}
-        fn = self._jitted.get(key)
-        if fn is None or fn[0] is not program:
-            run = jax.jit(
-                lambda p, im: compiler.execute(program, p, im, self.eng))
-            fn = (program, run)
-            self._jitted[key] = fn
-        return fn[1]
+        run = self._jitted_for(
+            self._key(m), program,
+            lambda prog: jax.jit(
+                lambda p, im: compiler.execute(prog, p, im, self.eng)))
+        return run, self._exec_params(m, program)
+
+    def _exec_params(self, m: _Model, program: Program):
+        """The model's execution param tree with weight layouts folded at
+        compile time (im2col reshape, DWC lane padding) -- computed once per
+        (model, program) binding."""
+        if m.folded is None or m.folded[0] is not program:
+            m.folded = (program, compiler.fold_weight_layouts(
+                program.graph, m.qparams))
+        return m.folded[1]
 
     # -- request batching ----------------------------------------------------
 
@@ -200,8 +193,7 @@ class CNNServeEngine:
         self._queue.clear()
         results: Dict[int, np.ndarray] = {}
         for name, items in by_model.items():
-            run = self._executor_for(name)
-            qparams = self._models[name].qparams
+            run, qparams = self._executor_for(name)
             for start in range(0, len(items), self.wave_size):
                 wave_items = items[start:start + self.wave_size]
                 n = len(wave_items)
@@ -228,16 +220,12 @@ class CNNServeEngine:
     # -- stats ---------------------------------------------------------------
 
     def stats(self) -> Dict[str, object]:
-        c = self.cache.stats
-        return {
-            "models": len(self._models),
-            "cache_hits": c.hits,
-            "cache_misses": c.misses,
-            "cache_evictions": c.evictions,
-            "cache_hit_rate": c.hit_rate,
-            "programs_cached": len(self.cache),
+        out = {"models": len(self._models)}
+        out.update(self.cache_stats())
+        out.update({
             "waves": self.wave_stats.waves,
             "requests": self.wave_stats.requests,
             "padded_slots": self.wave_stats.padded,
             "wave_occupancy": self.wave_stats.occupancy,
-        }
+        })
+        return out

@@ -4,23 +4,41 @@ This is the small-scale executable counterpart of launch/build.build_serve
 (which produces the production-mesh programs).  ServeEngine runs real tokens
 on the local device(s): quantize -> prefill -> decode loop, with batching of
 incoming requests into fixed slots (a static-batch continuous-batching
-scheduler: finished slots are refilled between decode bursts)."""
+scheduler: finished slots are refilled between decode bursts).
+
+Prefill rides the unified serve path (serve/base.py): the transformer
+lowers through the model-agnostic engine IR (compiler.lower_transformer)
+into a program cached in the keyed ProgramCache -- the same
+compile -> cache -> schedule pipeline CNNServeEngine uses -- keyed by
+(ArchConfig, EngineConfig, calibration-id).  With calibration token batches
+and a w8a8 engine the program is static-int8: every projection GEMM
+consumes activations pre-quantized at compile-time scales instead of
+re-quantizing per token.  The compiled program also fills the decode KV
+cache (each AttnOp deposits its roped-k/v pair), so one program replaces
+`T.prefill`.  Decode, SSM/MoE mixers, and the audio encoder-decoder stay on
+the eager path.
+"""
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compiler
+from repro.compiler import executor as ex
 from repro.core import engine as eng_lib
 from repro.core.config import ArchConfig, EngineConfig
 from repro.models import params as prm
 from repro.models import transformer as T
 from repro.models import whisper as W
 from repro.models.params import is_spec
+from repro.serve.base import ProgramServeBase, calibration_digest
+from repro.serve.program_cache import ProgramCache
 
 
 @dataclasses.dataclass
@@ -30,15 +48,38 @@ class Request:
     out_tokens: Optional[list] = None
 
 
-class ServeEngine:
+class ServeEngine(ProgramServeBase):
     def __init__(self, arch: ArchConfig, params, eng: EngineConfig,
-                 batch_size: int = 4, max_seq: int = 256):
-        self.arch, self.eng = arch, eng
+                 batch_size: int = 4, max_seq: int = 256,
+                 calib_batches: Optional[Sequence] = None,
+                 calibrator: str = "absmax",
+                 cache: Optional[ProgramCache] = None,
+                 cache_capacity: int = 4, scheduled: bool = True,
+                 schedule_policy: str = "asap",
+                 compile_prefill: bool = True):
+        super().__init__(eng, cache_capacity=cache_capacity,
+                         scheduled=scheduled, cache=cache,
+                         schedule_policy=schedule_policy)
+        self.arch = arch
         self.batch, self.max_seq = batch_size, max_seq
+        self._float_params = params
         self.params = eng_lib.quantize_params(params, eng)
         self.is_audio = arch.family == "audio"
         mod = W if self.is_audio else T
         self.mod = mod
+        # Prefill compiles through the engine IR when the arch lowers;
+        # SSM / MoE / audio archs fall back to the eager path.
+        self.compiled = (compile_prefill and not self.is_audio
+                         and compiler.can_lower(arch))
+        # calibration only feeds the compiled static program; skip the
+        # (whole-param-tree) digest when prefill stays eager
+        batches = (list(calib_batches)
+                   if calib_batches is not None and eng.quant == "w8a8"
+                   and self.compiled else None)
+        self.calib_batches = batches
+        self.calib_id = (calibration_digest(batches, params, calibrator)
+                         if batches is not None else None)
+        self.calibrator = calibrator
 
         def _prefill(params, cache, batch):
             return mod.prefill(params, cache, batch, arch, eng)
@@ -48,6 +89,61 @@ class ServeEngine:
 
         self.jprefill = jax.jit(_prefill, donate_argnums=(1,))
         self.jdecode = jax.jit(_decode, donate_argnums=(1,))
+
+    # -- compiled prefill (the unified serve path) ---------------------------
+
+    def _prefill_key(self):
+        return self._program_key(self.arch, self.calib_id, tag="prefill")
+
+    def _compile_prefill(self) -> ex.Program:
+        if self.calib_batches is None:
+            return compiler.compile_lm(self.arch, scheduled=self.scheduled,
+                                       policy=self.schedule_policy,
+                                       prefill=True)
+        return compiler.compile_lm_calibrated(
+            self.arch, self._float_params, self.calib_batches,
+            scheduled=self.scheduled, policy=self.schedule_policy,
+            method=self.calibrator, prefill=True)
+
+    def prefill_program(self) -> ex.Program:
+        """The compiled prefill program: ProgramCache hit, or compile."""
+        return self._cached_program(self._prefill_key(),
+                                    self._compile_prefill)
+
+    def _run_program_prefill(self, program: ex.Program, params, cache,
+                             batch):
+        """Execute the prefill program and write the collected per-layer
+        (k, v) pairs into the decode cache -- the compiled counterpart of
+        `T.prefill` (bit-identical cache layout)."""
+        tokens = batch["tokens"]
+        kvs: Dict[int, tuple] = {}
+        logits = ex.execute(program, params, tokens, self.eng, collect=kvs)
+        new_layers = []
+        for i in range(self.arch.n_layers):
+            entry = cache["layers"][i]
+            k, v = kvs[i]
+            if self.arch.layer_kind(i) == "local":
+                w = entry["k"].shape[1]
+                entry = T._kv_store(entry, k[:, -w:], v[:, -w:], 0, self.eng)
+            else:
+                entry = T._kv_store(entry, k, v, 0, self.eng)
+            new_layers.append(entry)
+        return logits, {"layers": new_layers,
+                        "pos": jnp.asarray(tokens.shape[1], jnp.int32)}
+
+    def _prefill_exec(self):
+        """The jitted prefill executable: the eager path, or the cached
+        program's (traced once per cached program; stats accrue per call)."""
+        if not self.compiled:
+            return self.jprefill
+        program = self.prefill_program()
+        return self._jitted_for(
+            self._prefill_key(), program,
+            lambda prog: jax.jit(
+                functools.partial(self._run_program_prefill, prog),
+                donate_argnums=(1,)))
+
+    # -- generation ----------------------------------------------------------
 
     def _empty_cache(self):
         if self.is_audio:
@@ -77,7 +173,7 @@ class ServeEngine:
                       np.zeros((self.batch, self.arch.encoder_seq,
                                 self.arch.d_model), np.float32))
                 batch["enc_embeds"] = jnp.asarray(ee[:self.batch])
-            logits, cache = self.jprefill(self.params, cache, batch)
+            logits, cache = self._prefill_exec()(self.params, cache, batch)
             seqs = [[] for _ in range(n)]
             cur = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
             for step in range(max_new_tokens):
@@ -86,6 +182,20 @@ class ServeEngine:
                 logits, cache = self.jdecode(self.params, cache, cur)
                 cur = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
             out.extend(np.asarray(s, np.int32) for s in seqs)
+        return out
+
+    # -- stats ---------------------------------------------------------------
+
+    def stats(self) -> Dict[str, object]:
+        out = {"arch": self.arch.name, "compiled_prefill": self.compiled}
+        out.update(self.cache_stats())
+        if self.compiled:
+            program = self.cache.peek(self._prefill_key())
+            if program is not None and program.schedule is not None:
+                out["prefill_levels"] = program.schedule.n_levels
+                occ = compiler.engine_occupancy(program.graph,
+                                                program.schedule)
+                out["prefill_occupancy"] = occ["occupancy"]
         return out
 
 

@@ -173,6 +173,21 @@ class TestProgramCaching:
         # the plans genuinely differ: different weights -> different scales
         assert p1.plan.out_scale != p2.plan.out_scale
 
+    def test_miss_on_calibrator_method_change(self):
+        """absmax and percentile calibrations are distinct cache entries:
+        the calibrator method is part of the calibration-id."""
+        cfg, params = _model("squeezenet")
+        engine = CNNServeEngine(W8, wave_size=2)
+        engine.register(cfg, params, calib_batches=_calib())
+        p1 = engine.program_for(cfg.name)
+        engine.register(cfg, params, calib_batches=_calib(),
+                        calibrator="p99.9")
+        p2 = engine.program_for(cfg.name)
+        assert p2 is not p1
+        assert engine.cache.stats.misses == 2
+        assert calibration_digest(_calib(), params) != \
+            calibration_digest(_calib(), params, "p99.9")
+
     def test_lru_eviction_respects_capacity(self):
         """capacity=2 with 3 models: the least-recently-used program is
         evicted, and revisiting it recompiles."""

@@ -248,6 +248,100 @@ class TestStaticProgram:
 
 
 # ---------------------------------------------------------------------------
+# Compile-time weight-layout folding (im2col reshape, DWC lane padding)
+# ---------------------------------------------------------------------------
+
+class TestWeightLayoutFolding:
+    def test_conv_weights_prelaid_and_dwc_padded(self):
+        cfg, params, x = _setup("mobilenetv2")
+        eng = EngineConfig(quant="w8a8", backend="ref")
+        qparams = eng_lib.quantize_params(params, eng)
+        g = compiler.build_graph(cfg)
+        folded = passes.fold_weight_layouts(g, qparams)
+        for n in g.nodes:
+            if isinstance(n, ConvOp) and not n.first_layer:
+                w = compiler.get_param(folded, n.w)
+                assert w.q.ndim == 2              # im2col GEMM layout
+                assert w.scale.shape[0] == 1
+            elif isinstance(n, ConvOp):
+                assert compiler.get_param(folded, n.w).q.ndim == 4  # stem
+            elif isinstance(n, DwcOp):
+                w = compiler.get_param(folded, n.w)
+                assert w.q.shape[2] % 128 == 0    # lane-aligned
+                b = compiler.get_param(folded, n.b)
+                assert b.shape[0] == w.q.shape[2]
+        # untouched leaves are shared, not copied
+        assert compiler.get_param(folded, ("stem_w",)) is \
+            compiler.get_param(qparams, ("stem_w",))
+
+    @pytest.mark.parametrize("name", ["mobilenetv2", "resnet50"])
+    def test_folded_execution_bit_identical(self, name):
+        """Reshape and zero-padding do not touch values: the folded tree
+        executes bit-identically, static and dynamic, ref and pallas."""
+        cfg, params, x = _setup(name)
+        eng = EngineConfig(quant="w8a8", backend="ref")
+        qparams = eng_lib.quantize_params(params, eng)
+        prog = compiler.compile_calibrated(cfg, params, [x])
+        folded = passes.fold_weight_layouts(prog.graph, qparams)
+        a = np.array(compiler.execute(prog, qparams, x, eng))
+        b = np.array(compiler.execute(prog, folded, x, eng))
+        np.testing.assert_array_equal(a, b)
+        engp = EngineConfig(quant="w8a8", backend="pallas", interpret=True)
+        ap = np.array(compiler.execute(prog, qparams, x, engp))
+        bp = np.array(compiler.execute(prog, folded, x, engp))
+        np.testing.assert_array_equal(ap, bp)
+
+    def test_folded_float_and_dynamic_paths(self):
+        cfg, params, x = _setup("mobilenetv1")
+        eng = EngineConfig(quant="none", backend="ref")
+        prog = compiler.compile_cnn(cfg)
+        folded = passes.fold_weight_layouts(prog.graph, params)
+        a = np.array(compiler.execute(prog, params, x, eng))
+        b = np.array(compiler.execute(prog, folded, x, eng))
+        np.testing.assert_array_equal(a, b)
+
+    def test_folding_idempotent(self):
+        cfg, params, x = _setup("mobilenetv2")
+        g = compiler.build_graph(cfg)
+        once = passes.fold_weight_layouts(g, params)
+        twice = passes.fold_weight_layouts(g, once)
+        for a, b in zip(jax.tree_util.tree_leaves(once),
+                        jax.tree_util.tree_leaves(twice)):
+            assert a is b
+
+    def test_baseline_engine_unfolds_dwc(self):
+        """The dense-diagonal DWC baseline works on true channels: folded
+        (pre-padded) weights still execute correctly there."""
+        cfg, params, x = _setup("mobilenetv1")
+        eng = eng_lib.baseline_engine()
+        qparams = eng_lib.quantize_params(params, eng)
+        prog = compiler.compile_calibrated(cfg, params, [x])
+        folded = passes.fold_weight_layouts(prog.graph, qparams)
+        a = np.array(compiler.execute(prog, qparams, x, eng))
+        b = np.array(compiler.execute(prog, folded, x, eng))
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+    def test_serving_engine_folds_transparently(self):
+        """CNNServeEngine binds folded params: results match the jitted
+        unfolded program execution bitwise (jit-vs-jit, since XLA's fusion
+        can flip requant-boundary rounding against the eager run)."""
+        from repro.serve.cnn_engine import CNNServeEngine
+        cfg, params, x = _setup("mobilenetv2")
+        eng = EngineConfig(quant="w8a8", backend="ref")
+        engine = CNNServeEngine(eng, wave_size=2)
+        engine.register(cfg, params, calib_batches=[x])
+        imgs = np.asarray(x)
+        got = engine.infer(cfg.name, imgs)
+        prog = engine.program_for(cfg.name)
+        qparams = eng_lib.quantize_params(params, eng)
+        want = np.array(jax.jit(
+            lambda p, im: compiler.execute(prog, p, im, eng))(qparams, x))
+        np.testing.assert_array_equal(got, want)
+        m = engine._models[cfg.name]
+        assert m.folded is not None and m.folded[0] is prog
+
+
+# ---------------------------------------------------------------------------
 # Golden dynamic-vs-static parity across the whole zoo, on both backends
 # ---------------------------------------------------------------------------
 

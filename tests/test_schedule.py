@@ -60,6 +60,32 @@ def _setup(cfg: CNNConfig, batch: int = 1):
 # Structural properties of the leveling
 # ---------------------------------------------------------------------------
 
+def _assert_valid_leveling(g, s):
+    # coverage: each node exactly once
+    flat = list(s.order())
+    assert sorted(flat) == [n.id for n in g.nodes]
+    assert len(flat) == len(set(flat))
+    # leveling: strict precedence of inputs
+    level_of = {i: k for k, lv in enumerate(s.levels) for i in lv}
+    for n in g.nodes:
+        for i in n.inputs:
+            assert level_of[i] < level_of[n.id], (n.id, i)
+    # no empty levels, and the validator agrees
+    assert all(len(lv) > 0 for lv in s.levels)
+    compiler.validate_schedule(g, s)
+
+
+def _random_arch(n_layers, post_norms, gated, tied):
+    """A tiny attention ArchConfig for the mixed CNN/LM property draws."""
+    from repro.core.config import ArchConfig
+    return ArchConfig(
+        name=f"prop_lm_{n_layers}_{int(post_norms)}_{int(gated)}_{int(tied)}",
+        family="dense", n_layers=n_layers, d_model=32, n_heads=2,
+        n_kv_heads=1, d_ff=64, vocab_size=64, head_dim=16,
+        block_pattern=("global", "local"), local_window=8,
+        post_norms=post_norms, mlp_gated=gated, tie_embeddings=tied)
+
+
 class TestLevelingProperties:
     @settings(deadline=None)
     @given(kinds=st.lists(st.sampled_from(KINDS), min_size=1, max_size=4),
@@ -69,21 +95,56 @@ class TestLevelingProperties:
     def test_schedule_is_valid_topological_leveling(self, kinds, stem_ch,
                                                     out_ch, stride):
         """Every op's inputs land in strictly earlier levels, and the levels
-        cover every node exactly once."""
+        cover every node exactly once -- for both leveling policies."""
         g = compiler.build_graph(_random_cfg(kinds, stem_ch, out_ch, stride))
-        s = compiler.level_schedule(g)
-        # coverage: each node exactly once
-        flat = list(s.order())
-        assert sorted(flat) == [n.id for n in g.nodes]
-        assert len(flat) == len(set(flat))
-        # leveling: strict precedence of inputs
-        level_of = {i: k for k, lv in enumerate(s.levels) for i in lv}
-        for n in g.nodes:
-            for i in n.inputs:
-                assert level_of[i] < level_of[n.id], (n.id, i)
-        # no empty levels, and the validator agrees
-        assert all(len(lv) > 0 for lv in s.levels)
-        compiler.validate_schedule(g, s)
+        for policy in ("asap", "alap"):
+            _assert_valid_leveling(g, compiler.level_schedule(g, policy))
+
+    @settings(deadline=None)
+    @given(kinds=st.lists(st.sampled_from(KINDS), min_size=1, max_size=3),
+           n_layers=st.sampled_from([1, 2]),
+           post_norms=st.sampled_from([False, True]),
+           gated=st.sampled_from([False, True]),
+           tied=st.sampled_from([False, True]))
+    def test_mixed_cnn_lm_graphs_level(self, kinds, n_layers, post_norms,
+                                       gated, tied):
+        """Mixed fleets: CNN and LM graphs drawn together both produce valid
+        topological levelings under both policies, and every node maps to an
+        engine unit."""
+        graphs = [
+            compiler.build_graph(_random_cfg(kinds, 4, 8, 1)),
+            compiler.lower_transformer(
+                _random_arch(n_layers, post_norms, gated, tied)),
+        ]
+        for g in graphs:
+            for n in g.nodes:
+                assert compiler.engine_unit(n) in (
+                    sched_lib.CONV_PE, sched_lib.DWC_PE, sched_lib.MISC,
+                    sched_lib.LOW_CHANNEL, sched_lib.MEM)
+            for policy in ("asap", "alap"):
+                s = compiler.level_schedule(g, policy)
+                _assert_valid_leveling(g, s)
+                occ = compiler.engine_occupancy(g, s)
+                assert 0 < occ["occupancy"] <= 1
+
+    def test_alap_within_critical_path(self):
+        """ALAP keeps the critical-path level count and only slides slack
+        ops later (every node's ALAP level >= its ASAP level)."""
+        for name in ("squeezenet", "resnet50"):
+            g = compiler.build_graph(CNN_ZOO[name])
+            a = compiler.level_schedule(g, "asap")
+            z = compiler.level_schedule(g, "alap")
+            assert z.n_levels == a.n_levels
+            asap_of = {i: k for k, lv in enumerate(a.levels) for i in lv}
+            alap_of = {i: k for k, lv in enumerate(z.levels) for i in lv}
+            assert all(alap_of[i] >= asap_of[i] for i in asap_of)
+            if name == "resnet50":            # bottleneck skip convs slide
+                assert any(alap_of[i] > asap_of[i] for i in asap_of)
+
+    def test_unknown_policy_rejected(self):
+        g = compiler.build_graph(CNN_ZOO["squeezenet"])
+        with pytest.raises(ValueError, match="policy"):
+            compiler.level_schedule(g, "greedy")
 
     @settings(deadline=None)
     @given(kinds=st.lists(st.sampled_from(KINDS), min_size=1, max_size=4),
@@ -202,6 +263,39 @@ class TestScheduledExecutionParity:
         jb = np.array(jax.jit(
             lambda p, im: compiler.execute(seq, p, im, eng))(qparams, x))
         np.testing.assert_array_equal(ja, jb)
+
+    def test_alap_bit_identical_to_sequential(self):
+        """The ALAP leveling dispatches the same ops with the same inputs:
+        static w8a8 execution matches sequential bitwise (resnet50 has real
+        slack, so ALAP genuinely reorders waves)."""
+        cfg = dataclasses.replace(CNN_ZOO["resnet50"], input_hw=32)
+        params, x = _setup(cfg)
+        eng = EngineConfig(quant="w8a8", backend="ref")
+        qparams = eng_lib.quantize_params(params, eng)
+        prog = compiler.compile_calibrated(cfg, params, [x], policy="alap")
+        assert prog.schedule is not None
+        a = np.array(compiler.execute(prog, qparams, x, eng))
+        b = np.array(compiler.execute(_strip_schedule(prog), qparams, x, eng))
+        np.testing.assert_array_equal(a, b)
+
+    def test_lm_scheduled_bit_identical(self):
+        """LM programs through the same parity harness: scheduled dispatch
+        (both policies) equals sequential execution bitwise."""
+        from repro import configs
+        from repro.models import transformer as T
+        from repro.models.params import init_params
+
+        arch = configs.reduced(configs.get_arch("qwen2-1.5b"))
+        params = init_params(T.lm_schema(arch), jax.random.PRNGKey(0))
+        toks = jnp.asarray(np.random.default_rng(0).integers(
+            0, arch.vocab_size, (2, 10)).astype(np.int32))
+        eng = EngineConfig(quant="none", backend="ref")
+        for policy in ("asap", "alap"):
+            prog = compiler.compile_lm(arch, policy=policy)
+            seq = compiler.compile_lm(arch, scheduled=False)
+            a = np.array(compiler.execute(prog, params, toks, eng))
+            b = np.array(compiler.execute(seq, params, toks, eng))
+            np.testing.assert_array_equal(a, b)
 
     def test_calibration_identical_under_scheduling(self):
         """The observer hook sees the same tensors whichever dispatch order
