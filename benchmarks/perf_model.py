@@ -224,6 +224,82 @@ def modeled_fps_pipelined(cfg: CNNConfig, eng: EngineModel) -> float:
     return 1.0 / model_overlap_time(cfg, eng)
 
 
+# ---------------------------------------------------------------------------
+# LM program node times (time-weighted busy fractions for serve_lm)
+# ---------------------------------------------------------------------------
+
+PEAK_F32_VPU = PEAK_VPU / 4            # f32 VPU ops/s (MISC float domain)
+
+
+def _gemm_time(m: int, k: int, n: int, act_bytes: int = 1) -> float:
+    """One int8 Conv-PE GEMM: [m, k] @ [k, n]."""
+    ops = 2.0 * m * k * n
+    util = max(dse.mxu_utilization(min(k, 128), min(n, 128)), 1e-3)
+    byts = m * k * act_bytes + k * n + m * n * act_bytes
+    return max(ops / (PEAK_INT8 * util), byts / HBM)
+
+
+def _eltwise_f32_time(elems: int, n_in: int = 1) -> float:
+    """A MISC-core f32 elementwise pass: n_in reads + 1 write."""
+    return (n_in + 1) * elems * 4 / HBM
+
+
+def lm_node_times(graph, arch, batch: int, seq: int,
+                  cache_len: int = 0) -> dict:
+    """Modeled seconds per op of an LM program graph.
+
+    `seq` is the query length (1 for a DecodeStep program); `cache_len` the
+    KV span attention reads (the cache size for decode, else `seq`).  Feeds
+    compiler.time_weighted_occupancy: per-engine busy fractions weighted by
+    modeled time, not per-level presence -- the ROADMAP's missing LM cost
+    model.  Linear dims come from the param-path suffix the lowering wrote
+    (wq/wk/wv/wo/wg/wu/wd), so the same walk prices prefill and decode.
+    """
+    from repro.compiler import graph as G
+
+    d, ff, v = arch.d_model, arch.d_ff, arch.vocab_size
+    nh, nkv, hd = arch.n_heads, arch.n_kv_heads, arch.head_dim
+    span = cache_len if cache_len else seq
+    m = batch * seq
+    dims = {"wq": (d, nh * hd), "wk": (d, nkv * hd), "wv": (d, nkv * hd),
+            "wo": (nh * hd, d), "wg": (d, ff), "wu": (d, ff), "wd": (ff, d)}
+    out: dict = {}
+    for n in graph.nodes:
+        if isinstance(n, G.LinearOp):
+            kn = dims.get(n.w[-1] if n.w else "", (d, d))
+            out[n.id] = _gemm_time(m, *kn)
+        elif isinstance(n, G.HeadOp):
+            rows = batch * (1 if n.last_only else seq)
+            out[n.id] = _gemm_time(rows, d, v, act_bytes=4)
+        elif isinstance(n, G.AttnOp):
+            window = min(n.window, span) if n.window else span
+            flops = 4.0 * batch * seq * window * nh * hd    # qk + pv
+            byts = (2 * batch * window * nkv * hd * 2        # kv reads (bf16)
+                    + 3 * m * nh * hd * 4)                   # q in, ctx out
+            out[n.id] = max(flops / PEAK_F32_VPU, byts / HBM)
+        elif isinstance(n, (G.NormOp, G.MulOp, G.AddOp)):
+            out[n.id] = _eltwise_f32_time(m * d, n_in=len(n.inputs))
+        elif isinstance(n, G.EmbedOp):
+            out[n.id] = m * d * 4 / HBM                      # row gather
+        else:                                               # InputOp etc.
+            out[n.id] = 0.0
+    return out
+
+
+def lm_busy_fractions(arch, batch: int = 1, seq: int = 128,
+                      mode: str = "prefill", cache_len: int = 0,
+                      policy: str = "asap") -> dict:
+    """Time-weighted per-engine busy fractions of a compiled LM program
+    (compiler.time_weighted_occupancy over lm_node_times)."""
+    from repro import compiler
+
+    prog = compiler.compile_lm(arch, mode=mode, policy=policy)
+    qseq = 1 if mode == "decode" else seq
+    times = lm_node_times(prog.graph, arch, batch, qseq,
+                          cache_len=cache_len or seq)
+    return compiler.time_weighted_occupancy(prog.graph, prog.schedule, times)
+
+
 OURS = EngineModel()                       # compiled static-int8 pipeline
 # Same engines, but the eager dynamic-f32 pipeline: every edge round-trips
 # through f32 with a per-call requant pass (what cnn_forward without a

@@ -118,6 +118,52 @@ def serve_stats(wave_batch: bool = True, fleet=None, trace=None):
     return stats
 
 
+def fill_rate_stats(fleet=None, trace=None):
+    """Mixed-arrival trace, one request at a time, two batching policies:
+
+      * pad-and-mask baseline -- flush() after every arrival: every request
+        dispatches immediately in a mostly-empty padded wave;
+      * continuous -- pump() after every arrival: only FULL waves dispatch,
+        partial waves stay queued and REFILL from later arrivals (including
+        other same-shape models, which share the slot queue); one final
+        drain pads at most one wave per shape.
+
+    The wave fill-rate (requests / physical wave slots) is the acceptance
+    metric: continuous must meet or beat the baseline."""
+    from repro.core import engine as eng_lib
+    from repro.serve.cnn_engine import CNNServeEngine
+
+    fleet = _build_fleet() if fleet is None else fleet
+    trace = _trace() if trace is None else trace
+
+    base = CNNServeEngine(eng_lib.paper_engine(), wave_size=WAVE,
+                          cache_capacity=len(TRACE_MODELS) + 1)
+    for cfg, params, calib in fleet:
+        base.register(cfg, params, calib_batches=[calib])
+    for name, img in trace:
+        base.submit(name, img)
+        base.flush()                    # pad-and-mask per arrival
+
+    cont = CNNServeEngine(eng_lib.paper_engine(), wave_size=WAVE,
+                          cache_capacity=len(TRACE_MODELS) + 1,
+                          cache=base.cache)    # warm shared cache
+    for cfg, params, calib in fleet:
+        cont.register(cfg, params, calib_batches=[calib])
+    for name, img in trace:
+        cont.submit(name, img)
+        cont.pump()                     # full waves only; partials refill
+    cont.flush()                        # final drain
+    b, c = base.stats(), cont.stats()
+    return {
+        "baseline_fill_rate": b["wave_fill_rate"],
+        "continuous_fill_rate": c["wave_fill_rate"],
+        "baseline_waves": b["waves"],
+        "continuous_waves": c["waves"],
+        "refilled_waves": c["refilled_waves"],
+        "program_execs": c["program_execs"],
+    }
+
+
 def _measure_uncached(fleet, trace):
     """capacity=0: every request misses, recompiles, and retraces."""
     from repro.core import engine as eng_lib
@@ -158,18 +204,30 @@ def run(measure: bool = True):
             f"batched_wall={stats['wall_batched_s'] * 1e3:.1f}ms,"
             f"one_by_one_wall={stats['wall_s'] * 1e3:.1f}ms,"
             f"occupancy={stats['batched_occupancy']:.2f},wave={WAVE}"))
+        fr = fill_rate_stats(fleet=fleet, trace=trace)
+        rows.append((
+            f"serve/trace/fill_rate", 0.0,
+            f"continuous={fr['continuous_fill_rate']:.2f},"
+            f"pad_and_mask={fr['baseline_fill_rate']:.2f},"
+            f"waves={fr['continuous_waves']}vs{fr['baseline_waves']},"
+            f"refilled_waves={fr['refilled_waves']}"))
     return rows
 
 
 def summary_line() -> str:
-    stats = serve_stats(wave_batch=False)
+    fleet, trace = _build_fleet(), _trace()
+    stats = serve_stats(wave_batch=False, fleet=fleet, trace=trace)
+    fr = fill_rate_stats(fleet=fleet, trace=trace)
     return (f"program-cache hit-rate: {100 * stats['cache_hit_rate']:.1f}% "
             f"({stats['cache_hits']}/{stats['cache_hits'] + stats['cache_misses']} hits, "
             f"{stats['cache_misses']} compiles over {stats['requests']} "
             f"requests, {len(TRACE_MODELS)} models); "
             f"per-level engine occupancy "
             f"{100 * stats['engine_occupancy']:.1f}% asap / "
-            f"{100 * stats['engine_occupancy_alap']:.1f}% alap")
+            f"{100 * stats['engine_occupancy_alap']:.1f}% alap; "
+            f"wave fill-rate {100 * fr['continuous_fill_rate']:.1f}% "
+            f"continuous vs {100 * fr['baseline_fill_rate']:.1f}% "
+            f"pad-and-mask")
 
 
 if __name__ == "__main__":

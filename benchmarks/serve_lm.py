@@ -1,19 +1,27 @@
-"""LM serving through the unified program path: compiled prefill programs
-from the keyed ProgramCache, per-level engine occupancy, cache hit-rate.
+"""LM serving through the unified program path: compiled prefill + decode
+programs from the keyed ProgramCache, continuous-batching slot refill,
+per-level and time-weighted engine occupancy, cache hit-rate.
 
-Evidence lines for the model-agnostic IR (serve/engine.py + compiler):
+Evidence lines for the decode-as-program serve path (serve/engine.py +
+compiler):
 
-  * the transformer prefill of each arch compiles once to an engine
-    program; repeated serves (and a second engine sharing the cache) hit
-    the ProgramCache instead of re-lowering / re-calibrating / re-tracing;
-  * the program's level schedule exposes cross-engine concurrency (QKV
-    GEMMs co-leveled on the Conv PE next to MISC norms); per-level engine
-    occupancy is reported for both ASAP and ALAP leveling.
+  * each arch compiles TWO programs from one calibration run -- prefill and
+    the DecodeStep program -- and repeated serves (and a second engine
+    sharing the cache) hit the ProgramCache instead of re-lowering /
+    re-calibrating / re-tracing;
+  * the decode burst executes the compiled DecodeStep program: measured
+    compiled-decode vs eager-decode tokens/s, plus the continuous-batching
+    slot-refill rate and slot occupancy of a queue longer than the batch;
+  * the programs' level schedules expose cross-engine concurrency; both
+    per-level occupancy and the TIME-WEIGHTED per-engine busy fractions
+    (perf_model.lm_busy_fractions over compiler.time_weighted_occupancy)
+    are reported for prefill and decode.
 
-    PYTHONPATH=src python -m benchmarks.serve_lm [--summary]
+    PYTHONPATH=src python -m benchmarks.serve_lm [--summary|--decode-summary]
 
---summary prints the one-line LM program-cache + occupancy summary
-(scripts/check.sh appends it to the gate output).
+--summary prints the one-line LM program-cache + occupancy summary;
+--decode-summary prints the compiled-vs-eager decode throughput one-liner
+(scripts/check.sh appends both to the gate output).
 """
 import time
 
@@ -23,6 +31,8 @@ ARCH_NAMES = ("qwen2-1.5b", "gemma2-2b")
 PROMPTS = 6
 PROMPT_LEN = 8
 NEW_TOKENS = 2
+DECODE_STEPS = 8
+MAX_SEQ = 32
 
 
 def _fleet(seed=0):
@@ -48,31 +58,48 @@ def _fleet(seed=0):
 
 def serve_stats():
     """Serve each arch twice through one shared ProgramCache; return the
-    cache counters plus per-arch prefill schedule occupancy (asap + alap)."""
+    cache counters plus per-arch prefill/decode schedule occupancy (both
+    per-level and time-weighted)."""
+    from benchmarks import perf_model as pm
     from repro import compiler
     from repro.core.config import EngineConfig
     from repro.serve.engine import ServeEngine
     from repro.serve.program_cache import ProgramCache
 
     eng = EngineConfig(quant="w8a8", backend="ref")
-    cache = ProgramCache(capacity=len(ARCH_NAMES) + 1)
+    cache = ProgramCache(capacity=2 * len(ARCH_NAMES) + 1)
     rows = {}
     t0 = time.perf_counter()
     for arch, params, calib, prompts in _fleet():
-        engine = ServeEngine(arch, params, eng, batch_size=2, max_seq=32,
-                             calib_batches=calib, cache=cache)
+        engine = ServeEngine(arch, params, eng, batch_size=2,
+                             max_seq=MAX_SEQ, calib_batches=calib,
+                             cache=cache)
         engine.generate(prompts, max_new_tokens=NEW_TOKENS)   # compile+serve
         engine.generate(prompts, max_new_tokens=NEW_TOKENS)   # re-serve: hits
         program = engine.prefill_program()
+        decode = engine.decode_program()
         occ = compiler.engine_occupancy(program.graph, program.schedule)
         alap = compiler.level_schedule(program.graph, "alap")
         occ_alap = compiler.engine_occupancy(program.graph, alap)
+        tw_prefill = pm.lm_busy_fractions(arch, batch=2, seq=PROMPT_LEN)
+        tw_decode = pm.lm_busy_fractions(arch, batch=2, mode="decode",
+                                         cache_len=MAX_SEQ)
+        st = engine.stats()
         rows[arch.name] = {
             "levels": program.schedule.n_levels,
+            "decode_levels": decode.schedule.n_levels,
             "occupancy": occ["occupancy"],
             "occupancy_alap": occ_alap["occupancy"],
+            "tw_occupancy_prefill": tw_prefill["occupancy"],
+            "tw_occupancy_decode": tw_decode["occupancy"],
+            "tw_conv_pe_decode": tw_decode.get("conv_pe", 0.0),
+            "tw_misc_decode": tw_decode.get("misc", 0.0),
             "static": program.static,
+            "decode_static": decode.static,
             "f32_roundtrips": program.f32_roundtrips(),
+            "decode_f32_roundtrips": decode.f32_roundtrips(),
+            "slot_refill_rate": st["slot_refill_rate"],
+            "slot_occupancy": st["slot_occupancy"],
         }
     c = cache.stats
     return {
@@ -82,6 +109,41 @@ def serve_stats():
         "cache_misses": c.misses,
         "cache_hit_rate": c.hit_rate,
         "requests": c.requests,
+    }
+
+
+def decode_stats(steps: int = DECODE_STEPS, seed: int = 0):
+    """Compiled-decode vs eager-decode tokens/s on one arch, plus the
+    continuous-batching slot-refill numbers (queue deeper than the batch,
+    so finished slots refill between bursts)."""
+    from repro.core.config import EngineConfig
+    from repro.serve.engine import ServeEngine
+
+    eng = EngineConfig(quant="w8a8", backend="ref")
+    (arch, params, calib, prompts) = _fleet(seed)[0]
+
+    def measure(compile_decode: bool):
+        engine = ServeEngine(arch, params, eng, batch_size=2,
+                             max_seq=MAX_SEQ, calib_batches=calib,
+                             compile_decode=compile_decode,
+                             prefill_len=PROMPT_LEN)
+        engine.generate(prompts[:2], max_new_tokens=1)   # trace warmup
+        t0 = time.perf_counter()
+        engine.generate(prompts, max_new_tokens=steps)
+        dt = time.perf_counter() - t0
+        return len(prompts) * steps / dt, engine.stats()
+
+    tps_compiled, st = measure(True)
+    tps_eager, _ = measure(False)
+    return {
+        "arch": arch.name,
+        "tokens_per_s_compiled": tps_compiled,
+        "tokens_per_s_eager": tps_eager,
+        "speedup": tps_compiled / tps_eager if tps_eager else 0.0,
+        "slot_refills": st["slot_refills"],
+        "slot_refill_rate": st["slot_refill_rate"],
+        "slot_occupancy": st["slot_occupancy"],
+        "decode_steps": st["decode_steps"],
     }
 
 
@@ -96,6 +158,23 @@ def run(measure: bool = True):
             f"levels={r['levels']},occupancy={r['occupancy']:.2f},"
             f"occupancy_alap={r['occupancy_alap']:.2f},"
             f"static={int(r['static'])},roundtrips={r['f32_roundtrips']}"))
+        out.append((
+            f"serve_lm/decode/{name}", 0.0,
+            f"levels={r['decode_levels']},"
+            f"static={int(r['decode_static'])},"
+            f"roundtrips={r['decode_f32_roundtrips']},"
+            f"tw_occupancy={r['tw_occupancy_decode']:.2f},"
+            f"tw_conv_pe={r['tw_conv_pe_decode']:.2f},"
+            f"tw_misc={r['tw_misc_decode']:.2f},"
+            f"refill_rate={r['slot_refill_rate']:.2f},"
+            f"slot_occupancy={r['slot_occupancy']:.2f}"))
+    d = decode_stats()
+    out.append((
+        f"serve_lm/decode_throughput/{d['arch']}", 0.0,
+        f"compiled_tok_s={d['tokens_per_s_compiled']:.1f},"
+        f"eager_tok_s={d['tokens_per_s_eager']:.1f},"
+        f"speedup={d['speedup']:.2f}x,"
+        f"slot_refill_rate={d['slot_refill_rate']:.2f}"))
     out.append((
         "serve_lm/trace/cached", stats["wall_s"] * 1e6,
         f"hit_rate={stats['cache_hit_rate']:.3f},"
@@ -108,11 +187,26 @@ def summary_line() -> str:
     stats = serve_stats()
     occ = np.mean([r["occupancy"] for r in stats["archs"].values()])
     occ_alap = np.mean([r["occupancy_alap"] for r in stats["archs"].values()])
+    tw = np.mean([r["tw_occupancy_decode"] for r in stats["archs"].values()])
+    refill = np.mean([r["slot_refill_rate"] for r in stats["archs"].values()])
     return (f"lm program-cache hit-rate: {100 * stats['cache_hit_rate']:.1f}% "
             f"({stats['cache_hits']}/{stats['requests']} hits, "
-            f"{stats['cache_misses']} compiles, {len(stats['archs'])} archs); "
+            f"{stats['cache_misses']} compiles, {len(stats['archs'])} archs, "
+            f"prefill+decode); "
             f"prefill engine occupancy {100 * occ:.1f}% asap / "
-            f"{100 * occ_alap:.1f}% alap")
+            f"{100 * occ_alap:.1f}% alap; "
+            f"decode time-weighted occupancy {100 * tw:.1f}%; "
+            f"slot-refill rate {100 * refill:.1f}%")
+
+
+def decode_summary_line() -> str:
+    d = decode_stats()
+    return (f"lm decode throughput ({d['arch']}): compiled "
+            f"{d['tokens_per_s_compiled']:.1f} tok/s vs eager "
+            f"{d['tokens_per_s_eager']:.1f} tok/s "
+            f"({d['speedup']:.2f}x); slot-refill rate "
+            f"{100 * d['slot_refill_rate']:.1f}%, slot occupancy "
+            f"{100 * d['slot_occupancy']:.1f}%")
 
 
 if __name__ == "__main__":
@@ -121,9 +215,13 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--summary", action="store_true",
                     help="one-line LM program-cache + occupancy summary only")
+    ap.add_argument("--decode-summary", action="store_true",
+                    help="one-line compiled-vs-eager decode tokens/s only")
     args = ap.parse_args()
     if args.summary:
         print(summary_line())
+    elif args.decode_summary:
+        print(decode_summary_line())
     else:
         print("name,us_per_call,derived")
         for row_name, us, derived in run():

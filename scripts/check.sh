@@ -20,3 +20,6 @@ python -m pytest -x -q "$@"
 echo "== serving cache =="
 python -m benchmarks.serve_cnn --summary
 python -m benchmarks.serve_lm --summary
+
+echo "== decode throughput =="
+python -m benchmarks.serve_lm --decode-summary

@@ -21,10 +21,10 @@ programs are memoized in executor.program_cache(), and the serving layer
 (repro.serve) keys full calibrated programs by (model config, EngineConfig,
 calibration-id) in its own ProgramCache.
 """
-from repro.compiler.calibrate import (PercentileCalibrator, calibrate,
-                                      make_calibrator)
+from repro.compiler.calibrate import (ChannelCalibrator, PercentileCalibrator,
+                                      calibrate, make_calibrator)
 from repro.compiler.executor import (Program, compile_cnn, compile_lm,
-                                     execute, program_cache,
+                                     execute, execute_decode, program_cache,
                                      schedule_variant)
 from repro.compiler.graph import (AddOp, AttnOp, ConcatOp, ConvOp, DwcOp,
                                   EmbedOp, Graph, HeadOp, InputOp, LinearOp,
@@ -37,40 +37,70 @@ from repro.compiler.passes import (QuantPlan, dynamic_roundtrip_count,
                                    residual_chains, set_param)
 from repro.compiler.schedule import (Schedule, engine_occupancy, engine_unit,
                                      level_schedule, schedule_stats,
+                                     time_weighted_occupancy,
                                      validate_schedule)
 
 
 def compile_calibrated(cfg, params, batches, eng=None,
                        scheduled: bool = True, policy: str = "asap",
-                       method: str = "absmax") -> Program:
+                       method: str = "absmax",
+                       granularity: str = "per_tensor") -> Program:
     """Float params + representative batches -> static int8 engine program."""
     g = build_graph(cfg)
-    scales = calibrate(g, params, batches, cfg, eng=eng, method=method)
-    return compile_cnn(cfg, scales=scales, scheduled=scheduled, policy=policy)
+    scales = calibrate(g, params, batches, cfg, eng=eng, method=method,
+                       granularity=granularity)
+    return compile_cnn(cfg, scales=scales, scheduled=scheduled, policy=policy,
+                       granularity=granularity)
+
+
+def calibrate_lm(arch, params, batches, eng=None, method: str = "absmax",
+                 granularity: str = "per_tensor"):
+    """One LM calibration run -> per-edge scales shared by every program
+    variant of the arch.
+
+    Calibration always executes the FULL graph (`lower_transformer(arch)`);
+    the prefill variant shares its node sequence exactly, and the decode
+    graph mirrors it node for node (graph.lower_transformer docstring), so
+    the same {node_id: scale} dict statically quantizes the full, prefill
+    AND decode programs -- the serving layer calibrates once per
+    registration, not once per program."""
+    g = lower_transformer(arch)
+    return calibrate(g, params, batches, arch, eng=eng, method=method,
+                     granularity=granularity)
 
 
 def compile_lm_calibrated(arch, params, batches, eng=None,
                           scheduled: bool = True, policy: str = "asap",
                           method: str = "absmax",
-                          prefill: bool = False) -> Program:
+                          prefill: bool = False, mode=None,
+                          scales=None,
+                          granularity: str = "per_tensor") -> Program:
     """Float params + representative token batches -> static int8 LM
-    prefill program (every `ops.linear` input gets a static scale)."""
-    g = lower_transformer(arch, last_only=prefill)
-    scales = calibrate(g, params, batches, arch, eng=eng, method=method)
+    program (every `ops.linear` input gets a static scale).
+
+    mode selects the program ("full" / "prefill" / "decode"); the legacy
+    `prefill=True` flag is shorthand for mode="prefill".  All modes share
+    one calibration run (calibrate_lm); pass `scales` to reuse a run
+    across modes without re-executing the calibration batches."""
+    if scales is None:
+        scales = calibrate_lm(arch, params, batches, eng=eng, method=method,
+                              granularity=granularity)
     return compile_lm(arch, scales=scales, scheduled=scheduled,
-                      policy=policy, prefill=prefill)
+                      policy=policy, prefill=prefill, mode=mode,
+                      granularity=granularity)
 
 
 __all__ = [
-    "AddOp", "AttnOp", "ConcatOp", "ConvOp", "DwcOp", "EmbedOp", "Graph",
-    "HeadOp", "InputOp", "LinearOp", "MulOp", "NormOp",
+    "AddOp", "AttnOp", "ChannelCalibrator", "ConcatOp", "ConvOp", "DwcOp",
+    "EmbedOp", "Graph", "HeadOp", "InputOp", "LinearOp", "MulOp", "NormOp",
     "PercentileCalibrator", "PoolOp", "Program", "QuantPlan", "Schedule",
-    "build_graph", "calibrate", "can_lower", "compile_calibrated",
-    "compile_cnn", "compile_lm", "compile_lm_calibrated",
-    "dynamic_roundtrip_count", "engine_occupancy", "engine_unit", "execute",
-    "f32_roundtrip_edges", "fold_requant", "fold_weight_layouts",
-    "fusion_stats", "get_param", "level_schedule", "lower_transformer",
-    "lowering_blockers", "make_calibrator", "program_cache",
-    "residual_chains", "schedule_stats", "schedule_variant", "set_param",
+    "build_graph", "calibrate", "calibrate_lm", "can_lower",
+    "compile_calibrated", "compile_cnn", "compile_lm",
+    "compile_lm_calibrated", "dynamic_roundtrip_count", "engine_occupancy",
+    "engine_unit", "execute", "execute_decode", "f32_roundtrip_edges",
+    "fold_requant", "fold_weight_layouts", "fusion_stats", "get_param",
+    "level_schedule", "lower_transformer", "lowering_blockers",
+    "make_calibrator", "program_cache", "residual_chains", "schedule_stats",
+    "schedule_variant", "set_param", "time_weighted_occupancy",
     "validate_schedule",
 ]

@@ -17,8 +17,16 @@ Two calibrators, selected by `method`:
     outliers (one huge element no longer wastes the whole int8 range), at
     the cost of clipping the tail.
 
-The method string is part of the serving calibration-id, so ProgramCache
-entries for different calibrators never collide.
+`granularity` selects the scale shape per edge:
+
+  * "per_tensor" (default) -- one scale per activation edge.
+  * "per_channel" -- one scale per last-dim channel per edge (absmax only).
+    The requant-folding pass keeps the vector only on edges the engines can
+    actually carry per-channel (channelwise DWC consumers); every other
+    edge collapses to the channel max, i.e. exactly the per-tensor scale.
+
+Both method and granularity are part of the serving calibration-id, so
+ProgramCache entries for different calibrators never collide.
 
 Scales are returned as plain Python floats keyed by node id: they become
 compile-time constants of the static program (closure constants under jit,
@@ -87,8 +95,46 @@ class PercentileCalibrator:
         return out
 
 
-def make_calibrator(method: str):
-    """"absmax" -> running-absmax; "pXX.X" -> percentile calibrator."""
+class ChannelCalibrator:
+    """Per-channel (last-dim) running absmax over batches.
+
+    The per-channel twin of core.quant.Calibrator: one |x| max per channel
+    of every observed edge.  scales() returns a TUPLE of floats per edge
+    (compile-time constants, hashable into program metadata); the requant
+    pass decides which edges keep the vector and which collapse to max().
+    """
+
+    def __init__(self):
+        self.amax: Dict[str, np.ndarray] = {}
+
+    def observe(self, name: str, x) -> None:
+        a = np.abs(np.asarray(x, dtype=np.float32))
+        if a.ndim == 0:
+            a = a.reshape(1, 1)
+        ch = a.reshape(-1, a.shape[-1]).max(axis=0)
+        prev = self.amax.get(name)
+        self.amax[name] = ch if prev is None else np.maximum(prev, ch)
+
+    def scales(self) -> dict:
+        return {name: tuple(max(float(v) / INT8_MAX, _MIN_SCALE)
+                            for v in a)
+                for name, a in self.amax.items()}
+
+
+def make_calibrator(method: str, granularity: str = "per_tensor"):
+    """"absmax" -> running-absmax; "pXX.X" -> percentile calibrator.
+    granularity="per_channel" selects the per-channel absmax collector
+    (the streaming percentile histogram is per-tensor only)."""
+    if granularity not in ("per_tensor", "per_channel"):
+        raise ValueError(f"unknown granularity {granularity!r} "
+                         "(want 'per_tensor' or 'per_channel')")
+    if granularity == "per_channel":
+        if method != "absmax":
+            raise ValueError(
+                "per-channel calibration requires method='absmax' "
+                f"(per-channel streaming percentiles not supported, "
+                f"got {method!r})")
+        return ChannelCalibrator()
     if method == "absmax":
         return Calibrator()
     if method.startswith("p"):
@@ -100,11 +146,13 @@ def make_calibrator(method: str):
 def calibrate(graph: Graph, params, batches: Iterable[jax.Array],
               cfg,
               eng: Optional[EngineConfig] = None,
-              method: str = "absmax") -> Dict[int, float]:
+              method: str = "absmax",
+              granularity: str = "per_tensor") -> Dict[int, object]:
     """Run `batches` through the float ref path and return
     {node_id: activation scale}.  Batches are whatever the graph's InputOp
     consumes: [N, H, W, C] images for a CNN graph, [B, L] token ids for an
-    LM prefill graph.
+    LM prefill graph.  Scale values are floats (per-tensor) or tuples of
+    per-channel floats (granularity="per_channel").
 
     `params` must be the FLOAT parameter tree: calibration measures the
     ranges quantized inference must reproduce, so it runs before (and
@@ -113,7 +161,7 @@ def calibrate(graph: Graph, params, batches: Iterable[jax.Array],
     eng = eng or EngineConfig(quant="none", backend="ref")
     if eng.quant != "none":
         raise ValueError("calibration runs on the float path (quant='none')")
-    cal = make_calibrator(method)
+    cal = make_calibrator(method, granularity)
     prog = ex.Program(graph, cfg, None)
 
     def observe(node, value):
@@ -125,4 +173,5 @@ def calibrate(graph: Graph, params, batches: Iterable[jax.Array],
         ex.execute(prog, params, batch, eng, observer=observe)
     if not ran:
         raise ValueError("calibration needs at least one batch")
-    return {int(k): float(v) for k, v in cal.scales().items()}
+    return {int(k): (v if isinstance(v, tuple) else float(v))
+            for k, v in cal.scales().items()}

@@ -60,6 +60,7 @@ from repro.core.config import ArchConfig, CNNConfig, EngineConfig
 from repro.core.quant import QTensor, quantize_static
 from repro.kernels import ops, ref
 from repro.models import layers as L
+from repro.models import transformer as T
 from repro.core.program_cache import ProgramCache, ProgramKey
 
 
@@ -67,11 +68,17 @@ from repro.core.program_cache import ProgramCache, ProgramKey
 class Program:
     """A compiled engine program: op graph + optional static-int8 plan and
     concurrent-dispatch schedule.  `cfg` is the frontend config the graph
-    was lowered from (CNNConfig or ArchConfig)."""
+    was lowered from (CNNConfig or ArchConfig).
+
+    kind="forward": stateless (image or token batch) -> logits; run it with
+    `execute`.  kind="decode": a DecodeStep program -- the cache-state
+    recurrence with signature (params, cache, tokens) -> (logits, cache);
+    run it with `execute_decode`."""
     graph: Graph
     cfg: Hashable
     plan: Optional[QuantPlan] = None
     schedule: Optional[Schedule] = None
+    kind: str = "forward"
 
     @property
     def static(self) -> bool:
@@ -106,67 +113,127 @@ def schedule_variant(scheduled: bool, policy: str) -> str:
 
 def compile_cnn(cfg: CNNConfig,
                 scales: Optional[Dict[int, float]] = None,
-                scheduled: bool = True, policy: str = "asap") -> Program:
+                scheduled: bool = True, policy: str = "asap",
+                granularity: str = "per_tensor") -> Program:
     """Lower a CNNConfig to an engine program.
 
     Without `scales` the program executes dynamically (eager-equivalent);
     that program is cached per config (CNNConfig is frozen/hashable) in the
     bounded program_cache(), so the eager cnn_forward wrapper builds each
     graph once.  With calibrated per-edge scales the requant-folding pass
-    produces the static int8 plan.  `scheduled=False` omits the concurrency
-    schedule (sequential raw-order dispatch; the parity tests' baseline);
-    `policy` selects ASAP or ALAP leveling (schedule.level_schedule).
+    produces the static int8 plan (granularity="per_channel" keeps channel
+    vectors on the DWC-consumed edges).  `scheduled=False` omits the
+    concurrency schedule (sequential raw-order dispatch; the parity tests'
+    baseline); `policy` selects ASAP or ALAP leveling
+    (schedule.level_schedule).
     """
     if scales is None:
         key = ProgramKey(cfg, None, None, schedule_variant(scheduled, policy))
         return _dynamic_cache.get_or_compile(
             key, lambda: _finish_program(build_graph(cfg), cfg, None,
                                          scheduled, policy))
-    return _finish_program(build_graph(cfg), cfg, scales, scheduled, policy)
+    return _finish_program(build_graph(cfg), cfg, scales, scheduled, policy,
+                           granularity=granularity)
 
 
 def compile_lm(arch: ArchConfig,
                scales: Optional[Dict[int, float]] = None,
                scheduled: bool = True, policy: str = "asap",
-               prefill: bool = False) -> Program:
-    """Lower a transformer ArchConfig (prefill path) to an engine program.
+               prefill: bool = False, mode: Optional[str] = None,
+               granularity: str = "per_tensor") -> Program:
+    """Lower a transformer ArchConfig to an engine program.
 
-    `prefill=True` emits only the last position's logits (the serving
-    variant whose AttnOps feed the KV-cache fill via `collect`); otherwise
-    the program computes full-sequence logits like `T.forward`.  Dynamic
+    `mode` selects the program: "full" computes full-sequence logits like
+    `T.forward`; "prefill" emits only the last position's logits (the
+    serving variant whose AttnOps feed the KV-cache fill via `collect`);
+    "decode" is the DecodeStep program (run with `execute_decode`).  The
+    legacy `prefill=True` flag is shorthand for mode="prefill".  Dynamic
     programs are memoized per (arch, variant) in the bounded
     program_cache(); calibrated ones are keyed by the serving layer.
     """
-    variant = schedule_variant(scheduled, policy)
-    variant += ":prefill" if prefill else ":full"
+    mode = mode or ("prefill" if prefill else "full")
+    if mode not in ("full", "prefill", "decode"):
+        raise ValueError(f"unknown LM program mode {mode!r}")
+    variant = schedule_variant(scheduled, policy) + f":{mode}"
+    kind = "decode" if mode == "decode" else "forward"
+
+    def lower():
+        if mode == "decode":
+            return lower_transformer(arch, mode="decode")
+        return lower_transformer(arch, last_only=(mode == "prefill"))
+
     if scales is None:
         key = ProgramKey(arch, None, None, variant)
         return _dynamic_cache.get_or_compile(
-            key, lambda: _finish_program(
-                lower_transformer(arch, last_only=prefill), arch, None,
-                scheduled, policy))
-    return _finish_program(lower_transformer(arch, last_only=prefill), arch,
-                           scales, scheduled, policy)
+            key, lambda: _finish_program(lower(), arch, None,
+                                         scheduled, policy, kind))
+    return _finish_program(lower(), arch, scales, scheduled, policy, kind,
+                           granularity=granularity)
 
 
 def _finish_program(g: Graph, cfg, scales, scheduled: bool,
-                    policy: str = "asap") -> Program:
-    plan = fold_requant(g, scales) if scales is not None else None
+                    policy: str = "asap", kind: str = "forward",
+                    granularity: str = "per_tensor") -> Program:
+    plan = (fold_requant(g, scales, granularity=granularity)
+            if scales is not None else None)
     sched = level_schedule(g, policy) if scheduled else None
-    return Program(g, cfg, plan, sched)
+    return Program(g, cfg, plan, sched, kind)
 
 
 def execute(program: Program, params, inputs: jax.Array,
             eng: EngineConfig,
             observer: Optional[Callable[[OpNode, jax.Array], None]] = None,
             collect: Optional[dict] = None) -> jax.Array:
-    """Run the program.  `inputs` is whatever the graph's InputOp consumes:
-    [N, H, W, C] float images (CNN) or [B, L] int32 token ids (LM).
-    Returns logits.  `collect`, when given, is filled with each AttnOp's
-    (k, v) pair keyed by layer index (the serving KV-cache fill)."""
+    """Run a stateless (kind="forward") program.  `inputs` is whatever the
+    graph's InputOp consumes: [N, H, W, C] float images (CNN) or [B, L]
+    int32 token ids (LM).  Returns logits.  `collect`, when given, is
+    filled with each AttnOp's (k, v) pair keyed by layer index (the
+    serving KV-cache fill)."""
+    if program.kind == "decode":
+        raise ValueError("decode programs carry cache state; run them "
+                         "through execute_decode(program, params, cache, "
+                         "tokens, eng)")
     if program.static:
         return _execute_static(program, params, inputs, eng, collect)
     return _execute_dynamic(program, params, inputs, eng, observer, collect)
+
+
+class _DecodeCtx:
+    """Cache state threaded through a DecodeStep program's AttnOp updates."""
+
+    def __init__(self, cache: dict):
+        self.cache = cache
+        self.pos = cache["pos"]          # scalar, or [B] per-slot positions
+        self.new_layers: Dict[int, dict] = {}
+
+    def entry(self, layer: int) -> dict:
+        return self.cache["layers"][layer]
+
+    def finish(self) -> dict:
+        layers = [self.new_layers.get(i, e)
+                  for i, e in enumerate(self.cache["layers"])]
+        return {"layers": layers, "pos": self.pos + 1}
+
+
+def execute_decode(program: Program, params, cache: dict,
+                   tokens: jax.Array, eng: EngineConfig
+                   ) -> Tuple[jax.Array, dict]:
+    """Run a DecodeStep program: one token per slot against the KV cache.
+
+    tokens: [B, 1] int32; cache: the serving cache (T.cache_schema layout,
+    "pos" scalar or [B] per-slot).  Returns (logits [B, 1, V], new cache)
+    -- the compiled counterpart of `T.decode`, jit/donation friendly."""
+    if program.kind != "decode":
+        raise ValueError(f"execute_decode needs a decode program, got "
+                         f"kind={program.kind!r}")
+    ctx = _DecodeCtx(cache)
+    if program.static:
+        logits = _execute_static(program, params, tokens, eng, None,
+                                 decode=ctx)
+    else:
+        logits = _execute_dynamic(program, params, tokens, eng, None, None,
+                                  decode=ctx)
+    return logits, ctx.finish()
 
 
 # ---------------------------------------------------------------------------
@@ -241,6 +308,23 @@ def _rope_memo():
     return rope
 
 
+def _rope_decode_memo(pos):
+    """Decode-step RoPE: angles at the cache position(s), one table per
+    (B, head_dim, theta) per execute_decode() call.  `pos` is a scalar or
+    [B] per-slot position vector (both traced under jit)."""
+    cache: Dict[Tuple, Tuple[jax.Array, jax.Array]] = {}
+
+    def rope(b: int, hd: int, theta: float):
+        key = (b, hd, theta)
+        if key not in cache:
+            positions = (pos[:, None] if jnp.asarray(pos).ndim == 1
+                         else jnp.broadcast_to(pos[None, None], (b, 1)))
+            cache[key] = L.rope_angles(positions, hd, theta)
+        return cache[key]
+
+    return rope
+
+
 def _embed_eval(n: EmbedOp, tokens: jax.Array, params) -> jax.Array:
     emb = get_param(params, n.w)
     if isinstance(emb, QTensor):
@@ -251,6 +335,35 @@ def _embed_eval(n: EmbedOp, tokens: jax.Array, params) -> jax.Array:
     if n.emb_scale:
         x = x * jnp.asarray(n.emb_scale, jnp.float32)
     return x
+
+
+def _attn_update_eval(n: AttnOp, q: jax.Array, k: jax.Array, v: jax.Array,
+                      rope_d, ctx: "_DecodeCtx", eng: EngineConfig
+                      ) -> jax.Array:
+    """AttnOp in `update` mode: write this token's (k, v) into the cache at
+    the slot position, then attend against the cache -- the op-level twin
+    of the attention body of `T.decode` (bit-identical cache layout)."""
+    b = q.shape[0]
+    g = n.n_heads // n.n_kv_heads
+    q = q.reshape(b, 1, n.n_kv_heads, g, n.head_dim)
+    k = k.reshape(b, 1, n.n_kv_heads, n.head_dim)
+    v = v.reshape(b, 1, n.n_kv_heads, n.head_dim)
+    cos, sin = rope_d(b, n.head_dim, n.rope_theta)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    entry = ctx.entry(n.layer)
+    if n.layer_kind == "local":
+        w = entry["k"].shape[1]
+        entry = T._kv_store(entry, k, v, ctx.pos % w, eng)
+        ring = True
+    else:
+        entry = T._kv_store(entry, k, v, ctx.pos, eng)
+        ring = False
+    ctx.new_layers[n.layer] = entry
+    kc, vc = T._kv_read(entry, eng)
+    out = L.decode_attention(q, kc, vc, ctx.pos + 1, window=n.window,
+                             logit_softcap=n.softcap, ring=ring)
+    return out.reshape(b, 1, n.n_heads * n.head_dim).astype(jnp.float32)
 
 
 def _attn_eval(n: AttnOp, q: jax.Array, k: jax.Array, v: jax.Array,
@@ -291,9 +404,10 @@ def _head_eval(n: HeadOp, x: jax.Array, params) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def _execute_dynamic(program: Program, params, images, eng: EngineConfig,
-                     observer=None, collect: Optional[dict] = None
-                     ) -> jax.Array:
+                     observer=None, collect: Optional[dict] = None,
+                     decode: Optional[_DecodeCtx] = None) -> jax.Array:
     rope = _rope_memo()
+    rope_d = _rope_decode_memo(decode.pos) if decode is not None else None
 
     def eval_node(n: OpNode, vals: Dict[int, jax.Array]) -> jax.Array:
         if isinstance(n, InputOp):
@@ -335,6 +449,10 @@ def _execute_dynamic(program: Program, params, images, eng: EngineConfig,
             return (vals[n.inputs[0]] * vals[n.inputs[1]]
                     ).astype(jnp.float32)
         if isinstance(n, AttnOp):
+            if n.mode == "update":
+                return _attn_update_eval(n, vals[n.inputs[0]],
+                                         vals[n.inputs[1]], vals[n.inputs[2]],
+                                         rope_d, decode, eng)
             return _attn_eval(n, vals[n.inputs[0]], vals[n.inputs[1]],
                               vals[n.inputs[2]], rope, collect)
         if isinstance(n, HeadOp):
@@ -358,21 +476,27 @@ def _require_qtensor(w, n: OpNode):
 
 
 def _execute_static(program: Program, params, images,
-                    eng: EngineConfig, collect: Optional[dict] = None
-                    ) -> jax.Array:
+                    eng: EngineConfig, collect: Optional[dict] = None,
+                    decode: Optional[_DecodeCtx] = None) -> jax.Array:
     g, plan = program.graph, program.plan
     scale_of = plan.out_scale
     rope = _rope_memo()
+    rope_d = _rope_decode_memo(decode.pos) if decode is not None else None
 
     def out_scale_for(n: OpNode):
         return scale_of[n.id] if plan.emit_int8[n.id] else None
+
+    def _as_scale(os):
+        """Scale constant -> array: a float (per-tensor) or a tuple of
+        per-channel floats (broadcasts over the last dim)."""
+        return jnp.asarray(os, jnp.float32)
 
     def _q_or_raw(r, os):
         """A float-domain MISC op's requant epilogue: int8 when the plan
         carries the edge int8 (all consumers are GEMM engines), f32 else."""
         if os is None:
             return r
-        return QTensor(quantize_static(r, jnp.float32(os)), os)
+        return QTensor(quantize_static(r, _as_scale(os)), os)
 
     def _raw(v):
         return v.dequant() if isinstance(v, QTensor) else v
@@ -386,7 +510,7 @@ def _execute_static(program: Program, params, images,
             if os is None:
                 return images              # token ids pass through raw
             # One static quantization at the boundary; int8 from here on.
-            return QTensor(quantize_static(images, jnp.float32(os)), os)
+            return QTensor(quantize_static(images, _as_scale(os)), os)
         if isinstance(n, ConvOp):
             w = _require_qtensor(get_param(params, n.w), n)
             b = get_param(params, n.b)
@@ -419,14 +543,14 @@ def _execute_static(program: Program, params, images,
                 acc = jnp.sum(x.q.astype(jnp.int32), axis=(1, 2))
                 px = x.q.shape[1] * x.q.shape[2]
                 r = acc.astype(jnp.float32) * (float(x.scale) / px)
-                return (QTensor(quantize_static(r, jnp.float32(os)), os)
+                return (QTensor(quantize_static(r, _as_scale(os)), os)
                         if os is not None else r)
             acc = jax.lax.reduce_window(
                 x.q.astype(jnp.int32), 0, jax.lax.add,
                 (1, n.kernel, n.kernel, 1), (1, n.stride, n.stride, 1),
                 "VALID")
             r = acc.astype(jnp.float32) * (float(x.scale) / n.kernel ** 2)
-            return QTensor(quantize_static(r, jnp.float32(os)), os)
+            return QTensor(quantize_static(r, _as_scale(os)), os)
         if isinstance(n, ConcatOp):
             parts = []
             for i in n.inputs:
@@ -457,9 +581,15 @@ def _execute_static(program: Program, params, images,
                  ).astype(jnp.float32)
             return _q_or_raw(r, os)
         if isinstance(n, AttnOp):
-            r = _attn_eval(n, _raw(vals[n.inputs[0]]),
-                           _raw(vals[n.inputs[1]]),
-                           _raw(vals[n.inputs[2]]), rope, collect)
+            if n.mode == "update":
+                r = _attn_update_eval(n, _raw(vals[n.inputs[0]]),
+                                      _raw(vals[n.inputs[1]]),
+                                      _raw(vals[n.inputs[2]]),
+                                      rope_d, decode, eng)
+            else:
+                r = _attn_eval(n, _raw(vals[n.inputs[0]]),
+                               _raw(vals[n.inputs[1]]),
+                               _raw(vals[n.inputs[2]]), rope, collect)
             return _q_or_raw(r, os)
         if isinstance(n, HeadOp):
             return _head_eval(n, _raw(vals[n.inputs[0]]), params)

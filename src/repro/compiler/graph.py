@@ -127,7 +127,14 @@ class MulOp(OpNode):
 class AttnOp(OpNode):
     """RoPE + online-softmax attention between the QKV and output GEMMs.
     inputs = (q, k, v) projection edges, each [B, L, heads*head_dim].
-    `layer` keys the collected (k, v) pair for serving-cache fill."""
+    `layer` keys the collected (k, v) pair for serving-cache fill.
+
+    mode="full":   full-sequence causal attention (prefill / training).
+    mode="update": the cache-state recurrence of a DecodeStep program --
+      the single new (k, v) pair is written into the serving KV cache at
+      the slot's position index (ring-indexed for local layers), then the
+      query attends against the whole cache.  The executor threads the
+      cache through `execute_decode`."""
     layer: int = 0
     layer_kind: str = "global"
     n_heads: int = 1
@@ -136,6 +143,7 @@ class AttnOp(OpNode):
     rope_theta: float = 10000.0
     softcap: float = 0.0
     window: int = 0                  # >0: local attention window
+    mode: str = "full"               # full | update (decode cache step)
 
 
 @dataclass(frozen=True)
@@ -283,21 +291,35 @@ def can_lower(arch: ArchConfig) -> bool:
     return not lowering_blockers(arch)
 
 
-def lower_transformer(arch: ArchConfig, last_only: bool = False) -> Graph:
-    """Lower `T.forward`-style prefill to the engine op-graph.
+def lower_transformer(arch: ArchConfig, last_only: bool = False,
+                      mode: str = "full") -> Graph:
+    """Lower a transformer to the engine op-graph.
 
-    The program input is the token-id tensor [B, L]; the output is the logits
-    edge ([B, L, V] full-sequence, or [B, 1, V] with `last_only` -- the
-    serving-prefill variant).  Every projection is a LinearOp on the Conv PE;
-    norms, residual adds, the SwiGLU gate and the attention core run on the
-    MISC core, mirroring the paper's non-convolution operator mapping.
-    Decode stays eager (it is a cache-state recurrence, not a graph).
+    mode="full" (prefill / training): the program input is the token-id
+    tensor [B, L]; the output is the logits edge ([B, L, V] full-sequence,
+    or [B, 1, V] with `last_only` -- the serving-prefill variant).
+
+    mode="decode": the DecodeStep program -- the same node sequence over a
+    [B, 1] token input, with every AttnOp in `update` mode (read/write the
+    serving KV cache at the slot's position index).  The executor runs it
+    through `execute_decode(program, params, cache, tokens, eng)`.  Because
+    the node order is identical to the full graph's, per-edge calibration
+    scales recorded on the full graph transfer to the decode graph by node
+    id -- one calibration run statically quantizes both programs.
+
+    Every projection is a LinearOp on the Conv PE; norms, residual adds,
+    the SwiGLU gate and the attention core run on the MISC core, mirroring
+    the paper's non-convolution operator mapping.
     """
+    if mode not in ("full", "decode"):
+        raise ValueError(f"unknown lowering mode {mode!r} "
+                         "(want 'full' or 'decode')")
     blockers = lowering_blockers(arch)
     if blockers:
         raise NotImplementedError(
             f"{arch.name}: cannot lower to the engine IR "
             f"({'; '.join(blockers)}); serve it eagerly")
+    attn_mode = "update" if mode == "decode" else "full"
     b = _Builder()
     tokens = b.add(InputOp, [])
     x = b.add(EmbedOp, [tokens], w=("embed",),
@@ -318,7 +340,8 @@ def lower_transformer(arch: ArchConfig, last_only: bool = False) -> Graph:
                   n_heads=arch.n_heads, n_kv_heads=arch.n_kv_heads,
                   head_dim=arch.head_dim, rope_theta=arch.rope_theta,
                   softcap=arch.attn_softcap,
-                  window=arch.local_window if kind == "local" else 0)
+                  window=arch.local_window if kind == "local" else 0,
+                  mode=attn_mode)
         h = b.add(LinearOp, [a], w=ap + ("wo",))
         if arch.post_norms:
             h = b.add(NormOp, [h], w=p + ("post_attn_norm",),
@@ -342,5 +365,6 @@ def lower_transformer(arch: ArchConfig, last_only: bool = False) -> Graph:
     x = b.add(HeadOp, [x],
               w=("embed",) if arch.tie_embeddings else ("head",),
               tied=arch.tie_embeddings, softcap=arch.final_softcap,
-              last_only=last_only)
-    return Graph(tuple(b.nodes), output=x, name=arch.name)
+              last_only=last_only and mode == "full")
+    name = arch.name if mode == "full" else f"{arch.name}:decode"
+    return Graph(tuple(b.nodes), output=x, name=name)

@@ -65,8 +65,11 @@ _GEMM_OPS = (ConvOp, DwcOp, LinearOp)
 @dataclass(frozen=True)
 class QuantPlan:
     """Static-int8 execution plan for one graph."""
-    # node id -> scale its OUTPUT edge is carried at (int8 value * scale = f32)
-    out_scale: Dict[int, float]
+    # node id -> scale its OUTPUT edge is carried at (int8 value * scale =
+    # f32).  A float is a per-tensor scale; a tuple of floats is a
+    # per-channel (last-dim) scale on an edge whose consumers are all
+    # channelwise engines (DWC PE).
+    out_scale: Dict[int, object]
     # node id -> does the node emit int8 (False only for the logits)
     emit_int8: Dict[int, bool]
     # edges whose requant was folded into the producer epilogue for a
@@ -75,16 +78,30 @@ class QuantPlan:
     stats: Dict[str, int] = field(default_factory=dict)
 
 
-def fold_requant(graph: Graph, scales: Dict[int, float]) -> QuantPlan:
+def fold_requant(graph: Graph, scales: Dict[int, object],
+                 granularity: str = "per_tensor") -> QuantPlan:
     """Assign every edge a static int8 scale and fold requants into the
-    producing engines' epilogues."""
+    producing engines' epilogues.
+
+    granularity="per_channel" (with tuple-valued scales from a per-channel
+    calibration) keeps the channel vector only where the hardware can carry
+    it: the consuming engine must be channelwise (every consumer a DwcOp --
+    a per-K-channel activation scale cannot be factored out of a GEMM
+    accumulation), and the producing epilogue must requant per-channel
+    (InputOp boundary quant or a Conv PE output epilogue).  Every other
+    edge collapses to the channel max -- exactly its per-tensor scale."""
     missing = [n.id for n in graph.nodes if n.id not in scales]
     if missing:
         raise ValueError(
             f"calibration scales missing for nodes {missing}; "
             "run compiler.calibrate over representative batches first")
 
-    out_scale = {i: max(float(scales[i]), _MIN_SCALE) for i in scales}
+    def _norm(v):
+        if isinstance(v, tuple):
+            return tuple(max(float(x), _MIN_SCALE) for x in v)
+        return max(float(v), _MIN_SCALE)
+
+    out_scale = {i: _norm(scales[i]) for i in scales}
     consumers = graph.consumers()
     emit_int8 = {
         n.id: (n.id != graph.output
@@ -94,6 +111,24 @@ def fold_requant(graph: Graph, scales: Dict[int, float]) -> QuantPlan:
                        for c in consumers[n.id]))
         for n in graph.nodes
     }
+
+    per_channel = collapsed = 0
+    for n in graph.nodes:
+        s = out_scale[n.id]
+        if not isinstance(s, tuple):
+            continue
+        keep = (granularity == "per_channel"
+                and emit_int8[n.id]
+                and all(isinstance(graph.nodes[c], DwcOp)
+                        for c in consumers[n.id])
+                and (isinstance(n, InputOp)
+                     or (isinstance(n, ConvOp) and not n.first_layer)))
+        if keep:
+            per_channel += 1
+        else:
+            out_scale[n.id] = max(s)
+            collapsed += 1
+
     folded: List[Tuple[int, int]] = []
 
     for n in graph.nodes:
@@ -116,6 +151,8 @@ def fold_requant(graph: Graph, scales: Dict[int, float]) -> QuantPlan:
     stats = dict(fusion_stats(graph))
     stats["folded_requants"] = len(folded)
     stats["dynamic_f32_roundtrips"] = dynamic_roundtrip_count(graph)
+    stats["per_channel_edges"] = per_channel
+    stats["per_tensor_collapsed"] = collapsed
     return QuantPlan(out_scale=out_scale, emit_int8=emit_int8,
                      folded=tuple(folded), stats=stats)
 

@@ -174,6 +174,42 @@ def engine_occupancy(graph: Graph, sched: Schedule) -> Dict[str, float]:
     return out
 
 
+def time_weighted_occupancy(graph: Graph, sched: Schedule,
+                            node_times: Dict[int, float]) -> Dict[str, float]:
+    """Time-weighted per-engine busy fractions over a leveling.
+
+    engine_occupancy counts unit *presence* per level -- a level where the
+    MISC core does 1us of norm work next to 1ms of Conv PE GEMMs rates both
+    units equally.  This weights by modeled seconds instead (`node_times`:
+    {node_id: seconds}, e.g. benchmarks.perf_model.lm_node_times): a
+    level's span is the busiest unit's summed time in it (same-unit ops
+    time-share their engine; distinct units run concurrently), the program
+    span is the sum over levels, and each unit's busy fraction is its total
+    time over that span.  This is the ROADMAP's "time-weighted busy
+    fraction" for LM (and decode) programs, where op costs differ by
+    orders of magnitude.
+    """
+    busy = {u: 0.0 for u in _COMPUTE_UNITS}
+    span = 0.0
+    for lv in sched.levels:
+        per_unit: Dict[str, float] = {}
+        for i in lv:
+            u = engine_unit(graph.nodes[i])
+            per_unit[u] = per_unit.get(u, 0.0) + float(node_times.get(i, 0.0))
+        for u, t in per_unit.items():
+            if u in busy:
+                busy[u] += t
+        span += max(per_unit.values(), default=0.0)
+    used = {u for n in graph.nodes
+            for u in [engine_unit(n)] if u in _COMPUTE_UNITS}
+    out: Dict[str, float] = {"span_s": span}
+    for u in sorted(used):
+        out[u] = busy[u] / span if span > 0 else 0.0
+    out["occupancy"] = (sum(busy[u] for u in used) / (span * len(used))
+                        if span > 0 and used else 0.0)
+    return out
+
+
 def validate_schedule(graph: Graph, sched: Schedule) -> None:
     """Raise if the schedule is not a valid topological leveling that covers
     every node exactly once."""

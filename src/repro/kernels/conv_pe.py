@@ -33,8 +33,9 @@ from repro.kernels.ref import act_fn
 from repro.kernels._pallas_compat import compiler_params
 
 
-def _kernel(a_ref, b_ref, a_scale_ref, w_scale_ref, bias_ref, o_ref, acc_ref,
-            *, nk: int, act: str, has_bias: bool, out_scale: Optional[float]):
+def _kernel(a_ref, b_ref, a_scale_ref, w_scale_ref, bias_ref, os_ref, o_ref,
+            acc_ref, *, nk: int, act: str, has_bias: bool,
+            out_scale: Optional[float], vector_os: bool):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -54,7 +55,12 @@ def _kernel(a_ref, b_ref, a_scale_ref, w_scale_ref, bias_ref, o_ref, acc_ref,
         if has_bias:
             x = x + bias_ref[...]
         x = act_fn(act)(x)
-        if out_scale is not None:
+        if vector_os:
+            # per-output-channel requant (e.g. a per-channel edge feeding
+            # the channelwise DWC engine): the divisor streams in blocked
+            # [1, bn] like the weight scales.
+            x = jnp.clip(jnp.round(x / os_ref[...]), -127, 127)
+        elif out_scale is not None:
             x = jnp.clip(jnp.round(x / out_scale), -127, 127)
         o_ref[...] = x.astype(o_ref.dtype)
 
@@ -63,7 +69,7 @@ def matmul_int8_fused(a_q: jax.Array, b_q: jax.Array,
                       a_scale: jax.Array, w_scale: jax.Array,
                       bias: Optional[jax.Array] = None,
                       act: str = "none",
-                      out_scale: Optional[float] = None,
+                      out_scale=None,
                       out_dtype=jnp.float32,
                       *,
                       bm: int = 128, bn: int = 128, bk: int = 512,
@@ -71,6 +77,8 @@ def matmul_int8_fused(a_q: jax.Array, b_q: jax.Array,
     """Fused int8 GEMM. Shapes must be multiples of the block shapes
     (kernels/ops.py pads).  a_q [M,K] int8, b_q [K,N] int8,
     a_scale [M,1] f32, w_scale [1,N] f32, bias [N] f32 or None.
+    out_scale: None (float out), a scalar (per-tensor int8 requant), or a
+    [N]-broadcastable array (per-output-channel requant, pre-padded).
     """
     m, kdim = a_q.shape
     _, n = b_q.shape
@@ -79,12 +87,17 @@ def matmul_int8_fused(a_q: jax.Array, b_q: jax.Array,
     has_bias = bias is not None
     bias2d = (bias.reshape(1, n).astype(jnp.float32) if has_bias
               else jnp.zeros((1, n), jnp.float32))
+    vector_os = out_scale is not None and not isinstance(
+        out_scale, (int, float))
+    os2d = (jnp.asarray(out_scale, jnp.float32).reshape(1, n) if vector_os
+            else jnp.ones((1, n), jnp.float32))
     odt = jnp.int8 if out_scale is not None else out_dtype
 
     grid = (m // bm, n // bn, nk)
     return pl.pallas_call(
         functools.partial(_kernel, nk=nk, act=act, has_bias=has_bias,
-                          out_scale=out_scale),
+                          out_scale=None if vector_os else out_scale,
+                          vector_os=vector_os),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),     # A
@@ -92,6 +105,7 @@ def matmul_int8_fused(a_q: jax.Array, b_q: jax.Array,
             pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),       # a_scale
             pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),       # w_scale
             pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),       # bias
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),       # out_scale
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), odt),
@@ -100,7 +114,7 @@ def matmul_int8_fused(a_q: jax.Array, b_q: jax.Array,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a_q, b_q, a_scale.astype(jnp.float32).reshape(m, 1),
-      w_scale.astype(jnp.float32).reshape(1, n), bias2d)
+      w_scale.astype(jnp.float32).reshape(1, n), bias2d, os2d)
 
 
 # ---------------------------------------------------------------------------

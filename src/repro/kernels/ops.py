@@ -54,19 +54,23 @@ def pick_blocks(m: int, n: int, k: int, in_bytes: int,
 def linear_int8(x, w: QTensor, bias: Optional[jax.Array],
                 act: str, cfg: EngineConfig,
                 out_dtype=jnp.float32,
-                out_scale: Optional[float] = None) -> jax.Array:
+                out_scale=None) -> jax.Array:
     """x: float [..., K] (dynamic per-token act quant) OR QTensor with a
     static pre-calibrated per-tensor scale (the compiled engine-program
     path); w: QTensor(q=[K, N] int8, scale=[1, N]).
 
     out_scale: static requant scale -> int8 output via the NL epilogue
-    (activations stay int8 engine-to-engine); None -> float output.
+    (activations stay int8 engine-to-engine); a per-output-channel tuple
+    requants each channel at its own scale (a per-channel edge feeding the
+    channelwise DWC engine); None -> float output.
     """
     static = isinstance(x, QTensor)
     xv = x.q if static else x
     lead = xv.shape[:-1]
     kdim = xv.shape[-1]
     n = w.q.shape[-1]
+    if out_scale is not None and not isinstance(out_scale, (int, float)):
+        out_scale = jnp.asarray(out_scale, jnp.float32).reshape(1, n)
     m = 1
     for d in lead:
         m *= d
@@ -89,8 +93,13 @@ def linear_int8(x, w: QTensor, bias: Optional[jax.Array],
         wsc = jnp.pad(w_scale, ((0, 0), (0, np_ - n)))
         b = (jnp.pad(bias.astype(jnp.float32), (0, np_ - n))
              if bias is not None else None)
+        osc = out_scale
+        if out_scale is not None and not isinstance(out_scale, (int, float)):
+            # per-channel requant vector: pad with 1s alongside N
+            osc = jnp.pad(jnp.asarray(out_scale, jnp.float32).reshape(1, n),
+                          ((0, 0), (0, np_ - n)), constant_values=1.0)
         out = conv_pe.matmul_int8_fused(
-            aq, bq, asc, wsc, b, act, out_scale=out_scale, out_dtype=out_dtype,
+            aq, bq, asc, wsc, b, act, out_scale=osc, out_dtype=out_dtype,
             bm=bm, bn=bn, bk=bk, interpret=cfg.interpret)[:m, :n]
     else:
         out = ref.matmul_int8_fused(xq.q, w.q, xq.scale, w_scale, bias, act,
@@ -282,7 +291,11 @@ def dwc2d(x, w, bias: Optional[jax.Array], stride: int,
     quant = (is_q and cfg.quant == "w8a8") or static
     if quant:
         if static:
-            xin, a_scale = x.q, float(x.scale)
+            xin = x.q
+            # per-tensor float scale, or a per-channel [C] vector (the
+            # channelwise engine dequantizes each lane at its own scale)
+            a_scale = (float(x.scale) if jnp.ndim(x.scale) == 0
+                       else jnp.asarray(x.scale, jnp.float32))
         else:
             xq = quantize_act_dynamic(x, per_token=False)
             a_scale = xq.scale
@@ -308,6 +321,9 @@ def dwc2d(x, w, bias: Optional[jax.Array], stride: int,
                 bias = jnp.pad(bias, (0, cp - c))
             if w_scale is not None:
                 w_scale = jnp.pad(w_scale, (0, cp - c))
+        if a_scale is not None and jnp.ndim(a_scale) == 1:
+            # per-channel activation scales pad alongside the lanes
+            a_scale = jnp.pad(a_scale, (0, cp - c), constant_values=1.0)
 
     if cfg.backend == "pallas":
         out = dwc_pe.dwc2d(xin, w_in, bias, stride, act,

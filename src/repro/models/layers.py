@@ -210,7 +210,9 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     """Single-token attention against a cache.
 
     q: [B, 1, Hkv, G, D];  k_cache/v_cache: [B, S, Hkv, D];
-    length: [] int32 -- number of valid cache entries (including this token).
+    length: [] int32 -- number of valid cache entries (including this token)
+      -- or [B] int32 with one length per batch slot (the continuous-batching
+      serve path, where refilled slots sit at different sequence positions).
     ring: cache is a ring buffer of size `window` (local layers).
 
     Under a seq-sharded cache spec ([.., 'model', ..]), GSPMD lowers the
@@ -225,13 +227,15 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     if logit_softcap > 0:
         st = logit_softcap * jnp.tanh(st / logit_softcap)
     kpos = jnp.arange(s)
+    lb = jnp.asarray(length)
+    lb = lb[None] if lb.ndim == 0 else lb              # [1] or [B]
     if ring:
-        valid = kpos < jnp.minimum(length, s)
+        valid = kpos[None, :] < jnp.minimum(lb, s)[:, None]
     else:
-        valid = kpos < length
+        valid = kpos[None, :] < lb[:, None]
         if window > 0:
-            valid = valid & (kpos > length - 1 - window)
-    st = jnp.where(valid[None, None, None, None, :], st, NEG_INF)
+            valid = valid & (kpos[None, :] > (lb - 1 - window)[:, None])
+    st = jnp.where(valid[:, None, None, None, :], st, NEG_INF)
     m = jnp.max(st, axis=-1, keepdims=True)
     p = jnp.exp(st - m)
     lsum = jnp.sum(p, axis=-1, keepdims=True)

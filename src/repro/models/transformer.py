@@ -356,24 +356,31 @@ def cache_schema(arch: ArchConfig, batch: int, max_seq: int,
 
 
 def _kv_store(entry: dict, k, v, idx, eng: EngineConfig):
-    """Write k/v [B, L, Hkv, D] into the cache at position idx."""
+    """Write k/v [B, L, Hkv, D] into the cache at position idx.
+
+    idx is a scalar (one shared position, the historical path) or a [B]
+    vector (per-slot positions: the continuous-batching serve path writes
+    each slot's single new token at that slot's own sequence position;
+    vector idx requires L == 1)."""
     entry = dict(entry)
+    per_slot = jnp.asarray(idx).ndim == 1
+
+    def store(buf, val):
+        if per_slot:
+            b = val.shape[0]
+            return buf.at[jnp.arange(b), idx].set(val[:, 0])
+        return jax.lax.dynamic_update_slice_in_dim(buf, val, idx, axis=1)
+
     if eng.kv_cache_dtype == "int8":
         kq = quantize_act_dynamic(k, per_token=True)
         vq = quantize_act_dynamic(v, per_token=True)
-        entry["k"] = jax.lax.dynamic_update_slice_in_dim(
-            entry["k"], kq.q, idx, axis=1)
-        entry["v"] = jax.lax.dynamic_update_slice_in_dim(
-            entry["v"], vq.q, idx, axis=1)
-        entry["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
-            entry["k_scale"], kq.scale[..., 0], idx, axis=1)
-        entry["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
-            entry["v_scale"], vq.scale[..., 0], idx, axis=1)
+        entry["k"] = store(entry["k"], kq.q)
+        entry["v"] = store(entry["v"], vq.q)
+        entry["k_scale"] = store(entry["k_scale"], kq.scale[..., 0])
+        entry["v_scale"] = store(entry["v_scale"], vq.scale[..., 0])
         return entry
-    entry["k"] = jax.lax.dynamic_update_slice_in_dim(
-        entry["k"], k.astype(entry["k"].dtype), idx, axis=1)
-    entry["v"] = jax.lax.dynamic_update_slice_in_dim(
-        entry["v"], v.astype(entry["v"].dtype), idx, axis=1)
+    entry["k"] = store(entry["k"], k.astype(entry["k"].dtype))
+    entry["v"] = store(entry["v"], v.astype(entry["v"].dtype))
     return entry
 
 
@@ -444,13 +451,17 @@ def decode(params: dict, cache: dict, tokens: jax.Array, arch: ArchConfig,
            eng: EngineConfig, *, act_spec=None,
            positions: Optional[jax.Array] = None,
            compute_dtype=jnp.bfloat16) -> Tuple[jax.Array, dict]:
-    """One decode step.  tokens: [B, 1].  Returns (logits [B,1,V], cache)."""
+    """One decode step.  tokens: [B, 1].  Returns (logits [B,1,V], cache).
+
+    cache["pos"] is a scalar (all slots at one position) or a [B] vector
+    (per-slot positions, the continuous-batching serve path)."""
     pos = cache["pos"]
     b = tokens.shape[0]
     x = embed_tokens(params, tokens, arch, compute_dtype)
     x = _constrain(x, act_spec)
     if positions is None:
-        positions = jnp.broadcast_to(pos[None, None], (b, 1))
+        positions = (pos[:, None] if jnp.asarray(pos).ndim == 1
+                     else jnp.broadcast_to(pos[None, None], (b, 1)))
     cos, sin = L.rope_angles(positions, arch.head_dim, arch.rope_theta,
                              arch.mrope_sections if arch.mrope else None)
 

@@ -1,13 +1,17 @@
-"""Serving layer: batched request engines over compiled programs.
+"""Serving layer: continuous-batching request engines over compiled
+programs.
 
 Both engines ride the shared program-serving base (serve/base.py):
-compile -> keyed ProgramCache -> jit-once -> scheduled dispatch.
+compile -> keyed ProgramCache -> jit-once -> scheduled dispatch, with one
+slot-based request queue (`SlotScheduler`) feeding the fabric -- the LM
+engine refills finished decode slots from it between bursts, the CNN
+engine refills partial same-shape waves from it across arrivals.
 
 Import the submodules directly (this initializer stays empty so importing
 one engine never drags in the other's model stack):
 
-    from repro.serve.engine import ServeEngine            # LM slot scheduler
-    from repro.serve.cnn_engine import CNNServeEngine     # CNN wave scheduler
-    from repro.serve.base import ProgramServeBase         # shared pipeline
+    from repro.serve.engine import ServeEngine            # LM decode slots
+    from repro.serve.cnn_engine import CNNServeEngine     # CNN shape waves
+    from repro.serve.base import ProgramServeBase, SlotScheduler
     from repro.serve.program_cache import ProgramCache
 """

@@ -1,21 +1,30 @@
-"""Shared program-serving base: compile -> ProgramCache -> jit -> schedule.
+"""Shared program-serving base: compile -> ProgramCache -> jit -> schedule,
+plus the continuous-batching SlotScheduler both engines feed the fabric
+through.
 
 Both serving engines ride this pipeline (the tentpole of the unified serve
 path): `CNNServeEngine` serves registered CNN fleets as wave-batched
-programs, and the LM `ServeEngine` serves transformer prefill from the same
-kind of keyed cache.  The base owns what they share:
+programs, and the LM `ServeEngine` serves transformer prefill + decode
+programs from the same kind of keyed cache.  The base owns what they share:
 
   * the keyed LRU ProgramCache (own or injected/shared across engines),
     keyed by (model config, EngineConfig, calibration-id, variant);
   * the schedule variant (ASAP / ALAP leveling, or sequential);
   * the per-program jitted-executable store, pruned against the cache so a
     shared cache's evictions drop stale traces here too;
+  * the SlotScheduler -- one slot-based request queue abstraction: the CNN
+    engine keys slot groups by input shape (so models with identical
+    shapes share wave buffers) and refills partial waves across arrival
+    epochs; the LM engine draws prompt requests from it to refill finished
+    decode slots between bursts;
   * cache statistics for the serving benchmarks.
 """
 from __future__ import annotations
 
 import hashlib
-from typing import Callable, Dict, List, Optional, Sequence
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -26,12 +35,15 @@ from repro.core.program_cache import ProgramCache, ProgramKey
 
 
 def calibration_digest(batches: Sequence, params=None,
-                       method: str = "absmax") -> str:
+                       method: str = "absmax",
+                       granularity: str = "per_tensor") -> str:
     """Stable id of the calibration inputs.  The recorded scales depend on
     the batches AND the float params (calibrate() runs the model) AND the
-    calibrator method, so all three are digested: re-registering a model
-    with new weights, new batches, or a different calibrator (absmax vs
-    percentile) must miss the cache, not reuse stale activation scales."""
+    calibrator method AND the scale granularity, so all four are digested:
+    re-registering a model with new weights, new batches, a different
+    calibrator (absmax vs percentile) or a different granularity
+    (per-tensor vs per-channel) must miss the cache, not reuse stale
+    activation scales."""
     h = hashlib.sha1()
     for b in batches:
         a = np.asarray(b)
@@ -41,7 +53,116 @@ def calibration_digest(batches: Sequence, params=None,
         for leaf in jax.tree_util.tree_leaves(params):
             h.update(np.asarray(leaf).tobytes())
     digest = h.hexdigest()[:12]
-    return digest if method == "absmax" else f"{digest}:{method}"
+    if method != "absmax":
+        digest = f"{digest}:{method}"
+    if granularity != "per_tensor":
+        digest = f"{digest}:pc"
+    return digest
+
+
+# ---------------------------------------------------------------------------
+# SlotScheduler: the shared continuous-batching request queue
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SlotStats:
+    """Slot accounting across every dispatch the scheduler served."""
+    submitted: int = 0
+    dispatched: int = 0                  # requests handed out
+    waves: int = 0                       # full-or-forced groups handed out
+    padded_slots: int = 0                # empty slots in forced groups
+    refilled_waves: int = 0              # groups spanning >1 arrival epoch
+
+    @property
+    def fill_rate(self) -> float:
+        slots = self.dispatched + self.padded_slots
+        return self.dispatched / slots if slots else 0.0
+
+
+@dataclass
+class _Entry:
+    ticket: int
+    epoch: int
+    payload: object
+
+
+class SlotScheduler:
+    """One slot-based request queue for every serving engine.
+
+    Requests enter FIFO under a hashable group key (the CNN engine groups
+    by input shape so same-shape models share wave buffers; the LM engine
+    uses a single group whose takes refill finished decode slots).  A
+    group's requests leave in waves of `slots`; a partial group is NOT
+    dispatched until either later arrivals top it up (continuous batching)
+    or the caller forces a drain (`take_wave(force=True)` pads, and the
+    padding is what the fill-rate metric charges).  `epoch` advances on
+    every dispatch round (`next_epoch`), so a dispatched wave whose entries
+    span epochs is counted as a refilled wave -- slots that would have been
+    pad under flush-per-arrival batching.
+    """
+
+    def __init__(self, slots: int):
+        if slots < 1:
+            raise ValueError("slots must be >= 1")
+        self.slots = slots
+        self.stats = SlotStats()
+        self.epoch = 0
+        self._queues: "OrderedDict[Hashable, List[_Entry]]" = OrderedDict()
+        self._next_ticket = 0
+
+    def submit(self, group: Hashable, payload) -> int:
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._queues.setdefault(group, []).append(
+            _Entry(ticket, self.epoch, payload))
+        self.stats.submitted += 1
+        return ticket
+
+    def next_epoch(self) -> None:
+        """Mark a dispatch round boundary (a pump/flush or decode-burst
+        edge); entries surviving it count as refill candidates."""
+        self.epoch += 1
+
+    def groups(self) -> List[Hashable]:
+        return [g for g, q in self._queues.items() if q]
+
+    def pending(self, group: Optional[Hashable] = None) -> int:
+        if group is not None:
+            return len(self._queues.get(group, []))
+        return sum(len(q) for q in self._queues.values())
+
+    def peek(self, group: Hashable) -> List[object]:
+        """The group's queued payloads, FIFO order, without dispatching
+        (the LM engine sizes its fixed prefill width from these)."""
+        return [e.payload for e in self._queues.get(group, [])]
+
+    def take(self, group: Hashable, limit: Optional[int] = None
+             ) -> List[Tuple[int, object]]:
+        """FIFO-pop up to `limit` (default: the slot count) requests -- the
+        LM engine's slot-refill entry point."""
+        q = self._queues.get(group, [])
+        n = min(len(q), self.slots if limit is None else limit)
+        taken, self._queues[group] = q[:n], q[n:]
+        self.stats.dispatched += len(taken)
+        if taken and len({e.epoch for e in taken}) > 1:
+            self.stats.refilled_waves += 1
+        return [(e.ticket, e.payload) for e in taken]
+
+    def take_wave(self, group: Hashable, force: bool = False
+                  ) -> Optional[List[Tuple[int, object]]]:
+        """Pop one wave of exactly `slots` requests, or None when the group
+        is partial.  force=True drains a final partial wave (its empty
+        slots are charged to padded_slots)."""
+        q = self._queues.get(group, [])
+        if not q or (len(q) < self.slots and not force):
+            return None
+        taken, self._queues[group] = q[:self.slots], q[self.slots:]
+        self.stats.dispatched += len(taken)
+        self.stats.waves += 1
+        self.stats.padded_slots += self.slots - len(taken)
+        if len({e.epoch for e in taken}) > 1:
+            self.stats.refilled_waves += 1
+        return [(e.ticket, e.payload) for e in taken]
 
 
 class ProgramServeBase:

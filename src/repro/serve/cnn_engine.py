@@ -1,17 +1,22 @@
-"""CNN serving engine: cached programs + wave batching + concurrent PEs.
+"""CNN serving engine: cached programs + continuous wave batching +
+concurrent PEs.
 
 The CNN instance of the shared program-serving pipeline (serve/base.py);
-the LM `ServeEngine` (serve/engine.py) rides the same base for transformer
-prefill.  One engine serves many registered CNNs on one fabric (the f-CNNx
-setting):
+the LM `ServeEngine` (serve/engine.py) rides the same base -- and the same
+SlotScheduler -- for transformer prefill + decode.  One engine serves many
+registered CNNs on one fabric (the f-CNNx setting):
 
   * compile  -- each (model, engine, calibration) triple lowers once to a
     static-int8 (or dynamic) engine program;
   * cache    -- programs live in a keyed LRU ProgramCache, so a request
     trace that revisits models never re-traces or re-calibrates;
-  * batch    -- incoming single-image requests queue in submission order
-    and flush as fixed-size waves per model (pad-and-mask: the wave shape
-    is static, so each program JITs exactly once);
+  * batch    -- incoming single-image requests queue in the shared
+    SlotScheduler keyed by INPUT SHAPE, not by model: models with identical
+    shapes draw slots from one queue, so a tail wave packs requests from
+    several models into one buffer.  `pump()` dispatches only FULL waves
+    and leaves partial waves queued for later arrivals to top up
+    (continuous batching); `flush()` drains, padding the final partial
+    wave per shape (the only place pad slots are charged);
   * schedule -- the programs carry the level schedule from
     compiler/schedule.py (ASAP or ALAP), so execution dispatches
     independent ops (a DWC branch next to a Conv branch, MISC alongside
@@ -21,14 +26,21 @@ setting):
     folded into the param tree (passes.fold_weight_layouts), so traced
     programs stop re-laying-out weights per call.
 
+A multi-model wave executes the shared buffer once per distinct model in
+it and each request reads its own slot's logits (CNN programs are
+batch-row independent, so foreign slots cannot perturb a request's
+output -- the wave parity test pins that).  `wave_stats.waves` counts
+physical buffers; `program_execs` counts program runs.
+
 Usage (examples/serve_cnn_int8.py is the runnable version):
 
     engine = CNNServeEngine(eng_lib.paper_engine(), wave_size=4)
     engine.register(cfg, params, calib_batches=[batch])
     for img in images:
         engine.submit(cfg.name, img)
-    logits = engine.flush()          # per-request logits, submission order
-    print(engine.stats())            # cache hit-rate, wave occupancy
+        engine.pump()                # dispatch full waves only
+    logits = engine.flush()          # drain; per-request, submission order
+    print(engine.stats())            # cache hit-rate, wave fill-rate
 """
 from __future__ import annotations
 
@@ -43,7 +55,8 @@ from repro import compiler
 from repro.compiler.executor import Program
 from repro.core import engine as eng_lib
 from repro.core.config import CNNConfig, EngineConfig
-from repro.serve.base import ProgramServeBase, calibration_digest
+from repro.serve.base import (ProgramServeBase, SlotScheduler,
+                              calibration_digest)
 from repro.serve.program_cache import ProgramCache
 
 __all__ = ["CNNServeEngine", "calibration_digest"]
@@ -57,19 +70,27 @@ class _Model:
     calib_batches: Optional[List[jax.Array]]
     calib_id: Optional[str]
     calibrator: str = "absmax"
+    granularity: str = "per_tensor"
     folded: Optional[Tuple[Program, object]] = None   # layout-folded qparams
 
 
 @dataclasses.dataclass
 class WaveStats:
     requests: int = 0
-    waves: int = 0
-    padded: int = 0                   # mask-only slots across all waves
+    waves: int = 0                    # physical wave buffers dispatched
+    padded: int = 0                   # empty slots across drained waves
+    program_execs: int = 0            # program runs (>= waves: multi-model
+                                      # waves run once per distinct model)
+    refilled_waves: int = 0           # waves topped up across pump epochs
 
     @property
     def occupancy(self) -> float:
         slots = self.requests + self.padded
         return self.requests / slots if slots else 0.0
+
+    # fill-rate over physical buffers: the continuous-batching metric the
+    # serving benchmark compares against the pad-and-mask baseline
+    fill_rate = occupancy
 
 
 class CNNServeEngine(ProgramServeBase):
@@ -87,30 +108,34 @@ class CNNServeEngine(ProgramServeBase):
         self.wave_size = wave_size
         self.wave_stats = WaveStats()
         self._models: Dict[str, _Model] = {}
-        self._queue: List[Tuple[int, str, np.ndarray]] = []
-        self._next_ticket = 0
+        self._sched = SlotScheduler(wave_size)
 
     # -- model registry ------------------------------------------------------
 
     def register(self, cfg: CNNConfig, params,
                  calib_batches: Optional[Sequence[jax.Array]] = None,
                  calib_id: Optional[str] = None,
-                 calibrator: str = "absmax") -> str:
+                 calibrator: str = "absmax",
+                 granularity: str = "per_tensor") -> str:
         """Register a model under cfg.name.  `params` is the FLOAT tree;
         weights are engine-quantized here, and `calib_batches` (when given
         and the engine is quantized) select the static-int8 program under
-        the chosen `calibrator` ("absmax" or a percentile like "p99.9" --
-        part of the calibration-id, so the two never share a cache entry).
-        The program itself compiles lazily on first request."""
+        the chosen `calibrator` ("absmax" or a percentile like "p99.9")
+        and `granularity` ("per_tensor", or "per_channel" to keep channel
+        scale vectors on the DWC-consumed edges) -- both are part of the
+        calibration-id, so no two settings share a cache entry.  The
+        program itself compiles lazily on first request."""
         batches = list(calib_batches) if calib_batches is not None else None
         if self.eng.quant == "none":
             batches = None            # float fabric: dynamic program only
         if batches is not None and calib_id is None:
-            calib_id = calibration_digest(batches, params, calibrator)
+            calib_id = calibration_digest(batches, params, calibrator,
+                                          granularity)
         self._models[cfg.name] = _Model(
             cfg=cfg, params=params,
             qparams=eng_lib.quantize_params(params, self.eng),
-            calib_batches=batches, calib_id=calib_id, calibrator=calibrator)
+            calib_batches=batches, calib_id=calib_id, calibrator=calibrator,
+            granularity=granularity)
         return cfg.name
 
     def models(self) -> List[str]:
@@ -127,7 +152,8 @@ class CNNServeEngine(ProgramServeBase):
                                         policy=self.schedule_policy)
         return compiler.compile_calibrated(
             m.cfg, m.params, m.calib_batches, scheduled=self.scheduled,
-            policy=self.schedule_policy, method=m.calibrator)
+            policy=self.schedule_policy, method=m.calibrator,
+            granularity=m.granularity)
 
     def program_for(self, name: str) -> Program:
         """The model's compiled program: cache hit, or compile-and-insert."""
@@ -158,8 +184,11 @@ class CNNServeEngine(ProgramServeBase):
     # -- request batching ----------------------------------------------------
 
     def submit(self, name: str, image: np.ndarray) -> int:
-        """Queue one [H, W, C] image request; returns its ticket (the index
-        of its logits in the next flush())."""
+        """Queue one [H, W, C] image request; returns its ticket: the key
+        of its logits in a pump() result dict, and the SUBMISSION-ORDER
+        rank within a flush() result list (flush returns only requests
+        still queued when it runs, ordered by ticket -- use infer() or
+        pump() when you need ticket-keyed results)."""
         if name not in self._models:
             raise KeyError(f"model {name!r} not registered "
                            f"(have {self.models()})")
@@ -167,54 +196,68 @@ class CNNServeEngine(ProgramServeBase):
         cfg = self._models[name].cfg
         want = (cfg.input_hw, cfg.input_hw, cfg.input_ch)
         if image.shape != want:
-            # reject at submission: a bad request must not reach flush(),
+            # reject at submission: a bad request must not reach dispatch,
             # where the queue is already drained and a shape error would
             # drop every other pending request with it
             raise ValueError(f"submit() takes one {want} image per "
                              f"{name!r} request, got shape {image.shape}")
-        ticket = self._next_ticket
-        self._next_ticket += 1
-        self._queue.append((ticket, name, image))
-        return ticket
+        # slot groups are keyed by shape: same-shape models share waves
+        return self._sched.submit(want, (name, image))
+
+    def pending(self) -> int:
+        return self._sched.pending()
+
+    def pump(self) -> Dict[int, np.ndarray]:
+        """Dispatch every FULL wave and return its results; partial waves
+        stay queued for later arrivals to refill (continuous batching)."""
+        return self._dispatch(force=False)
 
     def flush(self) -> List[np.ndarray]:
         """Run every queued request and return logits in submission order.
 
-        Requests group per model (preserving each model's internal order)
-        and execute as fixed-size waves: the last wave of a model pads with
-        zero images whose outputs are masked away."""
-        results = self._flush_results()
+        Full waves dispatch as-is; each shape group's final partial wave is
+        drained with zero-padded (masked-away) slots -- the pad-and-mask
+        cost continuous pump() avoids."""
+        results = self._dispatch(force=True)
         return [results[t] for t in sorted(results)]
 
-    def _flush_results(self) -> Dict[int, np.ndarray]:
-        by_model: Dict[str, List[Tuple[int, np.ndarray]]] = {}
-        for ticket, name, image in self._queue:
-            by_model.setdefault(name, []).append((ticket, image))
-        self._queue.clear()
+    def _dispatch(self, force: bool) -> Dict[int, np.ndarray]:
         results: Dict[int, np.ndarray] = {}
-        for name, items in by_model.items():
-            run, qparams = self._executor_for(name)
-            for start in range(0, len(items), self.wave_size):
-                wave_items = items[start:start + self.wave_size]
-                n = len(wave_items)
-                wave = np.zeros((self.wave_size,) + wave_items[0][1].shape,
-                                np.float32)
-                for i, (_, img) in enumerate(wave_items):
-                    wave[i] = img
-                logits = np.asarray(run(qparams, jnp.asarray(wave)))
-                self.wave_stats.requests += n
-                self.wave_stats.waves += 1
-                self.wave_stats.padded += self.wave_size - n
-                for i, (ticket, _) in enumerate(wave_items):
-                    results[ticket] = logits[i]     # mask the pad slots
+        for group in self._sched.groups():
+            while True:
+                wave = self._sched.take_wave(group, force=force)
+                if wave is None:
+                    break
+                self._run_wave(wave, group, results)
+        self._sched.next_epoch()
         return results
+
+    def _run_wave(self, wave, shape, results: Dict[int, np.ndarray]) -> None:
+        """Execute one wave buffer.  Slots may belong to different models
+        (same shape): the buffer runs once per distinct model and each
+        ticket reads its own slot's row."""
+        buf = np.zeros((self.wave_size,) + shape, np.float32)
+        slots_of: Dict[str, List[Tuple[int, int]]] = {}
+        for slot, (ticket, (name, img)) in enumerate(wave):
+            buf[slot] = img
+            slots_of.setdefault(name, []).append((slot, ticket))
+        jbuf = jnp.asarray(buf)
+        for name, slots in slots_of.items():
+            run, qparams = self._executor_for(name)
+            logits = np.asarray(run(qparams, jbuf))
+            self.wave_stats.program_execs += 1
+            for slot, ticket in slots:
+                results[ticket] = logits[slot]      # mask foreign/pad slots
+        self.wave_stats.requests += len(wave)
+        self.wave_stats.waves += 1
+        self.wave_stats.padded += self.wave_size - len(wave)
 
     def infer(self, name: str, images) -> np.ndarray:
         """Convenience: submit a [N, H, W, C] batch as N requests and flush.
         Returns logits [N, num_classes]."""
         images = np.asarray(images)
         tickets = [self.submit(name, img) for img in images]
-        results = self._flush_results()
+        results = self._dispatch(force=True)
         return np.stack([results[t] for t in tickets])
 
     # -- stats ---------------------------------------------------------------
@@ -222,10 +265,15 @@ class CNNServeEngine(ProgramServeBase):
     def stats(self) -> Dict[str, object]:
         out = {"models": len(self._models)}
         out.update(self.cache_stats())
+        self.wave_stats.refilled_waves = self._sched.stats.refilled_waves
         out.update({
             "waves": self.wave_stats.waves,
             "requests": self.wave_stats.requests,
             "padded_slots": self.wave_stats.padded,
             "wave_occupancy": self.wave_stats.occupancy,
+            "wave_fill_rate": self.wave_stats.occupancy,
+            "program_execs": self.wave_stats.program_execs,
+            "refilled_waves": self._sched.stats.refilled_waves,
+            "queued": self._sched.pending(),
         })
         return out

@@ -284,3 +284,191 @@ class TestDynamicProgramStore:
         prog = compiler.compile_calibrated(cfg, params, _calib())
         assert prog.static
         assert len(compiler.program_cache()) == before
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching: pump/refill, shape-shared waves, fill-rate
+# ---------------------------------------------------------------------------
+
+class TestContinuousWaves:
+    def test_pump_dispatches_full_waves_only(self):
+        cfg, params = _model("squeezenet")
+        engine = CNNServeEngine(W8, wave_size=2)
+        engine.register(cfg, params, calib_batches=_calib())
+        images = _images(5)
+        tickets = [engine.submit(cfg.name, img) for img in images]
+        got = engine.pump()
+        assert sorted(got) == tickets[:4]        # two full waves
+        assert engine.pending() == 1             # partial wave stays queued
+        assert engine.wave_stats.padded == 0
+        rest = engine.flush()                    # drain pads the tail
+        assert len(rest) == 1
+        assert engine.wave_stats.padded == 1
+        assert engine.wave_stats.waves == 3
+
+    def test_partial_wave_refills_across_arrivals(self):
+        """A partial wave left by pump() is topped up by later arrivals
+        instead of being padded -- the continuous-batching win."""
+        cfg, params = _model("squeezenet")
+        engine = CNNServeEngine(W8, wave_size=4)
+        engine.register(cfg, params, calib_batches=_calib())
+        images = _images(8)
+        for img in images[:2]:
+            engine.submit(cfg.name, img)
+        assert engine.pump() == {}               # partial: nothing dispatches
+        for img in images[2:6]:
+            engine.submit(cfg.name, img)
+        got = engine.pump()                      # refilled to a full wave
+        assert len(got) == 4
+        assert engine.wave_stats.padded == 0
+        assert engine.stats()["refilled_waves"] >= 1
+
+    def test_same_shape_models_share_tail_wave(self):
+        """Two same-shape models' leftovers pack into ONE physical wave
+        (executed once per model), instead of two padded waves."""
+        cfg_a, params_a = _model("squeezenet", seed=0)
+        cfg_b, params_b = _model("mobilenetv2", seed=1)
+        engine = CNNServeEngine(W8, wave_size=4)
+        engine.register(cfg_a, params_a, calib_batches=_calib())
+        engine.register(cfg_b, params_b, calib_batches=_calib())
+        images = _images(4)
+        ta = [engine.submit(cfg_a.name, images[i]) for i in range(2)]
+        tb = [engine.submit(cfg_b.name, images[i]) for i in range(2, 4)]
+        out = engine.flush()
+        assert len(out) == 4
+        assert engine.wave_stats.waves == 1          # one shared buffer
+        assert engine.wave_stats.padded == 0
+        assert engine.wave_stats.program_execs == 2  # once per model
+        # each request still gets its own model's logits
+        for t, cfg, params, idx in [(ta[0], cfg_a, params_a, 0),
+                                    (tb[0], cfg_b, params_b, 2)]:
+            prog = engine.program_for(cfg.name)
+            solo = np.array(compiler.execute(
+                prog, eng_lib.quantize_params(params, W8),
+                jnp.asarray(images[idx:idx + 1]), W8))
+            np.testing.assert_allclose(out[t], solo[0], rtol=1e-4,
+                                       atol=1e-4)
+
+    def test_arrival_order_invariance(self):
+        """Shuffled mixed-model arrivals served with pump-per-arrival +
+        final drain return the same per-ticket logits as serial one-image
+        inference."""
+        cfg_a, params_a = _model("squeezenet", seed=0)
+        cfg_b, params_b = _model("mobilenetv2", seed=1)
+        images = _images(6)
+        names = [cfg_a.name, cfg_b.name] * 3
+        serial = {}
+        eng0 = CNNServeEngine(W8, wave_size=1)
+        eng0.register(cfg_a, params_a, calib_batches=_calib())
+        eng0.register(cfg_b, params_b, calib_batches=_calib())
+        for i, (n, img) in enumerate(zip(names, images)):
+            serial[i] = eng0.infer(n, img[None])[0]
+        for seed in range(3):
+            order = list(range(6))
+            np.random.default_rng(seed).shuffle(order)
+            engine = CNNServeEngine(W8, wave_size=4)
+            engine.register(cfg_a, params_a, calib_batches=_calib())
+            engine.register(cfg_b, params_b, calib_batches=_calib())
+            results = {}
+            tickets = {}
+            for i in order:
+                tickets[i] = engine.submit(names[i], images[i])
+                results.update(engine.pump())
+            # drain the tail
+            rest = engine._dispatch(force=True)
+            results.update(rest)
+            for i in order:
+                np.testing.assert_allclose(
+                    results[tickets[i]], serial[i], rtol=1e-4, atol=1e-4,
+                    err_msg=f"req {i} seed {seed}")
+
+    def test_fill_rate_beats_pad_and_mask(self):
+        """Acceptance: continuous wave fill-rate >= the flush-per-arrival
+        pad-and-mask baseline on a mixed-arrival trace."""
+        cfg_a, params_a = _model("squeezenet", seed=0)
+        cfg_b, params_b = _model("mobilenetv2", seed=1)
+        images = _images(10)
+        names = [cfg_a.name, cfg_b.name] * 5
+
+        def serve(continuous):
+            engine = CNNServeEngine(W8, wave_size=4)
+            engine.register(cfg_a, params_a, calib_batches=_calib())
+            engine.register(cfg_b, params_b, calib_batches=_calib())
+            for n, img in zip(names, images):
+                engine.submit(n, img)
+                if continuous:
+                    engine.pump()
+                else:
+                    engine.flush()
+            engine.flush()
+            return engine.stats()["wave_fill_rate"]
+
+        base, cont = serve(False), serve(True)
+        assert cont >= base
+        assert cont >= 0.8                        # 10 reqs, >=2 full waves
+
+
+# ---------------------------------------------------------------------------
+# Per-channel static activation scales
+# ---------------------------------------------------------------------------
+
+class TestPerChannelCalibration:
+    def test_digest_distinct_and_registry(self):
+        cfg, params = _model("mobilenetv2")
+        d_pt = calibration_digest(_calib(), params, "absmax", "per_tensor")
+        d_pc = calibration_digest(_calib(), params, "absmax", "per_channel")
+        assert d_pt != d_pc
+        engine = CNNServeEngine(W8, wave_size=2)
+        engine.register(cfg, params, calib_batches=_calib(),
+                        granularity="per_channel")
+        assert engine._models[cfg.name].calib_id == d_pc
+
+    def test_plan_keeps_only_dwc_consumed_edges(self):
+        """Vectors survive exactly where the channelwise DWC engine
+        consumes the edge; every other edge collapses to its channel max
+        (= the per-tensor scale)."""
+        cfg, params = _model("mobilenetv2")
+        prog_pc = compiler.compile_calibrated(cfg, params, _calib(),
+                                              granularity="per_channel")
+        prog_pt = compiler.compile_calibrated(cfg, params, _calib())
+        g, plan = prog_pc.graph, prog_pc.plan
+        consumers = g.consumers()
+        kept = 0
+        for nid, s in plan.out_scale.items():
+            if isinstance(s, tuple):
+                kept += 1
+                assert consumers[nid]
+                assert all(isinstance(g.nodes[c], compiler.DwcOp)
+                           for c in consumers[nid])
+                # collapsing the vector reproduces the per-tensor scale
+                assert max(s) == pytest.approx(
+                    prog_pt.plan.out_scale[nid], rel=1e-6)
+            else:
+                assert s == pytest.approx(prog_pt.plan.out_scale[nid],
+                                          rel=1e-6)
+        assert kept == plan.stats["per_channel_edges"] > 0
+        assert prog_pc.f32_roundtrips() == 0
+
+    @pytest.mark.parametrize("backend", ["ref", "pallas"])
+    def test_per_channel_program_executes(self, backend):
+        cfg, params = _model("mobilenetv2")
+        eng = dataclasses.replace(eng_lib.paper_engine(), backend=backend)
+        prog = compiler.compile_calibrated(cfg, params, _calib(),
+                                           granularity="per_channel")
+        qparams = eng_lib.quantize_params(params, eng)
+        images = _images(2)
+        out = np.array(compiler.execute(prog, qparams,
+                                        jnp.asarray(images), eng))
+        assert np.isfinite(out).all()
+        # tracks the per-tensor static program (same calibration data)
+        pt = compiler.compile_calibrated(cfg, params, _calib())
+        ref_out = np.array(compiler.execute(pt, qparams,
+                                            jnp.asarray(images), eng))
+        scale = max(np.max(np.abs(ref_out)), 1e-3)
+        assert np.max(np.abs(out - ref_out)) <= 0.5 * scale
+
+    def test_per_channel_requires_absmax(self):
+        with pytest.raises(ValueError):
+            compiler.make_calibrator("p99.9", "per_channel")
+        with pytest.raises(ValueError):
+            compiler.make_calibrator("absmax", "per_row")

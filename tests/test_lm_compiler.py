@@ -291,21 +291,27 @@ class TestServeEnginePrograms:
         prompts = [rng.integers(0, arch.vocab_size, size=6)
                    for _ in range(2)]
         se.generate(prompts, max_new_tokens=2)
-        assert se.cache.stats.misses == 1
+        # one compile per program: prefill + decode, from ONE calibration
+        assert se.cache.stats.misses == 2
         p1 = se.prefill_program()
-        assert p1.static                      # calibrated static program
+        d1 = se.decode_program()
+        assert p1.static and d1.static        # calibrated static programs
+        assert d1.kind == "decode" and p1.kind == "forward"
         se.generate(prompts, max_new_tokens=2)
-        assert se.cache.stats.misses == 1     # no recompile on re-serve
+        assert se.cache.stats.misses == 2     # no recompile on re-serve
         assert se.cache.stats.hits >= 2
         assert se.prefill_program() is p1
-        # a second engine on the same fabric shares the compiled program
+        # a second engine on the same fabric shares the compiled programs
         se2 = ServeEngine(arch, params, W8, batch_size=2, max_seq=32,
                           calib_batches=calib, cache=se.cache)
         assert se2.prefill_program() is p1
-        assert se.cache.stats.misses == 1
+        assert se2.decode_program() is d1
+        assert se.cache.stats.misses == 2
         st = se.stats()
         assert st["compiled_prefill"] and st["prefill_levels"] > 0
         assert 0 < st["prefill_occupancy"] <= 1
+        assert st["compiled_decode"] and st["decode_levels"] > 0
+        assert st["lowering_blockers"] == []
 
     def test_calibrator_method_keys_distinct_programs(self):
         """absmax and percentile calibrations never share a cache entry."""
