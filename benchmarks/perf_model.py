@@ -225,6 +225,119 @@ def modeled_fps_pipelined(cfg: CNNConfig, eng: EngineModel) -> float:
 
 
 # ---------------------------------------------------------------------------
+# CNN program node times: the GRAPH walk (prices fused programs)
+# ---------------------------------------------------------------------------
+
+def _shape_of(schema, path):
+    from repro.compiler import get_param
+    return get_param(schema, path).shape
+
+
+def cnn_node_times(graph, cfg: CNNConfig, eng: EngineModel = None) -> dict:
+    """Modeled seconds per op of a CNN program graph ({node_id: seconds}).
+
+    Unlike `_layer_contribs` -- which walks the CNNConfig and therefore
+    always prices the UNFUSED op list -- this walks the compiled graph
+    itself, so epilogue-fused programs are priced as what they execute: a
+    fused node costs its conv/dwc launch plus the residual operand read,
+    while the absorbed MISC add/pool passes (their read-read-write HBM
+    traffic) disappear.  Feeds compiler.time_weighted_occupancy, which is
+    what `serve_cnn --summary` reports for the fused graph.
+
+    Channel/spatial shapes come from the model schema (cnn_schema) + stride
+    propagation, so the walk needs no parameter values.
+    """
+    from repro.compiler import graph as G
+    from repro.models.cnn import cnn_schema
+
+    eng = eng or OURS
+    schema = cnn_schema(cfg)
+    hw: dict = {}
+    ch: dict = {}
+    out: dict = {}
+    for n in graph.nodes:
+        if isinstance(n, G.InputOp):
+            hw[n.id], ch[n.id] = cfg.input_hw, cfg.input_ch
+            out[n.id] = 0.0
+            continue
+        src = n.inputs[0] if n.inputs else None
+        if isinstance(n, G.ConvOp):
+            k, _, ic, oc = _shape_of(schema, n.w)
+            h = -(-hw[src] // n.stride)
+            px = h * h
+            t = _conv_time(px, ic, oc, k, eng, first_layer=n.first_layer)
+            ep = n.epilogue
+            if ep is not None and ep.add:
+                t += px * oc * eng.act_bytes / HBM     # residual operand read
+            hw[n.id], ch[n.id] = h, oc
+            if ep is not None and ep.pool != "none":
+                hw[n.id] = _pool_hw(h, ep.pool, ep.pool_kernel,
+                                    ep.pool_stride)
+            out[n.id] = t
+        elif isinstance(n, G.DwcOp):
+            k, _, c = _shape_of(schema, n.w)
+            h = -(-hw[src] // n.stride)
+            px = h * h
+            t = _dwc_time(px, c, k, eng)
+            ep = n.epilogue
+            if ep is not None and ep.add:
+                t += px * c * eng.act_bytes / HBM
+            hw[n.id], ch[n.id] = h, c
+            if ep is not None and ep.pool != "none":
+                hw[n.id] = _pool_hw(h, ep.pool, ep.pool_kernel,
+                                    ep.pool_stride)
+            out[n.id] = t
+        elif isinstance(n, G.AddOp):
+            px = hw[src] * hw[src]
+            c = ch[src]
+            # a standalone MISC add is a read-read-write pass at the
+            # pipeline's activation width (what fusion eliminates)
+            out[n.id] = 3.0 * px * c * eng.act_bytes / HBM
+            hw[n.id], ch[n.id] = hw[src], c
+        elif isinstance(n, G.PoolOp):
+            h_out = _pool_hw(hw[src], n.pool, n.kernel, n.stride)
+            c = ch[src]
+            out[n.id] = ((hw[src] * hw[src] + h_out * h_out)
+                         * c * eng.act_bytes / HBM)
+            hw[n.id], ch[n.id] = h_out, c
+        elif isinstance(n, G.ConcatOp):
+            hw[n.id] = hw[src]
+            ch[n.id] = sum(ch[i] for i in n.inputs)
+            out[n.id] = 0.0                    # bank interleave
+        elif isinstance(n, G.LinearOp):
+            ci, co = _shape_of(schema, n.w)
+            out[n.id] = 2.0 * ci * co / PEAK_INT8
+            hw[n.id], ch[n.id] = 1, co
+        else:
+            out[n.id] = 0.0
+            hw[n.id], ch[n.id] = hw.get(src, 1), ch.get(src, 1)
+    return out
+
+
+def _pool_hw(h: int, pool: str, k: int, stride: int) -> int:
+    """VALID-window output size -- the math the executor and the fused
+    kernels actually run (kernels/_epilogue.pooled_hw)."""
+    if pool == "global":
+        return 1
+    return max((h - k) // max(stride, 1) + 1, 1)
+
+
+def cnn_busy_fractions(cfg: CNNConfig, eng: EngineModel = None,
+                       policy: str = "asap", fuse: bool = True) -> dict:
+    """Time-weighted per-engine busy fractions of a CNN program graph
+    (compiler.time_weighted_occupancy over cnn_node_times) -- structural,
+    no execution."""
+    from repro import compiler
+
+    g = compiler.build_graph(cfg)
+    if fuse:
+        g, _ = compiler.fuse_epilogues(g)
+    sched = compiler.level_schedule(g, policy)
+    times = cnn_node_times(g, cfg, eng)
+    return compiler.time_weighted_occupancy(g, sched, times)
+
+
+# ---------------------------------------------------------------------------
 # LM program node times (time-weighted busy fractions for serve_lm)
 # ---------------------------------------------------------------------------
 

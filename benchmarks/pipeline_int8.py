@@ -69,6 +69,9 @@ def _measure_cpu(name: str, reps: int = 3):
         "f32_rt_static": prog.f32_roundtrips(),
         "f32_rt_dynamic": dyn_prog.f32_roundtrips(),
         "folded": prog.plan.stats["folded_requants"],
+        "launches": compiler.launch_count(prog.graph),
+        "launches_unfused": compiler.launch_count(compiler.build_graph(cfg)),
+        "fused_ops": prog.plan.stats.get("fused_ops", 0),
     }
 
 
@@ -93,5 +96,7 @@ def run(measure: bool = True):
                 f"nodes={m['nodes']},"
                 f"f32_roundtrips={m['f32_rt_static']}"
                 f"(dynamic {m['f32_rt_dynamic']}),"
-                f"folded_requants={m['folded']}(hw={MEASURE_HW})"))
+                f"folded_requants={m['folded']},"
+                f"launches={m['launches']}vs{m['launches_unfused']}unfused,"
+                f"fused_ops={m['fused_ops']}(hw={MEASURE_HW})"))
     return rows

@@ -1,6 +1,6 @@
-"""CNN serving throughput: program cache + wave batching + overlap credit.
+"""CNN serving throughput: program cache + wave batching + fused epilogues.
 
-Three evidence lines for the serving layer (serve/cnn_engine.py):
+Evidence lines for the serving layer (serve/cnn_engine.py):
 
   * MODELED: the per-engine-unit overlap model (perf_model.py) -- in the
     pipelined steady state throughput is set by the busiest unit (Conv PE
@@ -11,12 +11,20 @@ Three evidence lines for the serving layer (serve/cnn_engine.py):
     recalibrates + retraces), plus the cache hit-rate of the trace.
   * MEASURED waves: per-request latency of wave-batched vs one-by-one
     execution on the same cached program.
+  * STRUCTURAL fusion: kernel launches + materialized intermediates per
+    image of the served (epilogue-fused) programs vs their unfused twins,
+    and per-level / time-weighted engine occupancy of the fused graphs
+    under the asap vs slack leveling policies.
 
     PYTHONPATH=src python -m benchmarks.serve_cnn [--summary]
 
---summary prints the one-line program-cache hit-rate (scripts/check.sh
-appends it to the gate output).
+--summary prints the one-line program-cache + fusion summary (scripts/
+check.sh appends it to the gate output) and writes the machine-readable
+BENCH_serve.json snapshot next to the repo root, so the serving perf
+trajectory is tracked across PRs.
 """
+import json
+import os
 import time
 
 import numpy as np
@@ -28,6 +36,8 @@ TRACE_MODELS = ("squeezenet", "mobilenetv2", "resnet50")
 TRACE_LEN = 40                              # requests over the 3 models
 SERVE_HW = 32                               # reduced input for CPU wall-clock
 WAVE = 4
+BENCH_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_serve.json")
 
 
 def _reduced(name):
@@ -91,17 +101,40 @@ def serve_stats(wave_batch: bool = True, fleet=None, trace=None):
     wall = _serve_trace(engine, fleet, trace)
     stats = engine.stats()
     stats["wall_s"] = wall
-    # per-level engine occupancy of the served programs, ASAP vs ALAP
-    occ, occ_alap = [], []
+    stats["requests_per_s"] = len(trace) / wall if wall > 0 else 0.0
+    # served (fused) programs: per-level + time-weighted engine occupancy
+    # under each leveling policy, and launches/image vs the unfused twin
+    occ = {"asap": [], "alap": [], "slack": []}
+    tw = {"asap": [], "slack": []}
+    launches = {}
     for cfg, _, _ in fleet:
         program = engine.program_for(cfg.name)
-        occ.append(compiler.engine_occupancy(
-            program.graph, program.schedule)["occupancy"])
-        occ_alap.append(compiler.engine_occupancy(
-            program.graph,
-            compiler.level_schedule(program.graph, "alap"))["occupancy"])
-    stats["engine_occupancy"] = float(np.mean(occ))
-    stats["engine_occupancy_alap"] = float(np.mean(occ_alap))
+        g = program.graph
+        unfused = compiler.build_graph(cfg)
+        times = pm.cnn_node_times(g, cfg)
+        for policy in occ:
+            sched = (program.schedule if policy == "asap"
+                     else compiler.level_schedule(g, policy))
+            occ[policy].append(
+                compiler.engine_occupancy(g, sched)["occupancy"])
+            if policy in tw:
+                tw[policy].append(compiler.time_weighted_occupancy(
+                    g, sched, times)["occupancy"])
+        fs = compiler.fusion_stats(g)
+        launches[cfg.name] = {
+            "unfused": compiler.launch_count(unfused),
+            "fused": fs["launches"],
+            "fused_ops": fs["fused_ops"],
+            "materialized_edges": fs["materialized_edges"],
+            "materialized_unfused":
+                compiler.fusion_stats(unfused)["materialized_edges"],
+        }
+    stats["engine_occupancy"] = float(np.mean(occ["asap"]))
+    stats["engine_occupancy_alap"] = float(np.mean(occ["alap"]))
+    stats["engine_occupancy_slack"] = float(np.mean(occ["slack"]))
+    stats["tw_occupancy"] = float(np.mean(tw["asap"]))
+    stats["tw_occupancy_slack"] = float(np.mean(tw["slack"]))
+    stats["launches"] = launches
     if wave_batch:
         # the same trace arriving all at once: full waves per model
         engine2 = CNNServeEngine(eng_lib.paper_engine(), wave_size=WAVE,
@@ -184,6 +217,16 @@ def run(measure: bool = True):
             f"serve/model/{name}", 0.0,
             f"scheduled_fps={fps_pipe:.0f},sequential_fps={fps_seq:.0f},"
             f"overlap_credit={credit:.2f}"))
+    zoo = zoo_fusion_occupancy()
+    for name, z in zoo.items():
+        rows.append((
+            f"serve/fusion/{name}", 0.0,
+            f"launches={z['launches_fused']}vs{z['launches_unfused']}"
+            f"(-{100 * z['launch_reduction']:.0f}%),"
+            f"fused_ops={z['fused_ops']},"
+            f"occ_asap={z['occupancy']['asap']:.2f},"
+            f"occ_slack={z['occupancy']['slack']:.2f},"
+            f"tw_occ_slack={z['tw_occupancy_slack']:.2f}"))
     if measure:
         fleet = _build_fleet()
         trace = _trace()
@@ -211,23 +254,104 @@ def run(measure: bool = True):
             f"pad_and_mask={fr['baseline_fill_rate']:.2f},"
             f"waves={fr['continuous_waves']}vs{fr['baseline_waves']},"
             f"refilled_waves={fr['refilled_waves']}"))
+        path = write_bench_json(bench_payload(fleet=fleet, trace=trace,
+                                              stats=stats, fr=fr,
+                                              zoo=zoo)[0])
+        rows.append((f"serve/bench_json", 0.0, f"path={path}"))
     return rows
 
 
+def zoo_fusion_occupancy():
+    """Structural (no-execution) zoo-wide fusion + scheduling evidence:
+    per model, launches/image fused vs unfused and per-level occupancy
+    under asap/alap/slack on the FUSED graph.  The acceptance gate: slack
+    occupancy >= asap on every model, and the ResNet-style launch drop."""
+    from repro import compiler
+
+    out = {}
+    for name, cfg in CNN_ZOO.items():
+        g = compiler.build_graph(cfg)
+        fg, _ = compiler.fuse_epilogues(g)
+        scheds = {p: compiler.level_schedule(fg, p)
+                  for p in ("asap", "alap", "slack")}
+        occ = {p: compiler.engine_occupancy(fg, s)["occupancy"]
+               for p, s in scheds.items()}
+        unf, fus = compiler.launch_count(g), compiler.launch_count(fg)
+        out[name] = {
+            "launches_unfused": unf,
+            "launches_fused": fus,
+            "launch_reduction": 1.0 - fus / unf,
+            "fused_ops": compiler.fusion_stats(fg)["fused_ops"],
+            "occupancy": occ,
+            "tw_occupancy_slack": compiler.time_weighted_occupancy(
+                fg, scheds["slack"], pm.cnn_node_times(fg, cfg))["occupancy"],
+        }
+    return out
+
+
+def bench_payload(fleet=None, trace=None, stats=None, fr=None, zoo=None):
+    """The machine-readable serving snapshot written to BENCH_serve.json:
+    ops/s, fill rate, launches-per-image fused vs unfused, occupancy --
+    the per-PR perf trajectory record.  Pass precomputed stats/fr/zoo to
+    avoid re-serving the trace or re-sweeping the zoo."""
+    fleet = _build_fleet() if fleet is None else fleet
+    trace = _trace() if trace is None else trace
+    if stats is None:
+        stats = serve_stats(wave_batch=False, fleet=fleet, trace=trace)
+    if fr is None:
+        fr = fill_rate_stats(fleet=fleet, trace=trace)
+    if zoo is None:
+        zoo = zoo_fusion_occupancy()
+    return {
+        "trace": {"models": list(TRACE_MODELS), "requests": len(trace),
+                  "wave_size": WAVE, "input_hw": SERVE_HW},
+        "ops_per_s": stats["requests_per_s"],
+        "wall_s": stats["wall_s"],
+        "cache_hit_rate": stats["cache_hit_rate"],
+        "fill_rate": {"continuous": fr["continuous_fill_rate"],
+                      "pad_and_mask": fr["baseline_fill_rate"]},
+        "launches_per_image": stats["launches"],
+        "occupancy": {
+            "per_level_asap": stats["engine_occupancy"],
+            "per_level_alap": stats["engine_occupancy_alap"],
+            "per_level_slack": stats["engine_occupancy_slack"],
+            "time_weighted_asap": stats["tw_occupancy"],
+            "time_weighted_slack": stats["tw_occupancy_slack"],
+        },
+        "zoo": zoo,
+    }, stats, fr
+
+
+def write_bench_json(payload, path: str = BENCH_PATH) -> str:
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
 def summary_line() -> str:
-    fleet, trace = _build_fleet(), _trace()
-    stats = serve_stats(wave_batch=False, fleet=fleet, trace=trace)
-    fr = fill_rate_stats(fleet=fleet, trace=trace)
+    payload, stats, fr = bench_payload()
+    path = write_bench_json(payload)
+    rn = stats["launches"].get("resnet50")
+    fused_part = ""
+    if rn:
+        drop = 1.0 - rn["fused"] / rn["unfused"]
+        fused_part = (f"fused launches/img resnet50 {rn['fused']} vs "
+                      f"{rn['unfused']} unfused (-{100 * drop:.0f}%); ")
     return (f"program-cache hit-rate: {100 * stats['cache_hit_rate']:.1f}% "
             f"({stats['cache_hits']}/{stats['cache_hits'] + stats['cache_misses']} hits, "
             f"{stats['cache_misses']} compiles over {stats['requests']} "
             f"requests, {len(TRACE_MODELS)} models); "
+            f"{fused_part}"
             f"per-level engine occupancy "
             f"{100 * stats['engine_occupancy']:.1f}% asap / "
-            f"{100 * stats['engine_occupancy_alap']:.1f}% alap; "
+            f"{100 * stats['engine_occupancy_alap']:.1f}% alap / "
+            f"{100 * stats['engine_occupancy_slack']:.1f}% slack "
+            f"(time-weighted {100 * stats['tw_occupancy']:.1f}% -> "
+            f"{100 * stats['tw_occupancy_slack']:.1f}%); "
             f"wave fill-rate {100 * fr['continuous_fill_rate']:.1f}% "
             f"continuous vs {100 * fr['baseline_fill_rate']:.1f}% "
-            f"pad-and-mask")
+            f"pad-and-mask; BENCH_serve.json: {path}")
 
 
 if __name__ == "__main__":

@@ -81,6 +81,8 @@ def serve_stats():
         occ = compiler.engine_occupancy(program.graph, program.schedule)
         alap = compiler.level_schedule(program.graph, "alap")
         occ_alap = compiler.engine_occupancy(program.graph, alap)
+        slack = compiler.level_schedule(program.graph, "slack")
+        occ_slack = compiler.engine_occupancy(program.graph, slack)
         tw_prefill = pm.lm_busy_fractions(arch, batch=2, seq=PROMPT_LEN)
         tw_decode = pm.lm_busy_fractions(arch, batch=2, mode="decode",
                                          cache_len=MAX_SEQ)
@@ -90,6 +92,7 @@ def serve_stats():
             "decode_levels": decode.schedule.n_levels,
             "occupancy": occ["occupancy"],
             "occupancy_alap": occ_alap["occupancy"],
+            "occupancy_slack": occ_slack["occupancy"],
             "tw_occupancy_prefill": tw_prefill["occupancy"],
             "tw_occupancy_decode": tw_decode["occupancy"],
             "tw_conv_pe_decode": tw_decode.get("conv_pe", 0.0),
@@ -187,6 +190,8 @@ def summary_line() -> str:
     stats = serve_stats()
     occ = np.mean([r["occupancy"] for r in stats["archs"].values()])
     occ_alap = np.mean([r["occupancy_alap"] for r in stats["archs"].values()])
+    occ_slack = np.mean([r["occupancy_slack"]
+                         for r in stats["archs"].values()])
     tw = np.mean([r["tw_occupancy_decode"] for r in stats["archs"].values()])
     refill = np.mean([r["slot_refill_rate"] for r in stats["archs"].values()])
     return (f"lm program-cache hit-rate: {100 * stats['cache_hit_rate']:.1f}% "
@@ -194,7 +199,7 @@ def summary_line() -> str:
             f"{stats['cache_misses']} compiles, {len(stats['archs'])} archs, "
             f"prefill+decode); "
             f"prefill engine occupancy {100 * occ:.1f}% asap / "
-            f"{100 * occ_alap:.1f}% alap; "
+            f"{100 * occ_alap:.1f}% alap / {100 * occ_slack:.1f}% slack; "
             f"decode time-weighted occupancy {100 * tw:.1f}%; "
             f"slot-refill rate {100 * refill:.1f}%")
 

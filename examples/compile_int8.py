@@ -35,8 +35,10 @@ def main():
         # 1. compile + calibrate: float params, representative batches
         program = compiler.compile_calibrated(cfg, params, calib)
         st = program.plan.stats
+        unfused = compiler.launch_count(compiler.build_graph(cfg))
         print(f"{cfg.name}: {len(program.graph.nodes)} ops, "
-              f"{st['residual_chains']} residual chains, "
+              f"{st['fused_ops']} fused epilogue chains, "
+              f"launches/img {st['launches']} vs {unfused} unfused, "
               f"{st['folded_requants']} requants folded, "
               f"f32 round-trips: static={program.f32_roundtrips()} "
               f"dynamic={st['dynamic_f32_roundtrips']}")

@@ -17,8 +17,9 @@ python -m pytest -q --collect-only >/dev/null
 echo "== tier-1 suite =="
 python -m pytest -x -q "$@"
 
-echo "== serving cache =="
+echo "== serving cache + fusion =="
 python -m benchmarks.serve_cnn --summary
+echo "serving perf snapshot: $(pwd)/BENCH_serve.json"
 python -m benchmarks.serve_lm --summary
 
 echo "== decode throughput =="

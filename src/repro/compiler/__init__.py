@@ -25,15 +25,16 @@ from repro.compiler.calibrate import (ChannelCalibrator, PercentileCalibrator,
                                       calibrate, make_calibrator)
 from repro.compiler.executor import (Program, compile_cnn, compile_lm,
                                      execute, execute_decode, program_cache,
-                                     schedule_variant)
+                                     rope_table_stats, schedule_variant)
 from repro.compiler.graph import (AddOp, AttnOp, ConcatOp, ConvOp, DwcOp,
-                                  EmbedOp, Graph, HeadOp, InputOp, LinearOp,
-                                  MulOp, NormOp, PoolOp, build_graph,
-                                  can_lower, get_param, lower_transformer,
-                                  lowering_blockers)
+                                  EmbedOp, Epilogue, Graph, HeadOp, InputOp,
+                                  LinearOp, MulOp, NormOp, PoolOp,
+                                  build_graph, can_lower, get_param,
+                                  lower_transformer, lowering_blockers)
 from repro.compiler.passes import (QuantPlan, dynamic_roundtrip_count,
                                    f32_roundtrip_edges, fold_requant,
-                                   fold_weight_layouts, fusion_stats,
+                                   fold_weight_layouts, fuse_epilogues,
+                                   fusion_stats, launch_count,
                                    residual_chains, set_param)
 from repro.compiler.schedule import (Schedule, engine_occupancy, engine_unit,
                                      level_schedule, schedule_stats,
@@ -44,13 +45,19 @@ from repro.compiler.schedule import (Schedule, engine_occupancy, engine_unit,
 def compile_calibrated(cfg, params, batches, eng=None,
                        scheduled: bool = True, policy: str = "asap",
                        method: str = "absmax",
-                       granularity: str = "per_tensor") -> Program:
-    """Float params + representative batches -> static int8 engine program."""
+                       granularity: str = "per_tensor",
+                       fuse: bool = True) -> Program:
+    """Float params + representative batches -> static int8 engine program.
+
+    Calibration observes the UNFUSED graph (its edges are what the scales
+    describe); `fuse` (default ON) then rewrites epilogue chains into fused
+    launches, remapping the scales onto the fused graph and baking the
+    absorbed interior edges' scales into the Epilogue specs."""
     g = build_graph(cfg)
     scales = calibrate(g, params, batches, cfg, eng=eng, method=method,
                        granularity=granularity)
     return compile_cnn(cfg, scales=scales, scheduled=scheduled, policy=policy,
-                       granularity=granularity)
+                       granularity=granularity, fuse=fuse)
 
 
 def calibrate_lm(arch, params, batches, eng=None, method: str = "absmax",
@@ -92,15 +99,16 @@ def compile_lm_calibrated(arch, params, batches, eng=None,
 
 __all__ = [
     "AddOp", "AttnOp", "ChannelCalibrator", "ConcatOp", "ConvOp", "DwcOp",
-    "EmbedOp", "Graph", "HeadOp", "InputOp", "LinearOp", "MulOp", "NormOp",
-    "PercentileCalibrator", "PoolOp", "Program", "QuantPlan", "Schedule",
-    "build_graph", "calibrate", "calibrate_lm", "can_lower",
+    "EmbedOp", "Epilogue", "Graph", "HeadOp", "InputOp", "LinearOp", "MulOp",
+    "NormOp", "PercentileCalibrator", "PoolOp", "Program", "QuantPlan",
+    "Schedule", "build_graph", "calibrate", "calibrate_lm", "can_lower",
     "compile_calibrated", "compile_cnn", "compile_lm",
     "compile_lm_calibrated", "dynamic_roundtrip_count", "engine_occupancy",
     "engine_unit", "execute", "execute_decode", "f32_roundtrip_edges",
-    "fold_requant", "fold_weight_layouts", "fusion_stats", "get_param",
-    "level_schedule", "lower_transformer", "lowering_blockers",
-    "make_calibrator", "program_cache", "residual_chains", "schedule_stats",
+    "fold_requant", "fold_weight_layouts", "fuse_epilogues", "fusion_stats",
+    "get_param", "launch_count", "level_schedule", "lower_transformer",
+    "lowering_blockers", "make_calibrator", "program_cache",
+    "residual_chains", "rope_table_stats", "schedule_stats",
     "schedule_variant", "set_param", "time_weighted_occupancy",
     "validate_schedule",
 ]

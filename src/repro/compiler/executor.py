@@ -43,6 +43,7 @@ benchmarks.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Callable, Dict, Hashable, Iterable, Optional, Tuple
 
@@ -114,7 +115,8 @@ def schedule_variant(scheduled: bool, policy: str) -> str:
 def compile_cnn(cfg: CNNConfig,
                 scales: Optional[Dict[int, float]] = None,
                 scheduled: bool = True, policy: str = "asap",
-                granularity: str = "per_tensor") -> Program:
+                granularity: str = "per_tensor",
+                fuse: bool = True) -> Program:
     """Lower a CNNConfig to an engine program.
 
     Without `scales` the program executes dynamically (eager-equivalent);
@@ -124,15 +126,34 @@ def compile_cnn(cfg: CNNConfig,
     produces the static int8 plan (granularity="per_channel" keeps channel
     vectors on the DWC-consumed edges).  `scheduled=False` omits the
     concurrency schedule (sequential raw-order dispatch; the parity tests'
-    baseline); `policy` selects ASAP or ALAP leveling
+    baseline); `policy` selects ASAP / ALAP / slack leveling
     (schedule.level_schedule).
+
+    `fuse` (default ON) runs passes.fuse_epilogues: Conv/DWC -> {residual
+    add, pool tail} chains collapse into single fused launches, with the
+    calibration scales remapped onto the fused graph (calibration itself
+    always observes the UNFUSED graph, whose edges are what the scales
+    describe).  fuse=False keeps the one-op-per-launch graph -- the
+    fused-vs-unfused parity baseline.
     """
+
+    def lower():
+        g = build_graph(cfg)
+        if fuse:
+            g, _ = passes_lib.fuse_epilogues(g)
+        return g
+
     if scales is None:
-        key = ProgramKey(cfg, None, None, schedule_variant(scheduled, policy))
+        variant = schedule_variant(scheduled, policy) + (
+            "" if fuse else ":nofuse")
+        key = ProgramKey(cfg, None, None, variant)
         return _dynamic_cache.get_or_compile(
-            key, lambda: _finish_program(build_graph(cfg), cfg, None,
+            key, lambda: _finish_program(lower(), cfg, None,
                                          scheduled, policy))
-    return _finish_program(build_graph(cfg), cfg, scales, scheduled, policy,
+    g = build_graph(cfg)
+    if fuse:
+        g, scales = passes_lib.fuse_epilogues(g, scales)
+    return _finish_program(g, cfg, scales, scheduled, policy,
                            granularity=granularity)
 
 
@@ -293,19 +314,41 @@ def _run_scheduled(program: Program, eval_node, observer=None):
 # LM op evaluators (shared by both modes; the float-domain MISC work)
 # ---------------------------------------------------------------------------
 
-def _rope_memo():
-    """One cos/sin table per (B, L, head_dim, theta) per execute() call --
-    every AttnOp of a program reuses it, like the eager forward."""
-    cache: Dict[Tuple, Tuple[jax.Array, jax.Array]] = {}
+# Module-level bounded cos/sin table store: repeated eager executes (serve
+# waves draining through un-jitted paths, calibration sweeps, tests) stop
+# rebuilding the same RoPE tables on every call.  Bounded LRU so a server
+# sweeping many (B, L) shapes cannot grow it without limit.
+_ROPE_TABLE_CAPACITY = 32
+_rope_tables: "OrderedDict[Tuple, Tuple[jax.Array, jax.Array]]" = OrderedDict()
 
-    def rope(b: int, l: int, hd: int, theta: float):
-        key = (b, l, hd, theta)
-        if key not in cache:
-            pos = jnp.broadcast_to(jnp.arange(l)[None], (b, l))
-            cache[key] = L.rope_angles(pos, hd, theta)
-        return cache[key]
 
-    return rope
+def _rope_table(b: int, l: int, hd: int, theta: float):
+    """The (cos, sin) table for (B, L, head_dim, theta).
+
+    Concrete tables are cached module-wide (every AttnOp of every program
+    with the same geometry reuses one table).  Traced values -- execute()
+    running under jit -- are NEVER stored: a cached tracer would poison
+    later calls, and jitted programs constant-fold the tables into their
+    trace anyway, so the cache only needs to serve eager execution.
+    """
+    key = (b, l, hd, theta)
+    hit = _rope_tables.get(key)
+    if hit is not None:
+        _rope_tables.move_to_end(key)
+        return hit
+    pos = jnp.broadcast_to(jnp.arange(l)[None], (b, l))
+    val = L.rope_angles(pos, hd, theta)
+    if not isinstance(val[0], jax.core.Tracer):
+        _rope_tables[key] = val
+        while len(_rope_tables) > _ROPE_TABLE_CAPACITY:
+            _rope_tables.popitem(last=False)
+    return val
+
+
+def rope_table_stats() -> Dict[str, int]:
+    """Introspection for tests/benchmarks."""
+    return {"entries": len(_rope_tables),
+            "capacity": _ROPE_TABLE_CAPACITY}
 
 
 def _rope_decode_memo(pos):
@@ -406,7 +449,7 @@ def _head_eval(n: HeadOp, x: jax.Array, params) -> jax.Array:
 def _execute_dynamic(program: Program, params, images, eng: EngineConfig,
                      observer=None, collect: Optional[dict] = None,
                      decode: Optional[_DecodeCtx] = None) -> jax.Array:
-    rope = _rope_memo()
+    rope = _rope_table
     rope_d = _rope_decode_memo(decode.pos) if decode is not None else None
 
     def eval_node(n: OpNode, vals: Dict[int, jax.Array]) -> jax.Array:
@@ -414,16 +457,24 @@ def _execute_dynamic(program: Program, params, images, eng: EngineConfig,
             return images
         if isinstance(n, ConvOp):
             w, b = get_param(params, n.w), get_param(params, n.b)
+            ep = n.epilogue
+            res = (vals[n.inputs[-1]] if ep is not None and ep.add
+                   else None)
             if n.first_layer:
                 v = ops.first_layer_conv(vals[n.inputs[0]], w, b, n.stride,
-                                         n.padding, n.act, eng)
+                                         n.padding, n.act, eng,
+                                         epilogue=ep, residual=res)
                 return v.astype(jnp.float32)
             return ops.conv2d_pe(vals[n.inputs[0]], w, b, n.stride,
-                                 n.padding, n.act, eng)
+                                 n.padding, n.act, eng,
+                                 epilogue=ep, residual=res)
         if isinstance(n, DwcOp):
             w, b = get_param(params, n.w), get_param(params, n.b)
+            ep = n.epilogue
+            res = (vals[n.inputs[-1]] if ep is not None and ep.add
+                   else None)
             return ops.dwc2d(vals[n.inputs[0]], w, b, n.stride, n.padding,
-                             n.act, eng)
+                             n.act, eng, epilogue=ep, residual=res)
         if isinstance(n, AddOp):
             return ops.misc_add(vals[n.inputs[0]], vals[n.inputs[1]],
                                 n.act, eng)
@@ -480,23 +531,25 @@ def _execute_static(program: Program, params, images,
                     decode: Optional[_DecodeCtx] = None) -> jax.Array:
     g, plan = program.graph, program.plan
     scale_of = plan.out_scale
-    rope = _rope_memo()
+    rope = _rope_table
     rope_d = _rope_decode_memo(decode.pos) if decode is not None else None
 
     def out_scale_for(n: OpNode):
         return scale_of[n.id] if plan.emit_int8[n.id] else None
 
-    def _as_scale(os):
-        """Scale constant -> array: a float (per-tensor) or a tuple of
-        per-channel floats (broadcasts over the last dim)."""
-        return jnp.asarray(os, jnp.float32)
+    def _as_scale(nid: int, os):
+        """The node's out-scale as an array: the compile-time constant the
+        plan precomputed (passes.fold_requant), falling back to a fresh
+        conversion only for plans built before scale_arr existed."""
+        arr = plan.scale_arr.get(nid)
+        return arr if arr is not None else jnp.asarray(os, jnp.float32)
 
-    def _q_or_raw(r, os):
+    def _q_or_raw(r, n: OpNode, os):
         """A float-domain MISC op's requant epilogue: int8 when the plan
         carries the edge int8 (all consumers are GEMM engines), f32 else."""
         if os is None:
             return r
-        return QTensor(quantize_static(r, _as_scale(os)), os)
+        return QTensor(quantize_static(r, _as_scale(n.id, os)), os)
 
     def _raw(v):
         return v.dequant() if isinstance(v, QTensor) else v
@@ -510,19 +563,28 @@ def _execute_static(program: Program, params, images,
             if os is None:
                 return images              # token ids pass through raw
             # One static quantization at the boundary; int8 from here on.
-            return QTensor(quantize_static(images, _as_scale(os)), os)
+            return QTensor(quantize_static(images, _as_scale(n.id, os)), os)
         if isinstance(n, ConvOp):
             w = _require_qtensor(get_param(params, n.w), n)
             b = get_param(params, n.b)
+            ep = n.epilogue
+            res, res_s = None, 1.0
+            if ep is not None and ep.add:
+                res, res_s = _scaled(vals[n.inputs[-1]])
             fn = ops.first_layer_conv if n.first_layer else ops.conv2d_pe
             r = fn(vals[n.inputs[0]], w, b, n.stride, n.padding, n.act, eng,
-                   out_scale=os)
+                   out_scale=os, epilogue=ep, residual=res, res_scale=res_s)
             return QTensor(r, os)
         if isinstance(n, DwcOp):
             w = _require_qtensor(get_param(params, n.w), n)
             b = get_param(params, n.b)
+            ep = n.epilogue
+            res, res_s = None, 1.0
+            if ep is not None and ep.add:
+                res, res_s = _scaled(vals[n.inputs[-1]])
             r = ops.dwc2d(vals[n.inputs[0]], w, b, n.stride, n.padding,
-                          n.act, eng, out_scale=os)
+                          n.act, eng, out_scale=os, epilogue=ep,
+                          residual=res, res_scale=res_s)
             return QTensor(r, os)
         if isinstance(n, AddOp):
             # Mixed domains compose: a CNN residual add sees two int8 edges,
@@ -543,14 +605,14 @@ def _execute_static(program: Program, params, images,
                 acc = jnp.sum(x.q.astype(jnp.int32), axis=(1, 2))
                 px = x.q.shape[1] * x.q.shape[2]
                 r = acc.astype(jnp.float32) * (float(x.scale) / px)
-                return (QTensor(quantize_static(r, _as_scale(os)), os)
+                return (QTensor(quantize_static(r, _as_scale(n.id, os)), os)
                         if os is not None else r)
             acc = jax.lax.reduce_window(
                 x.q.astype(jnp.int32), 0, jax.lax.add,
                 (1, n.kernel, n.kernel, 1), (1, n.stride, n.stride, 1),
                 "VALID")
             r = acc.astype(jnp.float32) * (float(x.scale) / n.kernel ** 2)
-            return QTensor(quantize_static(r, _as_scale(os)), os)
+            return QTensor(quantize_static(r, _as_scale(n.id, os)), os)
         if isinstance(n, ConcatOp):
             parts = []
             for i in n.inputs:
@@ -568,18 +630,18 @@ def _execute_static(program: Program, params, images,
                            out_scale=os)
             return QTensor(r, os) if os is not None else r
         if isinstance(n, EmbedOp):
-            return _q_or_raw(_embed_eval(n, _raw(vals[n.inputs[0]]), params),
-                             os)
+            return _q_or_raw(_embed_eval(n, _raw(vals[n.inputs[0]]),
+                                         params), n, os)
         if isinstance(n, NormOp):
             # f32 norm math on the MISC core; the requant epilogue is what
             # hands the consumer GEMMs their static-int8 activations.
             r = L.rms_norm(_raw(vals[n.inputs[0]]), get_param(params, n.w),
                            n.eps)
-            return _q_or_raw(r, os)
+            return _q_or_raw(r, n, os)
         if isinstance(n, MulOp):
             r = (_raw(vals[n.inputs[0]]) * _raw(vals[n.inputs[1]])
                  ).astype(jnp.float32)
-            return _q_or_raw(r, os)
+            return _q_or_raw(r, n, os)
         if isinstance(n, AttnOp):
             if n.mode == "update":
                 r = _attn_update_eval(n, _raw(vals[n.inputs[0]]),
@@ -590,7 +652,7 @@ def _execute_static(program: Program, params, images,
                 r = _attn_eval(n, _raw(vals[n.inputs[0]]),
                                _raw(vals[n.inputs[1]]),
                                _raw(vals[n.inputs[2]]), rope, collect)
-            return _q_or_raw(r, os)
+            return _q_or_raw(r, n, os)
         if isinstance(n, HeadOp):
             return _head_eval(n, _raw(vals[n.inputs[0]]), params)
         raise TypeError(f"unknown op {type(n).__name__}")

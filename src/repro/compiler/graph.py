@@ -14,8 +14,9 @@ else the MISC core.
 Node kinds and the engine that executes them:
 
   ConvOp    -> Conv PE (im2col GEMM; `first_layer=True` routes the stem to
-               the Low-Channel Conv Unit)
-  DwcOp     -> DWC PE
+               the Low-Channel Conv Unit; may carry a fused `Epilogue` --
+               residual add / pool tail absorbed by passes.fuse_epilogues)
+  DwcOp     -> DWC PE (same optional fused `Epilogue`)
   AddOp     -> MISC core (residual add + NL epilogue)
   PoolOp    -> MISC core ("max" | "avg" | "global")
   ConcatOp  -> bank interleave (channel concat; free at the memory level)
@@ -52,6 +53,51 @@ class OpNode:
 
 
 @dataclass(frozen=True)
+class Epilogue:
+    """An in-kernel tail fused into a Conv PE / DWC PE launch.
+
+    `passes.fuse_epilogues` collapses Conv/DWC -> {residual Add, pool tail}
+    chains into one fused node carrying this spec, so the whole chain is a
+    single engine launch: the MISC work rides the producing PE's NL/RACNL
+    epilogue instead of materializing an intermediate tensor and paying the
+    bandwidth-starved MISC path (the paper's "extend the functionality of
+    each PE", Section III).
+
+    add=True appends the residual operand as the node's LAST input edge;
+    `add_act` is the post-add activation (the absorbed AddOp's act).  `pool`
+    is an absorbed tail pool ("avg" | "global" | "max"); avg uses
+    pool_kernel/pool_stride (VALID windows, like the standalone PoolOp).
+
+    `mid_scale` / `add_scale` are the static-plan interior requant points
+    (compile-time constants, like the requant shifts a real DPU instruction
+    stream carries): the scales the absorbed conv / add output edges carried
+    in the unfused graph.  The fused kernel quantize-dequantizes in-register
+    at exactly those points, so fused static execution is BIT-IDENTICAL to
+    the unfused program while materializing nothing between the stages.
+    0.0 = dynamic program (no static plan; the chain stays f32 in-register).
+    """
+    add: bool = False
+    add_act: str = "none"
+    pool: str = "none"               # none | avg | global | max
+    pool_kernel: int = 0
+    pool_stride: int = 0
+    mid_scale: float = 0.0           # absorbed conv/dwc output edge scale
+    add_scale: float = 0.0           # absorbed add output edge scale
+                                     # (set only when a pool follows the add)
+
+    @property
+    def stages(self) -> str:
+        """Human-readable chain, e.g. "add+relu|global"."""
+        parts = []
+        if self.add:
+            parts.append("add" if self.add_act == "none"
+                         else f"add+{self.add_act}")
+        if self.pool != "none":
+            parts.append(self.pool)
+        return "|".join(parts)
+
+
+@dataclass(frozen=True)
 class InputOp(OpNode):
     pass
 
@@ -64,6 +110,7 @@ class ConvOp(OpNode):
     padding: str = "SAME"
     act: str = "none"
     first_layer: bool = False        # route through the Low-Channel unit
+    epilogue: Optional[Epilogue] = None   # fused MISC tail (fuse_epilogues)
 
 
 @dataclass(frozen=True)
@@ -73,6 +120,7 @@ class DwcOp(OpNode):
     stride: int = 1
     padding: str = "SAME"
     act: str = "none"
+    epilogue: Optional[Epilogue] = None   # fused MISC tail (fuse_epilogues)
 
 
 @dataclass(frozen=True)

@@ -1,4 +1,10 @@
-"""Compiler passes: requant folding + engine-epilogue fusion planning.
+"""Compiler passes: requant folding + epilogue fusion (the graph rewrite).
+
+`fuse_epilogues` rewrites Conv/DWC -> {residual Add, pool tail} chains into
+single fused nodes (Epilogue spec), so the chain executes as ONE engine
+launch with no intermediate tensor materialized between the PE and its MISC
+tail; `fold_requant` then plans the static-int8 dataflow over whichever
+graph (fused or not) it is handed.
 
 Input: an op graph (graph.py) and per-edge calibrated activation scales
 (calibrate.py).  Output: a QuantPlan that the static executor follows --
@@ -38,14 +44,15 @@ applied once to the parameter tree when a program is bound for serving.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 
 from repro.compiler.graph import (AddOp, AttnOp, ConcatOp, ConvOp, DwcOp,
-                                  Graph, InputOp, LinearOp, MulOp, NormOp,
-                                  PoolOp, get_param)
+                                  EmbedOp, Epilogue, Graph, InputOp, LinearOp,
+                                  MulOp, NormOp, PoolOp, get_param)
 from repro.core.quant import QTensor
 
 _MIN_SCALE = 1e-8
@@ -76,6 +83,11 @@ class QuantPlan:
     # *different* consumer scale (concat unification): (producer, consumer)
     folded: Tuple[Tuple[int, int], ...]
     stats: Dict[str, int] = field(default_factory=dict)
+    # node id -> out_scale as a ready f32 array (per-channel tuples become
+    # [C] vectors).  Precomputed ONCE at compile time so the static executor
+    # never rebuilds scale constants per node per execution.
+    scale_arr: Dict[int, object] = field(default_factory=dict, compare=False,
+                                         repr=False)
 
 
 def fold_requant(graph: Graph, scales: Dict[int, object],
@@ -112,6 +124,18 @@ def fold_requant(graph: Graph, scales: Dict[int, object],
         for n in graph.nodes
     }
 
+    def _dwc_channelwise(cn, edge: int) -> bool:
+        """Does this consumer read the edge through the channelwise DWC
+        datapath?  Only the DWC's own data input qualifies -- an edge a
+        fused DwcOp consumes as its RESIDUAL operand rides the epilogue's
+        scalar-scale add, not the per-lane dequant."""
+        if not isinstance(cn, DwcOp) or cn.inputs[0] != edge:
+            return False
+        ep = cn.epilogue
+        if ep is not None and ep.add and cn.inputs[-1] == edge:
+            return False                  # also consumed as the residual
+        return True
+
     per_channel = collapsed = 0
     for n in graph.nodes:
         s = out_scale[n.id]
@@ -119,10 +143,14 @@ def fold_requant(graph: Graph, scales: Dict[int, object],
             continue
         keep = (granularity == "per_channel"
                 and emit_int8[n.id]
-                and all(isinstance(graph.nodes[c], DwcOp)
+                and all(_dwc_channelwise(graph.nodes[c], n.id)
                         for c in consumers[n.id])
                 and (isinstance(n, InputOp)
-                     or (isinstance(n, ConvOp) and not n.first_layer)))
+                     or (isinstance(n, ConvOp) and not n.first_layer
+                         # a fused epilogue requants through its absorbed
+                         # MISC tail, which carries per-tensor scales (the
+                         # unfused twin's add/pool edge would collapse too)
+                         and n.epilogue is None)))
         if keep:
             per_channel += 1
         else:
@@ -140,11 +168,20 @@ def fold_requant(graph: Graph, scales: Dict[int, object],
             # Unify branch scales: each branch engine requants to the concat
             # scale in its own epilogue (possible only when this concat is
             # the branch's sole consumer; otherwise the executor rescales
-            # int8->int8 at the concat input instead).
+            # int8->int8 at the concat input instead).  A fused node whose
+            # epilogue ends in a POOL cannot retarget: its final requant is
+            # pinned to the pool stage's math (max is scale-preserving, and
+            # avg/global requant after the absorbed add's own edge scale), so
+            # it keeps its scale and the concat rescales like any other
+            # non-foldable branch.
             s = out_scale[n.id]
             for p in n.inputs:
+                pn = graph.nodes[p]
+                ep = getattr(pn, "epilogue", None)
+                if ep is not None and ep.pool != "none":
+                    continue
                 if len(consumers[p]) == 1 and isinstance(
-                        graph.nodes[p], (ConvOp, DwcOp, AddOp)):
+                        pn, (ConvOp, DwcOp, AddOp)):
                     out_scale[p] = s
                     folded.append((p, n.id))
 
@@ -153,8 +190,152 @@ def fold_requant(graph: Graph, scales: Dict[int, object],
     stats["dynamic_f32_roundtrips"] = dynamic_roundtrip_count(graph)
     stats["per_channel_edges"] = per_channel
     stats["per_tensor_collapsed"] = collapsed
+    scale_arr = {i: jnp.asarray(s, jnp.float32)
+                 for i, s in out_scale.items() if emit_int8.get(i)}
     return QuantPlan(out_scale=out_scale, emit_int8=emit_int8,
-                     folded=tuple(folded), stats=stats)
+                     folded=tuple(folded), stats=stats, scale_arr=scale_arr)
+
+
+# ---------------------------------------------------------------------------
+# Epilogue fusion: rewrite Conv/DWC -> {Add, pool} chains into fused launches
+# ---------------------------------------------------------------------------
+
+_FUSABLE_POOLS = ("avg", "global", "max")
+
+
+def _collapse(s) -> float:
+    """A chain-interior scale as a compile-time float (per-channel vectors
+    collapse to the channel max -- exactly what fold_requant does for any
+    edge not consumed purely by the channelwise DWC engine, which a chain
+    interior never is)."""
+    if isinstance(s, tuple):
+        s = max(s)
+    return max(float(s), _MIN_SCALE)
+
+
+def fuse_epilogues(graph: Graph, scales: Optional[Dict[int, object]] = None):
+    """Rewrite Conv/DWC -> {residual Add, avg/global/max pool} chains into
+    single fused nodes carrying an Epilogue spec.
+
+    The rewrite that turns `fusion_stats`' counted chains into actual single
+    launches: a producing PE whose output feeds exactly one MISC op absorbs
+    that op into its in-kernel epilogue (paper Section III -- "extend the
+    functionality of each PE" so activations never round-trip the MISC
+    path).  A chain fuses when every interior edge has exactly one consumer:
+
+      Conv/Dwc -> Add                      (residual: the add's other
+                                            operand becomes the fused
+                                            node's LAST input edge)
+      Conv/Dwc -> Pool(avg|global|max)     (pool tail)
+      Conv/Dwc -> Add -> Pool(...)         (both)
+
+    The fused node sits at the position of the chain's LAST op (so the
+    residual operand, which may be lowered after the conv -- a bottleneck's
+    skip conv -- stays topologically earlier), and node ids are renumbered
+    compactly.
+
+    `scales` (per-edge calibration scales keyed by the UNFUSED graph's node
+    ids) are remapped to the fused ids and returned alongside; the absorbed
+    interior edges' scales are baked into the Epilogue spec (mid_scale /
+    add_scale), which is what keeps fused static execution bit-identical to
+    the unfused program: the kernel quantize-dequantizes in-register at the
+    same points the unfused dataflow materialized.  A max tail is
+    scale-preserving, so the fused node's output edge inherits the pre-pool
+    scale, like fold_requant's standalone max-pool rule.
+
+    Returns (fused_graph, remapped_scales) -- scales is None when not given.
+    """
+    consumers = graph.consumers()
+
+    def sole_consumer(nid: int):
+        cs = consumers[nid]
+        return graph.nodes[cs[0]] if len(cs) == 1 else None
+
+    # chain end id -> (root node, add id | None, pool id | None, residual id)
+    chains: Dict[int, Tuple] = {}
+    absorbed: Dict[int, int] = {}        # interior old id -> chain end id
+    for n in graph.nodes:
+        if not isinstance(n, (ConvOp, DwcOp)) or n.epilogue is not None:
+            continue
+        if n.id == graph.output or n.id in absorbed:
+            continue
+        c = sole_consumer(n.id)
+        if c is None or c.id in absorbed or c.id in chains:
+            continue
+        add_id = pool_id = res_id = None
+        end = None
+        if (isinstance(c, AddOp) and len(c.inputs) == 2
+                and c.inputs.count(n.id) == 1
+                and not (isinstance(n, ConvOp) and n.first_layer)):
+            add_id, end = c.id, c
+            res_id = c.inputs[1] if c.inputs[0] == n.id else c.inputs[0]
+            p = sole_consumer(c.id)
+            if (isinstance(p, PoolOp) and p.pool in _FUSABLE_POOLS
+                    and p.id not in chains):
+                pool_id, end = p.id, p
+        elif isinstance(c, PoolOp) and c.pool in _FUSABLE_POOLS:
+            pool_id, end = c.id, c
+        else:
+            continue
+        chains[end.id] = (n, add_id, pool_id, res_id)
+        absorbed[n.id] = end.id
+        if add_id is not None and pool_id is not None:
+            absorbed[add_id] = end.id
+
+    if not chains:
+        return graph, scales
+
+    new_nodes: List = []
+    new_id: Dict[int, int] = {}
+    new_scales: Optional[Dict[int, object]] = {} if scales is not None else None
+    for n in graph.nodes:
+        if n.id in absorbed:
+            continue                    # interior: re-emitted at the end op
+        nid = len(new_nodes)
+        if n.id in chains:
+            root, add_id, pool_id, res_id = chains[n.id]
+            inputs = tuple(new_id[i] for i in root.inputs)
+            if res_id is not None:
+                inputs = inputs + (new_id[res_id],)
+            pool = graph.nodes[pool_id] if pool_id is not None else None
+            mid = add_sc = 0.0
+            if scales is not None:
+                mid = _collapse(scales[root.id])
+                if add_id is not None and pool is not None:
+                    add_sc = _collapse(scales[add_id])
+            ep = Epilogue(
+                add=res_id is not None,
+                add_act=graph.nodes[add_id].act if add_id is not None
+                else "none",
+                pool=pool.pool if pool is not None else "none",
+                pool_kernel=pool.kernel if pool is not None else 0,
+                pool_stride=pool.stride if pool is not None else 0,
+                mid_scale=mid, add_scale=add_sc)
+            new_nodes.append(dataclasses.replace(
+                root, id=nid, inputs=inputs, epilogue=ep))
+            if new_scales is not None:
+                if ep.pool == "max":
+                    # scale-preserving tail: inherit the pre-pool edge scale
+                    new_scales[nid] = add_sc if ep.add else mid
+                else:
+                    new_scales[nid] = scales[n.id]
+        else:
+            new_nodes.append(dataclasses.replace(
+                n, id=nid, inputs=tuple(new_id[i] for i in n.inputs)))
+            if new_scales is not None:
+                new_scales[nid] = scales[n.id]
+        new_id[n.id] = nid
+    fused = Graph(tuple(new_nodes), output=new_id[graph.output],
+                  name=graph.name)
+    return fused, new_scales
+
+
+def launch_count(graph: Graph) -> int:
+    """Engine kernel dispatches one execution of the graph issues.  Memory-
+    level ops (input DMA, bank-interleave concat, embedding row gather) ride
+    the load path, not a PE launch."""
+    return sum(1 for n in graph.nodes
+               if not isinstance(n, (InputOp, ConcatOp, EmbedOp)))
 
 
 # ---------------------------------------------------------------------------
@@ -174,12 +355,26 @@ def residual_chains(graph: Graph) -> List[Tuple[int, int]]:
 
 
 def fusion_stats(graph: Graph) -> Dict[str, int]:
+    """Chain / launch accounting.  On a pre-pass graph `residual_chains`
+    counts the fusable conv->add chains; on a post-pass graph `fused_*`
+    count the chains actually rewritten into single launches, and
+    `launches` is the kernel-dispatch count one execution issues."""
     chains = residual_chains(graph)
+    fused = [n.epilogue for n in graph.nodes
+             if getattr(n, "epilogue", None) is not None]
+    consumers = graph.consumers()
     return {
         "residual_chains": len(chains),
         "misc_adds": graph.count(AddOp),
         "convs": graph.count(ConvOp),
         "dwcs": graph.count(DwcOp),
+        "fused_ops": len(fused),
+        "fused_adds": sum(1 for e in fused if e.add),
+        "fused_pools": sum(1 for e in fused if e.pool != "none"),
+        "launches": launch_count(graph),
+        # intermediate tensors one execution writes to memory (every
+        # consumed edge; the fused graph writes fewer)
+        "materialized_edges": sum(1 for n in graph.nodes if consumers[n.id]),
     }
 
 

@@ -20,9 +20,14 @@ Low-Channel unit's concurrency.
 `policy="alap"` levels as-late-as-possible inside the same critical-path
 length: ops with slack slide toward their consumers, which tends to
 co-schedule *cross-engine* pairs (a MISC norm next to a Conv PE GEMM) that
-ASAP leaves in separate waves.  Both policies produce valid levelings with
-identical results (the parity suite pins that); per-level engine occupancy
-(engine_occupancy) is the comparison metric the serving benchmark reports.
+ASAP leaves in separate waves.  `policy="slack"` is the bounded-ALAP
+hybrid: each op slides anywhere within its [ASAP, ALAP] slack window to
+the level where its own engine unit is least contended (two Conv-PE ops in
+one wave time-share the Conv PE; a Conv-PE op next to a DWC-PE or MISC op
+genuinely overlaps), capped so it never exceeds ASAP's worst same-unit
+width.  All policies produce valid levelings with identical results (the
+parity suite pins that); per-level engine occupancy (engine_occupancy) is
+the comparison metric the serving benchmark reports.
 
 LM graphs level through the same pass: the three QKV projections of a block
 co-level on the Conv PE, and the gate/up GEMMs of a SwiGLU pair do too.
@@ -88,7 +93,13 @@ def level_schedule(graph: Graph, policy: str = "asap") -> Schedule:
     policy="asap": level(n) = 1 + max(level(inputs)) -- ops fire as soon as
     their inputs exist.  policy="alap": within the same critical-path length,
     every op slides to the latest level its consumers allow (slack-window
-    leveling), which co-schedules more cross-engine pairs.
+    leveling), which co-schedules more cross-engine pairs.  policy="slack":
+    the bounded-ALAP hybrid -- every op is placed greedily inside its
+    [ASAP, ALAP] slack window at the level where its own engine unit is
+    LEAST contended (same-unit ops in one level time-share the unit;
+    cross-unit ops genuinely overlap), never exceeding ASAP's worst
+    same-unit width.  All policies keep the critical-path level count and
+    produce valid levelings with bit-identical execution.
     """
     asap: Dict[int, int] = {}
     for n in graph.nodes:
@@ -97,20 +108,98 @@ def level_schedule(graph: Graph, policy: str = "asap") -> Schedule:
     if policy == "asap":
         level = asap
     elif policy == "alap":
-        consumers = graph.consumers()
-        level = {}
-        for n in reversed(graph.nodes):    # ids are topological
-            cs = consumers[n.id]
-            level[n.id] = (min(level[c] for c in cs) - 1) if cs \
-                else n_levels - 1
+        level = _alap_levels(graph, n_levels)
+    elif policy == "slack":
+        level = _slack_levels(graph, asap, n_levels)
     else:
         raise ValueError(f"unknown leveling policy {policy!r} "
-                         "(want 'asap' or 'alap')")
+                         "(want 'asap', 'alap' or 'slack')")
     levels = [[] for _ in range(n_levels)]
     for n in graph.nodes:                  # nodes are id-ordered already
         levels[level[n.id]].append(n.id)
     lvls = tuple(tuple(lv) for lv in levels if lv)
     return Schedule(lvls, stats=_levels_stats(graph, lvls))
+
+
+def _alap_levels(graph: Graph, n_levels: int) -> Dict[int, int]:
+    consumers = graph.consumers()
+    level: Dict[int, int] = {}
+    for n in reversed(graph.nodes):        # ids are topological
+        cs = consumers[n.id]
+        level[n.id] = (min(level[c] for c in cs) - 1) if cs \
+            else n_levels - 1
+    return level
+
+
+def _unit_widths(graph: Graph, level: Dict[int, int], n_levels: int):
+    """Per-level per-unit op counts of an assignment."""
+    counts = [dict() for _ in range(n_levels)]
+    for n in graph.nodes:
+        u = engine_unit(n)
+        c = counts[level[n.id]]
+        c[u] = c.get(u, 0) + 1
+    return counts
+
+
+def _slack_levels(graph: Graph, asap: Dict[int, int],
+                  n_levels: int) -> Dict[int, int]:
+    """Contention-aware slack leveling (the bounded-ALAP hybrid).
+
+    Walk the nodes in topological order; each op's feasible window is
+    [1 + max(placed inputs), ALAP(op)] -- every placement keeps the graph's
+    critical-path level count, since an op placed at most at its ALAP level
+    leaves all its consumers a non-empty window.  Within the window the op
+    lands on the level where its own engine unit has the fewest ops already
+    (same-unit ops time-share the unit -- the contention the policy
+    minimizes), preferring levels already busy on OTHER compute units (the
+    cross-engine pairing that raises occupancy), earliest level on ties.
+
+    ASAP's worst per-unit same-level width is the hard cap: levels already
+    at the cap for the op's unit are avoided while any other level in the
+    window is below it, and if a placement would still exceed the cap
+    anywhere the policy falls back to the plain ASAP assignment -- so slack
+    never raises max same-unit ops per level above ASAP (property-tested).
+    """
+    alap = _alap_levels(graph, n_levels)
+    cap: Dict[str, int] = {}
+    for c in _unit_widths(graph, asap, n_levels):
+        for u, k in c.items():
+            cap[u] = max(cap.get(u, 0), k)
+    counts = [dict() for _ in range(n_levels)]
+    compute = set(_COMPUTE_UNITS)
+    # Pin the zero-slack (critical-path) ops first: they can never move --
+    # every predecessor's ALAP is strictly below them, so no slack placement
+    # can push them -- and seeding their unit load lets the movable ops see
+    # the true contention picture instead of a half-empty one.
+    placed: Dict[int, int] = {}
+    for n in graph.nodes:
+        if asap[n.id] == alap[n.id]:
+            placed[n.id] = asap[n.id]
+            c = counts[asap[n.id]]
+            u = engine_unit(n)
+            c[u] = c.get(u, 0) + 1
+    for n in graph.nodes:
+        if n.id in placed:
+            continue
+        u = engine_unit(n)
+        lo = 1 + max((placed[i] for i in n.inputs), default=-1)
+        window = range(lo, alap[n.id] + 1)
+        under = [lv for lv in window if counts[lv].get(u, 0) < cap[u]]
+        cands = under or list(window)
+
+        def goodness(lv: int):
+            others = sum(1 for uu, k in counts[lv].items()
+                         if k and uu != u and uu in compute)
+            return (counts[lv].get(u, 0), -others, lv)
+
+        best = min(cands, key=goodness)
+        placed[n.id] = best
+        counts[best][u] = counts[best].get(u, 0) + 1
+    for c in counts:
+        for u, k in c.items():
+            if k > cap.get(u, 0):
+                return dict(asap)          # cap breached: fall back
+    return placed
 
 
 def schedule_stats(graph: Graph, sched: Schedule) -> Dict[str, int]:
@@ -120,9 +209,15 @@ def schedule_stats(graph: Graph, sched: Schedule) -> Dict[str, int]:
 
 def _levels_stats(graph: Graph, levels) -> Dict[str, int]:
     wide = cross = conv_dwc = 0
+    max_unit = 0
     for lv in levels:
-        units = {engine_unit(graph.nodes[i]) for i in lv}
+        per_unit: Dict[str, int] = {}
+        for i in lv:
+            u = engine_unit(graph.nodes[i])
+            per_unit[u] = per_unit.get(u, 0) + 1
+        units = set(per_unit)
         compute = units & set(_COMPUTE_UNITS)
+        max_unit = max([max_unit] + [per_unit[u] for u in compute])
         if len(lv) > 1:
             wide += 1
         if len(compute) > 1:
@@ -136,6 +231,9 @@ def _levels_stats(graph: Graph, levels) -> Dict[str, int]:
         "wide_levels": wide,
         "cross_engine_levels": cross,
         "conv_dwc_levels": conv_dwc,
+        # worst same-unit op count in any level: the contention the "slack"
+        # policy levels down (same-unit ops in one wave time-share the unit)
+        "max_unit_width": max_unit,
     }
 
 

@@ -30,6 +30,7 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.kernels.ref import act_fn
+from repro.kernels import _epilogue
 from repro.kernels._pallas_compat import compiler_params
 
 
@@ -65,6 +66,43 @@ def _kernel(a_ref, b_ref, a_scale_ref, w_scale_ref, bias_ref, os_ref, o_ref,
         o_ref[...] = x.astype(o_ref.dtype)
 
 
+def _kernel_res(a_ref, b_ref, a_scale_ref, w_scale_ref, bias_ref, os_ref,
+                r_ref, o_ref, acc_ref, *, nk: int, act: str, has_bias: bool,
+                out_scale: Optional[float], vector_os: bool,
+                mid_scale: Optional[float], res_scale: float, add_act: str):
+    """The residual-epilogue variant: a second input operand streams into
+    the NL core and the absorbed MISC add runs in-register after the
+    cascade -- the fused conv->add(->act) chain as ONE launch."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...].astype(jnp.int32),
+                            b_ref[...].astype(jnp.int32),
+                            preferred_element_type=jnp.int32)
+
+    @pl.when(k == nk - 1)
+    def _tail():
+        x = acc_ref[...].astype(jnp.float32)
+        x = x * a_scale_ref[...] * w_scale_ref[...]
+        if has_bias:
+            x = x + bias_ref[...]
+        x = act_fn(act)(x)
+        if mid_scale is not None:
+            # in-register requant to the absorbed conv edge's static scale
+            # (what the unfused program materialized): bit-identical values
+            x = jnp.clip(jnp.round(x / mid_scale), -127.0, 127.0) * mid_scale
+        x = x + r_ref[...].astype(jnp.float32) * res_scale
+        x = act_fn(add_act)(x)
+        if vector_os:
+            x = jnp.clip(jnp.round(x / os_ref[...]), -127, 127)
+        elif out_scale is not None:
+            x = jnp.clip(jnp.round(x / out_scale), -127, 127)
+        o_ref[...] = x.astype(o_ref.dtype)
+
+
 def matmul_int8_fused(a_q: jax.Array, b_q: jax.Array,
                       a_scale: jax.Array, w_scale: jax.Array,
                       bias: Optional[jax.Array] = None,
@@ -72,6 +110,10 @@ def matmul_int8_fused(a_q: jax.Array, b_q: jax.Array,
                       out_scale=None,
                       out_dtype=jnp.float32,
                       *,
+                      residual: Optional[jax.Array] = None,
+                      res_scale: float = 1.0,
+                      mid_scale: Optional[float] = None,
+                      add_act: str = "none",
                       bm: int = 128, bn: int = 128, bk: int = 512,
                       interpret: bool = False) -> jax.Array:
     """Fused int8 GEMM. Shapes must be multiples of the block shapes
@@ -79,6 +121,11 @@ def matmul_int8_fused(a_q: jax.Array, b_q: jax.Array,
     a_scale [M,1] f32, w_scale [1,N] f32, bias [N] f32 or None.
     out_scale: None (float out), a scalar (per-tensor int8 requant), or a
     [N]-broadcastable array (per-output-channel requant, pre-padded).
+
+    residual [M,N] (int8 with `res_scale`, or f32) adds the fused-epilogue
+    second operand: the absorbed residual add + `add_act` run in-register
+    after the cascade (`mid_scale`: the static scale of the absorbed conv
+    edge; None on the dynamic path).
     """
     m, kdim = a_q.shape
     _, n = b_q.shape
@@ -94,27 +141,159 @@ def matmul_int8_fused(a_q: jax.Array, b_q: jax.Array,
     odt = jnp.int8 if out_scale is not None else out_dtype
 
     grid = (m // bm, n // bn, nk)
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),     # A
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),     # B
+        pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),       # a_scale
+        pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),       # w_scale
+        pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),       # bias
+        pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),       # out_scale
+    ]
+    operands = [a_q, b_q, a_scale.astype(jnp.float32).reshape(m, 1),
+                w_scale.astype(jnp.float32).reshape(1, n), bias2d, os2d]
+    if residual is None:
+        kernel = functools.partial(
+            _kernel, nk=nk, act=act, has_bias=has_bias,
+            out_scale=None if vector_os else out_scale, vector_os=vector_os)
+    else:
+        assert residual.shape == (m, n), (residual.shape, m, n)
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
+        operands.append(residual)
+        kernel = functools.partial(
+            _kernel_res, nk=nk, act=act, has_bias=has_bias,
+            out_scale=None if vector_os else out_scale, vector_os=vector_os,
+            mid_scale=mid_scale, res_scale=res_scale, add_act=add_act)
     return pl.pallas_call(
-        functools.partial(_kernel, nk=nk, act=act, has_bias=has_bias,
-                          out_scale=None if vector_os else out_scale,
-                          vector_os=vector_os),
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),     # A
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),     # B
-            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),       # a_scale
-            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),       # w_scale
-            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),       # bias
-            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),       # out_scale
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), odt),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],         # PsumStack
         compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(a_q, b_q, a_scale.astype(jnp.float32).reshape(m, 1),
-      w_scale.astype(jnp.float32).reshape(1, n), bias2d, os2d)
+    )(*operands)
+
+
+# ---------------------------------------------------------------------------
+# Pooled-epilogue variant: per-image M blocking so the absorbed avg/global/
+# max pool tail accumulates in-kernel (the GAP tail never materializes the
+# pre-pool feature map)
+# ---------------------------------------------------------------------------
+
+def _kernel_pool(*refs, nk: int, act: str, has_bias: bool, has_res: bool,
+                 rows: int, ho: int, wo: int, out_rows: int,
+                 mid_scale: Optional[float], res_scale: float, add_act: str,
+                 add_scale: Optional[float], pool: str, pool_kernel: int,
+                 pool_stride: int, out_scale: Optional[float]):
+    if has_res:
+        (a_ref, b_ref, asc_ref, wsc_ref, bias_ref, r_ref,
+         o_ref, acc_ref) = refs
+    else:
+        a_ref, b_ref, asc_ref, wsc_ref, bias_ref, o_ref, acc_ref = refs
+        r_ref = None
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[0].astype(jnp.int32),
+                            b_ref[...].astype(jnp.int32),
+                            preferred_element_type=jnp.int32)
+
+    @pl.when(k == nk - 1)
+    def _tail():
+        x = acc_ref[...].astype(jnp.float32)        # [rows_p, bn]
+        x = x * asc_ref[0] * wsc_ref[...]
+        if has_bias:
+            x = x + bias_ref[...]
+        x = act_fn(act)(x)
+        bn = x.shape[-1]
+        xs = x[:rows].reshape(ho, wo, bn)           # valid rows only
+        rs = (r_ref[0][:rows].reshape(ho, wo, bn) if has_res else None)
+        y = _epilogue.fused_chain(
+            xs, mid_scale=mid_scale, residual=rs, res_scale=res_scale,
+            add_act=add_act, add_scale=add_scale, pool=pool,
+            pool_kernel=pool_kernel, pool_stride=pool_stride,
+            out_scale=out_scale)
+        y = y.reshape(-1, bn)
+        y = jnp.pad(y, ((0, out_rows - y.shape[0]), (0, 0)))
+        o_ref[0] = y.astype(o_ref.dtype)
+
+
+def matmul_int8_pool(a_q: jax.Array, b_q: jax.Array, a_scale: jax.Array,
+                     w_scale: jax.Array, bias: Optional[jax.Array],
+                     act: str, *, ho: int, wo: int,
+                     residual: Optional[jax.Array] = None,
+                     res_scale: float = 1.0,
+                     mid_scale: Optional[float] = None,
+                     add_act: str = "none",
+                     add_scale: Optional[float] = None,
+                     pool: str = "global", pool_kernel: int = 0,
+                     pool_stride: int = 0,
+                     out_scale: Optional[float] = None,
+                     out_dtype=jnp.float32,
+                     bn: int = 128, bk: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """Fused GEMM + pooled epilogue, ONE launch per program.
+
+    a_q [G, rows_p, K] int8: the im2col rows blocked per image (G = batch;
+    rows_p >= ho*wo, padded); b_q [K, N]; a_scale [G, rows_p, 1];
+    w_scale [1, N]; residual [G, rows_p, N] or None.  The epilogue slices
+    the valid ho*wo rows, runs the fused chain (qdq/add/act), and POOLS
+    in-register before the single write-out, so the pre-pool feature map
+    never reaches memory.  Returns [G, out_rows, N] where out_rows rows 0..
+    pooled_h*pooled_w-1 are valid (caller slices + reshapes).
+
+    VMEM note: the accumulator holds the image's full [rows_p, bn] tile --
+    sized for the tail-of-network feature maps where pool chains live.
+    """
+    g, rows_p, kdim = a_q.shape
+    _, n = b_q.shape
+    assert n % bn == 0 and kdim % bk == 0, (n, kdim, bn, bk)
+    nk = kdim // bk
+    rows = ho * wo
+    assert rows <= rows_p, (rows, rows_p)
+    pho, pwo = _epilogue.pooled_hw(ho, wo, pool, pool_kernel, pool_stride)
+    out_rows = max(8, -(-(pho * pwo) // 8) * 8)
+    has_bias = bias is not None
+    bias2d = (bias.reshape(1, n).astype(jnp.float32) if has_bias
+              else jnp.zeros((1, n), jnp.float32))
+    odt = _epilogue.chain_out_dtype(mid_scale, pool, out_scale, out_dtype)
+
+    in_specs = [
+        pl.BlockSpec((1, rows_p, bk), lambda i, j, kk: (i, 0, kk)),   # A
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),             # B
+        pl.BlockSpec((1, rows_p, 1), lambda i, j, kk: (i, 0, 0)),     # asc
+        pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),               # wsc
+        pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),               # bias
+    ]
+    operands = [a_q, b_q, a_scale.astype(jnp.float32),
+                w_scale.astype(jnp.float32).reshape(1, n), bias2d]
+    if residual is not None:
+        assert residual.shape == (g, rows_p, n), (residual.shape, g, rows_p, n)
+        in_specs.append(
+            pl.BlockSpec((1, rows_p, bn), lambda i, j, kk: (i, 0, j)))
+        operands.append(residual)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel_pool, nk=nk, act=act, has_bias=has_bias,
+            has_res=residual is not None, rows=rows, ho=ho, wo=wo,
+            out_rows=out_rows, mid_scale=mid_scale, res_scale=res_scale,
+            add_act=add_act, add_scale=add_scale, pool=pool,
+            pool_kernel=pool_kernel, pool_stride=pool_stride,
+            out_scale=out_scale),
+        grid=(g, n // bn, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, out_rows, bn), lambda i, j, kk: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((g, out_rows, n), odt),
+        scratch_shapes=[pltpu.VMEM((rows_p, bn), jnp.int32)],
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(*operands)
 
 
 # ---------------------------------------------------------------------------

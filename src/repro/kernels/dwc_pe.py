@@ -33,12 +33,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.ref import act_fn
+from repro.kernels import _epilogue
 from repro.kernels._pallas_compat import compiler_params
 
 
-def _dwc2d_kernel(x_ref, w_ref, bias_ref, wscale_ref, o_ref,
-                  *, k: int, stride: int, ho: int, wo: int, act: str,
-                  quant: bool, out_scale: Optional[float]):
+def _dwc2d_kernel(*refs, k: int, stride: int, ho: int, wo: int, act: str,
+                  quant: bool, out_scale: Optional[float], has_res: bool,
+                  mid_scale: Optional[float], res_scale: float, add_act: str,
+                  add_scale: Optional[float], pool: str, pool_kernel: int,
+                  pool_stride: int):
+    if has_res:
+        x_ref, w_ref, bias_ref, wscale_ref, r_ref, o_ref = refs
+    else:
+        x_ref, w_ref, bias_ref, wscale_ref, o_ref = refs
+        r_ref = None
     x = x_ref[0]                       # [Hp, Wp, BC]
     acc_dtype = jnp.int32 if quant else jnp.float32
     acc = jnp.zeros((ho, wo, x.shape[-1]), acc_dtype)
@@ -55,6 +63,17 @@ def _dwc2d_kernel(x_ref, w_ref, bias_ref, wscale_ref, o_ref,
         xf = xf * wscale_ref[0, 0, :]
     xf = xf + bias_ref[0, 0, :]
     xf = act_fn(act)(xf)
+    if has_res or pool != "none":
+        # fused MISC tail: the RACNL core absorbs the residual add / pool
+        y = _epilogue.fused_chain(
+            xf, mid_scale=mid_scale, residual=r_ref[0] if has_res else None,
+            res_scale=res_scale, add_act=add_act, add_scale=add_scale,
+            pool=pool, pool_kernel=pool_kernel, pool_stride=pool_stride,
+            out_scale=out_scale)
+        if pool == "global":
+            y = y.reshape(1, 1, -1)
+        o_ref[0] = y.astype(o_ref.dtype)
+        return
     if out_scale is not None:
         xf = jnp.clip(jnp.round(xf / out_scale), -127, 127)
     o_ref[0] = xf.astype(o_ref.dtype)
@@ -66,9 +85,22 @@ def dwc2d(x: jax.Array, w: jax.Array, bias: Optional[jax.Array],
           w_scale: Optional[jax.Array] = None,
           out_scale: Optional[float] = None,
           out_dtype=jnp.float32, *,
+          residual: Optional[jax.Array] = None,
+          res_scale: float = 1.0,
+          mid_scale: Optional[float] = None,
+          add_act: str = "none",
+          add_scale: Optional[float] = None,
+          pool: str = "none", pool_kernel: int = 0, pool_stride: int = 0,
           bc: int = 128, interpret: bool = False) -> jax.Array:
     """Depthwise conv on pre-padded input (VALID). x: [N, Hp, Wp, C] with
-    C % bc == 0; w: [k, k, C]; bias: [C]."""
+    C % bc == 0; w: [k, k, C]; bias: [C].
+
+    residual [N, Ho, Wo, C] (int8 with `res_scale`, or f32) and/or
+    pool ("avg" | "global" | "max") fuse the absorbed MISC tail into the
+    RACNL epilogue: one launch, no intermediate feature map.  mid_scale /
+    add_scale are the static interior requant points (None = dynamic f32
+    chain).  With a pool tail the output is [N, PHo, PWo, C].
+    """
     n, hp, wp, c = x.shape
     k = w.shape[0]
     assert c % bc == 0, (c, bc)
@@ -84,24 +116,38 @@ def dwc2d(x: jax.Array, w: jax.Array, bias: Optional[jax.Array],
            if quant else jnp.zeros((1, 1, c), jnp.float32))
     bias_arr = (bias.astype(jnp.float32).reshape(1, 1, c) if bias is not None
                 else jnp.zeros((1, 1, c), jnp.float32))
-    odt = jnp.int8 if out_scale is not None else out_dtype
+    pho, pwo = _epilogue.pooled_hw(ho, wo, pool, pool_kernel, pool_stride)
+    if residual is not None or pool != "none":
+        odt = _epilogue.chain_out_dtype(mid_scale, pool, out_scale, out_dtype)
+    else:
+        odt = jnp.int8 if out_scale is not None else out_dtype
 
+    in_specs = [
+        pl.BlockSpec((1, hp, wp, bc), lambda i, j: (i, 0, 0, j)),
+        pl.BlockSpec((k, k, bc), lambda i, j: (0, 0, j)),
+        pl.BlockSpec((1, 1, bc), lambda i, j: (0, 0, j)),
+        pl.BlockSpec((1, 1, bc), lambda i, j: (0, 0, j)),
+    ]
+    operands = [x, w, bias_arr, wsc]
+    if residual is not None:
+        assert residual.shape == (n, ho, wo, c), (residual.shape, n, ho, wo, c)
+        in_specs.append(pl.BlockSpec((1, ho, wo, bc), lambda i, j: (i, 0, 0, j)))
+        operands.append(residual)
     return pl.pallas_call(
-        functools.partial(_dwc2d_kernel, k=k, stride=stride, ho=ho, wo=wo,
-                          act=act, quant=quant, out_scale=out_scale),
+        functools.partial(
+            _dwc2d_kernel, k=k, stride=stride, ho=ho, wo=wo, act=act,
+            quant=quant, out_scale=out_scale, has_res=residual is not None,
+            mid_scale=mid_scale, res_scale=res_scale, add_act=add_act,
+            add_scale=add_scale, pool=pool, pool_kernel=pool_kernel,
+            pool_stride=pool_stride),
         grid=(n, c // bc),
-        in_specs=[
-            pl.BlockSpec((1, hp, wp, bc), lambda i, j: (i, 0, 0, j)),
-            pl.BlockSpec((k, k, bc), lambda i, j: (0, 0, j)),
-            pl.BlockSpec((1, 1, bc), lambda i, j: (0, 0, j)),
-            pl.BlockSpec((1, 1, bc), lambda i, j: (0, 0, j)),
-        ],
-        out_specs=pl.BlockSpec((1, ho, wo, bc), lambda i, j: (i, 0, 0, j)),
-        out_shape=jax.ShapeDtypeStruct((n, ho, wo, c), odt),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, pho, pwo, bc), lambda i, j: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, pho, pwo, c), odt),
         compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
-    )(x, w, bias_arr, wsc)
+    )(*operands)
 
 
 # ---------------------------------------------------------------------------

@@ -26,12 +26,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.ref import act_fn
+from repro.kernels import _epilogue
 from repro.kernels._pallas_compat import compiler_params
 
 
 def _kernel(x_ref, w_ref, bias_ref, scale_ref, o_ref, *,
             k: int, stride: int, ho: int, wo: int, act: str,
-            quant: bool, out_scale: Optional[float]):
+            quant: bool, out_scale: Optional[float],
+            mid_scale: Optional[float], pool: str, pool_kernel: int,
+            pool_stride: int):
     x = x_ref[0]                        # [Hp, Wp, IC]
     ic = x.shape[-1]
     oc = o_ref.shape[-1]
@@ -51,6 +54,17 @@ def _kernel(x_ref, w_ref, bias_ref, scale_ref, o_ref, *,
         xf = xf * scale_ref[0]             # [OC] per-channel dequant
     xf = xf + bias_ref[0]
     xf = act_fn(act)(xf)
+    if pool != "none":
+        # fused pool tail (e.g. the stem -> max-pool chain): the pre-pool
+        # stem feature map never leaves the unit
+        y = _epilogue.fused_chain(
+            xf.reshape(ho, wo, oc), mid_scale=mid_scale, pool=pool,
+            pool_kernel=pool_kernel, pool_stride=pool_stride,
+            out_scale=out_scale)
+        if pool == "global":
+            y = y.reshape(1, 1, oc)
+        o_ref[0] = y.astype(o_ref.dtype)
+        return
     if out_scale is not None:              # fused requant (NL epilogue)
         xf = jnp.clip(jnp.round(xf / out_scale), -127, 127)
     o_ref[0] = xf.reshape(ho, wo, oc).astype(o_ref.dtype)
@@ -62,6 +76,9 @@ def low_channel_conv(x: jax.Array, w: jax.Array, bias: Optional[jax.Array],
                      w_scale: Optional[float] = None,
                      out_scale: Optional[float] = None,
                      out_dtype=jnp.float32, *,
+                     mid_scale: Optional[float] = None,
+                     pool: str = "none", pool_kernel: int = 0,
+                     pool_stride: int = 0,
                      interpret: bool = False) -> jax.Array:
     """First-layer conv on pre-padded input (VALID).
 
@@ -70,6 +87,10 @@ def low_channel_conv(x: jax.Array, w: jax.Array, bias: Optional[jax.Array],
     (per-tensor scalar or per-output-channel [OC]); a_scale / w_scale may
     be Python floats or (traced) arrays.  out_scale requants to int8 in
     the epilogue and must be static.
+
+    pool ("avg" | "global" | "max") fuses an absorbed pool tail into the
+    epilogue (mid_scale: the static pre-pool edge scale); the output is
+    then [N, PHo, PWo, OC].
     """
     n, hp, wp, ic = x.shape
     k, _, _, oc = w.shape
@@ -82,10 +103,16 @@ def low_channel_conv(x: jax.Array, w: jax.Array, bias: Optional[jax.Array],
     scale_arr = jnp.broadcast_to(scale.reshape(-1), (oc,)).reshape(1, oc)
     bias_arr = (bias.astype(jnp.float32).reshape(1, oc) if bias is not None
                 else jnp.zeros((1, oc), jnp.float32))
-    odt = jnp.int8 if out_scale is not None else out_dtype
+    pho, pwo = _epilogue.pooled_hw(ho, wo, pool, pool_kernel, pool_stride)
+    if pool != "none":
+        odt = _epilogue.chain_out_dtype(mid_scale, pool, out_scale, out_dtype)
+    else:
+        odt = jnp.int8 if out_scale is not None else out_dtype
     return pl.pallas_call(
         functools.partial(_kernel, k=k, stride=stride, ho=ho, wo=wo, act=act,
-                          quant=quant, out_scale=out_scale),
+                          quant=quant, out_scale=out_scale,
+                          mid_scale=mid_scale, pool=pool,
+                          pool_kernel=pool_kernel, pool_stride=pool_stride),
         grid=(n,),
         in_specs=[
             pl.BlockSpec((1, hp, wp, ic), lambda i: (i, 0, 0, 0)),
@@ -93,8 +120,8 @@ def low_channel_conv(x: jax.Array, w: jax.Array, bias: Optional[jax.Array],
             pl.BlockSpec((1, oc), lambda i: (0, 0)),
             pl.BlockSpec((1, oc), lambda i: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, ho, wo, oc), lambda i: (i, 0, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, ho, wo, oc), odt),
+        out_specs=pl.BlockSpec((1, pho, pwo, oc), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, pho, pwo, oc), odt),
         compiler_params=compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,

@@ -21,11 +21,22 @@ import jax.numpy as jnp
 from repro.core import dse
 from repro.core.config import EngineConfig
 from repro.core.quant import QTensor, quantize_act_dynamic, quantize_static
-from repro.kernels import conv_pe, dwc_pe, low_channel, misc_pe, ref
+from repro.kernels import _epilogue, conv_pe, dwc_pe, low_channel, misc_pe, ref
 
 
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
+
+
+def _chain_kwargs(ep, static: bool, out_scale):
+    """Epilogue spec -> kernels/_epilogue.fused_chain kwargs.  Static
+    programs carry the interior requant points; dynamic chains run f32."""
+    return dict(
+        mid_scale=ep.mid_scale if static and ep.mid_scale else None,
+        add_act=ep.add_act,
+        add_scale=ep.add_scale if static and ep.add_scale else None,
+        pool=ep.pool, pool_kernel=ep.pool_kernel, pool_stride=ep.pool_stride,
+        out_scale=out_scale if static else None)
 
 
 def _pad2d(x: jax.Array, m: int, n: int) -> jax.Array:
@@ -54,7 +65,11 @@ def pick_blocks(m: int, n: int, k: int, in_bytes: int,
 def linear_int8(x, w: QTensor, bias: Optional[jax.Array],
                 act: str, cfg: EngineConfig,
                 out_dtype=jnp.float32,
-                out_scale=None) -> jax.Array:
+                out_scale=None,
+                residual: Optional[jax.Array] = None,
+                res_scale: float = 1.0,
+                mid_scale: Optional[float] = None,
+                add_act: str = "none") -> jax.Array:
     """x: float [..., K] (dynamic per-token act quant) OR QTensor with a
     static pre-calibrated per-tensor scale (the compiled engine-program
     path); w: QTensor(q=[K, N] int8, scale=[1, N]).
@@ -63,6 +78,11 @@ def linear_int8(x, w: QTensor, bias: Optional[jax.Array],
     (activations stay int8 engine-to-engine); a per-output-channel tuple
     requants each channel at its own scale (a per-channel edge feeding the
     channelwise DWC engine); None -> float output.
+
+    residual [..., N] streams a fused-epilogue second operand into the
+    Pallas kernel (the absorbed residual add; conv2d_pe's epilogue path);
+    only the pallas backend takes it -- ref/baseline compose the chain in
+    the wrapper instead.
     """
     static = isinstance(x, QTensor)
     xv = x.q if static else x
@@ -82,6 +102,7 @@ def linear_int8(x, w: QTensor, bias: Optional[jax.Array],
     w_scale = w.scale.reshape(1, n)
 
     if cfg.baseline:
+        assert residual is None, "fused residual composes in the wrapper"
         out = ref.matmul_int8_unfused(xq.q, w.q, xq.scale, w_scale, bias, act,
                                       out_scale=out_scale, out_dtype=out_dtype)
     elif cfg.backend == "pallas":
@@ -98,10 +119,15 @@ def linear_int8(x, w: QTensor, bias: Optional[jax.Array],
             # per-channel requant vector: pad with 1s alongside N
             osc = jnp.pad(jnp.asarray(out_scale, jnp.float32).reshape(1, n),
                           ((0, 0), (0, np_ - n)), constant_values=1.0)
+        r = (_pad2d(residual.reshape(m, n), mp, np_)
+             if residual is not None else None)
         out = conv_pe.matmul_int8_fused(
             aq, bq, asc, wsc, b, act, out_scale=osc, out_dtype=out_dtype,
-            bm=bm, bn=bn, bk=bk, interpret=cfg.interpret)[:m, :n]
+            residual=r, res_scale=res_scale, mid_scale=mid_scale,
+            add_act=add_act, bm=bm, bn=bn, bk=bk,
+            interpret=cfg.interpret)[:m, :n]
     else:
+        assert residual is None, "fused residual composes in the wrapper"
         out = ref.matmul_int8_fused(xq.q, w.q, xq.scale, w_scale, bias, act,
                                     out_scale=out_scale, out_dtype=out_dtype)
     return out.reshape(*lead, n)
@@ -128,17 +154,27 @@ def linear_f(x: jax.Array, w: jax.Array, bias: Optional[jax.Array],
 
 
 def linear(x, w, bias, act: str, cfg: EngineConfig,
-           out_dtype=None, out_scale: Optional[float] = None) -> jax.Array:
+           out_dtype=None, out_scale: Optional[float] = None,
+           residual: Optional[jax.Array] = None, res_scale: float = 1.0,
+           mid_scale: Optional[float] = None,
+           add_act: str = "none") -> jax.Array:
     """Dispatch on quant mode and weight container type.
 
     x may be a QTensor (pre-quantized int8 activations with a static scale);
     that path requires w8a8 + QTensor weights.  out_scale (static) requests
-    int8 output via the fused requant epilogue.
+    int8 output via the fused requant epilogue.  residual/res_scale/
+    mid_scale/add_act thread a fused residual epilogue into the int8 kernel
+    (conv2d_pe's pallas path only).
     """
     if isinstance(w, QTensor) and cfg.quant == "w8a8":
         return linear_int8(x, w, bias, act, cfg,
                            out_dtype=out_dtype or jnp.float32,
-                           out_scale=out_scale)
+                           out_scale=out_scale, residual=residual,
+                           res_scale=res_scale, mid_scale=mid_scale,
+                           add_act=add_act)
+    if residual is not None:
+        raise ValueError("fused residual epilogues require quant='w8a8' "
+                         "with QTensor weights")
     if isinstance(x, QTensor) or out_scale is not None:
         raise ValueError(
             "static int8 activations / out_scale require quant='w8a8' "
@@ -157,7 +193,10 @@ def linear(x, w, bias, act: str, cfg: EngineConfig,
 def conv2d_pe(x, w, bias: Optional[jax.Array],
               stride: int, padding: str, act: str,
               cfg: EngineConfig, out_dtype=jnp.float32,
-              out_scale: Optional[float] = None) -> jax.Array:
+              out_scale: Optional[float] = None,
+              epilogue=None,
+              residual: Optional[jax.Array] = None,
+              res_scale: float = 1.0) -> jax.Array:
     """Standard conv: x [N,H,W,IC] float or QTensor (static int8 activations
     with a per-tensor scale); w [k,k,IC,OC] float or QTensor, or the
     compile-time-folded GEMM layout [k*k*IC, OC]
@@ -169,6 +208,13 @@ def conv2d_pe(x, w, bias: Optional[jax.Array],
     contraction); out_scale requants to int8 in the fused NL epilogue.
     SAME zero-padding is exact for int8 inputs (symmetric quant, zero
     point 0).
+
+    `epilogue` (a graph.Epilogue from passes.fuse_epilogues) runs the
+    absorbed MISC tail -- residual add (`residual` raw values at
+    `res_scale`), activation, avg/global/max pool, requant -- inside the
+    SAME launch on the pallas backend (kernel second operand / pooled
+    accumulation); the ref and baseline backends compose the identical
+    chain math on the GEMM output (the bit-exact oracle).
     """
     static = isinstance(x, QTensor)
     if static and not isinstance(w, QTensor):
@@ -211,13 +257,98 @@ def conv2d_pe(x, w, bias: Optional[jax.Array],
     if isinstance(w, QTensor):
         wt = QTensor(wmat, w.scale.reshape(1, oc))
         col_in = QTensor(col, x.scale) if static else col
+        if epilogue is not None:
+            return _conv_epilogue(col_in, wt, bias, act, epilogue, residual,
+                                  res_scale, out_scale, cfg, out_dtype,
+                                  n, ho, wo, oc)
         out = linear(col_in, wt, bias, act, cfg, out_dtype=out_dtype,
                      out_scale=out_scale)
     else:
         if out_scale is not None:
             raise ValueError("out_scale requires QTensor weights")
         out = linear_f(col, wmat, bias, act, cfg, out_dtype=out_dtype)
+        if epilogue is not None:
+            return _epilogue.fused_chain(
+                out.reshape(n, ho, wo, oc), residual=residual,
+                res_scale=res_scale,
+                **_chain_kwargs(epilogue, False, None))
     return out.reshape(n, ho, wo, oc)
+
+
+def _conv_epilogue(col_in, wt: QTensor, bias, act: str, ep, residual,
+                   res_scale: float, out_scale, cfg: EngineConfig,
+                   out_dtype, n: int, ho: int, wo: int, oc: int) -> jax.Array:
+    """Fused Conv PE epilogue dispatch (quantized GEMM path)."""
+    static = isinstance(col_in, QTensor)
+    pallas = (cfg.backend == "pallas" and not cfg.baseline
+              and cfg.quant == "w8a8")
+    if pallas and ep.pool == "none":
+        # residual second operand streams into the GEMM kernel's NL core
+        out = linear(col_in, wt, bias, act, cfg, out_dtype=out_dtype,
+                     out_scale=out_scale,
+                     residual=residual.reshape(n * ho * wo, oc),
+                     res_scale=res_scale,
+                     mid_scale=ep.mid_scale if static and ep.mid_scale
+                     else None,
+                     add_act=ep.add_act)
+        return out.reshape(n, ho, wo, oc)
+    if pallas:
+        return _conv_pool_pallas(col_in, wt, bias, act, ep, residual,
+                                 res_scale, out_scale, cfg, out_dtype,
+                                 n, ho, wo, oc)
+    # ref / baseline: the GEMM part (f32, pre-requant) + the shared
+    # in-register chain math -- XLA fuses it; bit-exact vs the unfused ops
+    y = linear(col_in, wt, bias, act, cfg, out_dtype=jnp.float32)
+    return _epilogue.fused_chain(y.reshape(n, ho, wo, oc),
+                                 residual=residual, res_scale=res_scale,
+                                 **_chain_kwargs(ep, static, out_scale))
+
+
+def _conv_pool_pallas(col_in, wt: QTensor, bias, act: str, ep, residual,
+                      res_scale: float, out_scale, cfg: EngineConfig,
+                      out_dtype, n: int, ho: int, wo: int, oc: int):
+    """Pooled-epilogue launch: per-image M blocking so the avg/global/max
+    tail accumulates in-kernel (conv_pe.matmul_int8_pool)."""
+    static = isinstance(col_in, QTensor)
+    rows = ho * wo
+    kdim = (col_in.q if static else col_in).shape[-1]
+    if static:
+        colq = col_in.q
+        asc = jnp.full((n, rows, 1), float(col_in.scale), jnp.float32)
+    else:
+        xq = quantize_act_dynamic(col_in, per_token=True)
+        colq, asc = xq.q, xq.scale.reshape(n, rows, 1)
+    _, bn, bk = pick_blocks(rows, oc, kdim, 1, cfg)
+    rows_p = _round_up(rows, 32)
+    kp, np_ = _round_up(kdim, bk), _round_up(oc, bn)
+    a3 = jnp.pad(colq.reshape(n, rows, kdim),
+                 ((0, 0), (0, rows_p - rows), (0, kp - kdim)))
+    asc3 = jnp.pad(asc, ((0, 0), (0, rows_p - rows), (0, 0)))
+    bq = _pad2d(wt.q, kp, np_)
+    wsc = jnp.pad(wt.scale.reshape(1, oc), ((0, 0), (0, np_ - oc)))
+    b = (jnp.pad(bias.astype(jnp.float32), (0, np_ - oc))
+         if bias is not None else None)
+    r3 = None
+    if residual is not None:
+        r3 = jnp.pad(residual.reshape(n, rows, oc),
+                     ((0, 0), (0, rows_p - rows), (0, np_ - oc)))
+    if out_scale is not None and not isinstance(out_scale, (int, float)):
+        raise ValueError("pooled epilogues requant per-tensor")
+    out = conv_pe.matmul_int8_pool(
+        a3, bq, asc3, wsc, b, act, ho=ho, wo=wo, residual=r3,
+        res_scale=res_scale,
+        mid_scale=ep.mid_scale if static and ep.mid_scale else None,
+        add_act=ep.add_act,
+        add_scale=ep.add_scale if static and ep.add_scale else None,
+        pool=ep.pool, pool_kernel=ep.pool_kernel, pool_stride=ep.pool_stride,
+        out_scale=out_scale if static else None, out_dtype=out_dtype,
+        bn=bn, bk=bk, interpret=cfg.interpret)
+    pho, pwo = _epilogue.pooled_hw(ho, wo, ep.pool, ep.pool_kernel,
+                                   ep.pool_stride)
+    out = out[:, :pho * pwo, :oc]
+    if ep.pool == "global":
+        return out.reshape(n, oc)
+    return out.reshape(n, pho, pwo, oc)
 
 
 def _same_pad(size: int, k: int, stride: int):
@@ -233,11 +364,18 @@ def _same_pad(size: int, k: int, stride: int):
 def dwc2d(x, w, bias: Optional[jax.Array], stride: int,
           padding: str, act: str, cfg: EngineConfig,
           out_dtype=jnp.float32,
-          out_scale: Optional[float] = None) -> jax.Array:
+          out_scale: Optional[float] = None,
+          epilogue=None,
+          residual: Optional[jax.Array] = None,
+          res_scale: float = 1.0) -> jax.Array:
     """Depthwise conv. x [N,H,W,C] float or QTensor (static int8 with a
     per-tensor scale); w [k,k,C] float or QTensor, possibly pre-padded to
     [k,k,round_up(C,128)] by passes.fold_weight_layouts (bias and scales
     padded alongside).  out_scale requants to int8 in the RACNL epilogue.
+
+    `epilogue` fuses an absorbed MISC tail (residual add / pool / requant)
+    into the RACNL core -- in-kernel on the pallas DWC engine, composed
+    chain math elsewhere (see conv2d_pe).
 
     Without the DWC engine (baseline), this runs as the paper's "low
     utilization" path: dense GEMM with a channel-diagonal weight matrix.
@@ -284,6 +422,10 @@ def dwc2d(x, w, bias: Optional[jax.Array], stride: int,
         dense = dense.at[:, :, idx, idx].set(wf.astype(jnp.float32))
         out = conv2d_pe(x, dense, bias, stride, "VALID", act,
                         cfg, out_dtype=out_dtype)
+        if epilogue is not None:
+            return _epilogue.fused_chain(
+                out, residual=residual, res_scale=res_scale,
+                **_chain_kwargs(epilogue, static, out_scale))
         if out_scale is not None:
             return quantize_static(out, jnp.float32(out_scale))
         return out
@@ -325,6 +467,36 @@ def dwc2d(x, w, bias: Optional[jax.Array], stride: int,
             # per-channel activation scales pad alongside the lanes
             a_scale = jnp.pad(a_scale, (0, cp - c), constant_values=1.0)
 
+    if epilogue is not None:
+        ep = epilogue
+        if cfg.backend == "pallas":
+            rin = residual
+            if rin is not None and cp != c:
+                rin = jnp.pad(rin, ((0, 0), (0, 0), (0, 0), (0, cp - c)))
+            out = dwc_pe.dwc2d(
+                xin, w_in, bias, stride, act,
+                a_scale=a_scale if quant else None, w_scale=w_scale,
+                out_scale=out_scale if static else None, out_dtype=out_dtype,
+                residual=rin, res_scale=res_scale,
+                mid_scale=ep.mid_scale if static and ep.mid_scale else None,
+                add_act=ep.add_act,
+                add_scale=ep.add_scale if static and ep.add_scale else None,
+                pool=ep.pool, pool_kernel=ep.pool_kernel,
+                pool_stride=ep.pool_stride, bc=bc, interpret=cfg.interpret)
+        else:
+            y = ref.dwc2d(xin, w_in, bias, stride, act,
+                          a_scale=a_scale if quant else None,
+                          w_scale=w_scale, out_dtype=jnp.float32)
+            rin = residual
+            if rin is not None and cp != c:
+                rin = jnp.pad(rin, ((0, 0), (0, 0), (0, 0), (0, cp - c)))
+            out = _epilogue.fused_chain(y, residual=rin, res_scale=res_scale,
+                                        **_chain_kwargs(ep, static, out_scale))
+        out = out[..., :c]
+        if ep.pool == "global" and out.ndim == 4:
+            out = out.reshape(out.shape[0], c)    # [N,1,1,C] -> [N,C]
+        return out
+
     if cfg.backend == "pallas":
         out = dwc_pe.dwc2d(xin, w_in, bias, stride, act,
                            a_scale=a_scale if quant else None,
@@ -362,18 +534,29 @@ def dwc1d_causal(x: jax.Array, w: jax.Array, bias: Optional[jax.Array],
 def first_layer_conv(x, w, bias: Optional[jax.Array],
                      stride: int, padding: str, act: str,
                      cfg: EngineConfig, out_dtype=jnp.float32,
-                     out_scale: Optional[float] = None) -> jax.Array:
+                     out_scale: Optional[float] = None,
+                     epilogue=None,
+                     residual: Optional[jax.Array] = None,
+                     res_scale: float = 1.0) -> jax.Array:
     """Stage-0 conv. Dispatches to the low-channel unit when enabled,
     otherwise to the general Conv PE (the paper's 13.1%-utilization path).
 
     x may be a QTensor (the compiled program quantizes the input image with
     the calibrated static scale); out_scale requants the stem output to int8
     so the whole engine pipeline stays int8 from the first layer on.
+
+    `epilogue` fuses an absorbed pool tail (the stem -> max-pool chain)
+    into the unit's epilogue; residual adds never fuse into the stem
+    (fuse_epilogues does not create them).
     """
     static = isinstance(x, QTensor)
     if not cfg.use_low_channel_unit:
         return conv2d_pe(x, w, bias, stride, padding, act, cfg,
-                         out_dtype=out_dtype, out_scale=out_scale)
+                         out_dtype=out_dtype, out_scale=out_scale,
+                         epilogue=epilogue, residual=residual,
+                         res_scale=res_scale)
+    if epilogue is not None and epilogue.add:
+        raise ValueError("the Low-Channel unit fuses pool tails only")
     is_q = isinstance(w, QTensor)
     if static and not is_q:
         x = x.dequant()               # float weights: float math
@@ -397,6 +580,25 @@ def first_layer_conv(x, w, bias: Optional[jax.Array],
         ph = _same_pad(xin.shape[1], k, stride)
         pw = _same_pad(xin.shape[2], k, stride)
         xin = jnp.pad(xin, ((0, 0), ph, pw, (0, 0)))
+    if epilogue is not None:
+        ep = epilogue
+        if cfg.backend == "pallas":
+            out = low_channel.low_channel_conv(
+                xin, w_in, bias, stride, act, a_scale=a_scale,
+                w_scale=w_scale,
+                out_scale=out_scale if static else None, out_dtype=out_dtype,
+                mid_scale=ep.mid_scale if static and ep.mid_scale else None,
+                pool=ep.pool, pool_kernel=ep.pool_kernel,
+                pool_stride=ep.pool_stride, interpret=cfg.interpret)
+        else:
+            y = ref.low_channel_conv(xin, w_in, bias, stride, act,
+                                     a_scale=a_scale, w_scale=w_scale,
+                                     out_dtype=jnp.float32)
+            out = _epilogue.fused_chain(y, **_chain_kwargs(ep, static,
+                                                           out_scale))
+        if ep.pool == "global" and out.ndim == 4:
+            out = out.reshape(out.shape[0], out.shape[-1])
+        return out
     if cfg.backend == "pallas":
         return low_channel.low_channel_conv(
             xin, w_in, bias, stride, act, a_scale=a_scale, w_scale=w_scale,

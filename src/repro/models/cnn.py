@@ -102,9 +102,10 @@ def cnn_forward(params: dict, images: jax.Array, cfg: CNNConfig,
     """images: [N, H, W, C] float in [-1, 1].  Returns logits [N, classes].
 
     Thin compile-and-execute wrapper: the CNN lowers to the compiler's
-    op-graph IR and runs through the dynamic engine program, op-for-op
-    identical to the historical eager path (training and the existing tests
-    see no difference).  The compiled program comes out of the shared
+    op-graph IR (epilogue-fused by default: conv->add->pool chains execute
+    as single launches) and runs through the dynamic engine program,
+    value-identical to the historical eager path (training and the
+    existing tests see no difference).  The compiled program comes out of the shared
     bounded program cache (compiler.program_cache()) and carries the
     concurrent-PE level schedule, so repeat calls never re-lower.  For the
     paper's calibrated static-int8 dataflow, compile once with

@@ -407,6 +407,7 @@ class ServeEngine(ProgramServeBase):
         out = {"arch": self.arch.name,
                "compiled_prefill": self.compiled,
                "compiled_decode": self.compiled_decode,
+               "schedule_policy": self.schedule_policy,
                # the eager-fallback gate, made loud: WHY an arch fell back
                "lowering_blockers": self.lowering_blockers()}
         out.update(self.cache_stats())

@@ -309,7 +309,10 @@ class TestScheduledExecutionParity:
         g = compiler.build_graph(cfg)
         sequential = compiler.calibrate(g, params, [x], cfg)
         cal = Calibrator()
-        compiler.execute(compiler.compile_cnn(cfg, scheduled=True), params,
+        # fuse=False: calibration observes the UNFUSED graph's edges (that
+        # is also what compile_calibrated calibrates before fusing)
+        compiler.execute(compiler.compile_cnn(cfg, scheduled=True,
+                                              fuse=False), params,
                          x, eng, observer=lambda n, v: cal.observe(str(n.id), v))
         scheduled = {int(k): float(v) for k, v in cal.scales().items()}
         assert scheduled == sequential
