@@ -34,6 +34,7 @@ from repro.configs.cnn_zoo import CNN_ZOO
 
 TRACE_MODELS = ("squeezenet", "mobilenetv2", "resnet50")
 TRACE_LEN = 40                              # requests over the 3 models
+FAST_LEN = 10                               # --fast: one model, short trace
 SERVE_HW = 32                               # reduced input for CPU wall-clock
 WAVE = 4
 BENCH_PATH = os.path.join(os.path.dirname(os.path.dirname(
@@ -45,8 +46,9 @@ def _reduced(name):
     return dataclasses.replace(CNN_ZOO[name], input_hw=SERVE_HW)
 
 
-def _build_fleet(seed=0):
-    """(cfg, float params, calibration batch) per trace model."""
+def _build_fleet(seed=0, models=TRACE_MODELS):
+    """(cfg, float params, calibration batch) per trace model.  `models`
+    entries are zoo names or ready CNNConfig objects."""
     import jax
     import jax.numpy as jnp
 
@@ -55,8 +57,8 @@ def _build_fleet(seed=0):
 
     fleet = []
     rng = np.random.default_rng(seed)
-    for i, name in enumerate(TRACE_MODELS):
-        cfg = _reduced(name)
+    for i, m in enumerate(models):
+        cfg = _reduced(m) if isinstance(m, str) else m
         params = init_params(cnn.cnn_schema(cfg), jax.random.PRNGKey(i))
         calib = jnp.asarray(rng.normal(
             size=(2, cfg.input_hw, cfg.input_hw, cfg.input_ch)
@@ -65,14 +67,24 @@ def _build_fleet(seed=0):
     return fleet
 
 
-def _trace(seed=0):
+def fast_cfg():
+    """--fast's model: the reduced squeezenet truncated to its first
+    fire stages -- same op mix (stem, pool, fire blocks), a fraction of
+    the param-init + XLA-compile wall that dominates the fast budget."""
+    import dataclasses
+    base = _reduced("squeezenet")
+    return dataclasses.replace(base, name="squeezenet-fast",
+                               stages=base.stages[:3])
+
+
+def _trace(seed=0, models=TRACE_MODELS, length=TRACE_LEN):
     """A repeated-model request trace: each request names a model and
     carries one image.  Model repetition mirrors production traffic (a
     small working set revisited), which is what the cache monetizes."""
     rng = np.random.default_rng(seed)
-    names = [TRACE_MODELS[int(i)] for i in
-             rng.integers(0, len(TRACE_MODELS), TRACE_LEN)]
-    sizes = {n: _reduced(n).input_hw for n in TRACE_MODELS}
+    names = [models[int(i)] for i in
+             rng.integers(0, len(models), length)]
+    sizes = {n: _reduced(n).input_hw for n in models}
     return [(n, rng.normal(size=(sizes[n], sizes[n], 3)).astype(np.float32))
             for n in names]
 
@@ -87,7 +99,7 @@ def _serve_trace(engine, fleet, trace):
     return time.perf_counter() - t0
 
 
-def serve_stats(wave_batch: bool = True, fleet=None, trace=None):
+def serve_stats(wave_batch: bool = True, fleet=None, trace=None, cache=None):
     """Serve the standard trace through a cached engine; return its stats
     (the hit-rate + occupancy line check.sh prints comes from here)."""
     from repro import compiler
@@ -97,7 +109,7 @@ def serve_stats(wave_batch: bool = True, fleet=None, trace=None):
     fleet = _build_fleet() if fleet is None else fleet
     trace = _trace() if trace is None else trace
     engine = CNNServeEngine(eng_lib.paper_engine(), wave_size=WAVE,
-                            cache_capacity=len(TRACE_MODELS) + 1)
+                            cache_capacity=len(fleet) + 1, cache=cache)
     wall = _serve_trace(engine, fleet, trace)
     stats = engine.stats()
     stats["wall_s"] = wall
@@ -138,7 +150,7 @@ def serve_stats(wave_batch: bool = True, fleet=None, trace=None):
     if wave_batch:
         # the same trace arriving all at once: full waves per model
         engine2 = CNNServeEngine(eng_lib.paper_engine(), wave_size=WAVE,
-                                 cache_capacity=len(TRACE_MODELS) + 1,
+                                 cache_capacity=len(fleet) + 1,
                                  cache=engine.cache)   # warm shared cache
         for cfg, params, calib in fleet:
             engine2.register(cfg, params, calib_batches=[calib])
@@ -151,7 +163,7 @@ def serve_stats(wave_batch: bool = True, fleet=None, trace=None):
     return stats
 
 
-def fill_rate_stats(fleet=None, trace=None):
+def fill_rate_stats(fleet=None, trace=None, cache=None):
     """Mixed-arrival trace, one request at a time, two batching policies:
 
       * pad-and-mask baseline -- flush() after every arrival: every request
@@ -170,7 +182,7 @@ def fill_rate_stats(fleet=None, trace=None):
     trace = _trace() if trace is None else trace
 
     base = CNNServeEngine(eng_lib.paper_engine(), wave_size=WAVE,
-                          cache_capacity=len(TRACE_MODELS) + 1)
+                          cache_capacity=len(fleet) + 1, cache=cache)
     for cfg, params, calib in fleet:
         base.register(cfg, params, calib_batches=[calib])
     for name, img in trace:
@@ -178,7 +190,7 @@ def fill_rate_stats(fleet=None, trace=None):
         base.flush()                    # pad-and-mask per arrival
 
     cont = CNNServeEngine(eng_lib.paper_engine(), wave_size=WAVE,
-                          cache_capacity=len(TRACE_MODELS) + 1,
+                          cache_capacity=len(fleet) + 1,
                           cache=base.cache)    # warm shared cache
     for cfg, params, calib in fleet:
         cont.register(cfg, params, calib_batches=[calib])
@@ -303,10 +315,12 @@ def bench_payload(fleet=None, trace=None, stats=None, fr=None, zoo=None):
     if zoo is None:
         zoo = zoo_fusion_occupancy()
     return {
-        "trace": {"models": list(TRACE_MODELS), "requests": len(trace),
+        "trace": {"models": [cfg.name for cfg, _, _ in fleet],
+                  "requests": len(trace),
                   "wave_size": WAVE, "input_hw": SERVE_HW},
         "ops_per_s": stats["requests_per_s"],
         "wall_s": stats["wall_s"],
+        "latency_ms": stats["latency_ms"],
         "cache_hit_rate": stats["cache_hit_rate"],
         "fill_rate": {"continuous": fr["continuous_fill_rate"],
                       "pad_and_mask": fr["baseline_fill_rate"]},
@@ -323,10 +337,98 @@ def bench_payload(fleet=None, trace=None, stats=None, fr=None, zoo=None):
 
 
 def write_bench_json(payload, path: str = BENCH_PATH) -> str:
+    """Merge-write the snapshot: top-level keys other writers own (e.g.
+    serve_fleet's "fleet" block) survive a serve_cnn rewrite and vice
+    versa, so the cross-PR trajectory file accretes instead of thrashing."""
+    merged = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                merged = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            merged = {}
+    merged.update(payload)
     with open(path, "w") as f:
-        json.dump(payload, f, indent=2, sort_keys=True)
+        json.dump(merged, f, indent=2, sort_keys=True)
         f.write("\n")
     return path
+
+
+def fast_payload():
+    """--fast: a measured sub-10s trace subset that still emits the full
+    BENCH_serve.json schema.  One model, short trace, ONE engine: the
+    serve pass is flush-per-arrival (exactly the pad-and-mask baseline),
+    then a second pump-per-arrival pass on the same warm engine measures
+    continuous batching as scheduler-stat deltas -- no extra engines, so
+    no re-tracing.  Printed to stdout; it does NOT overwrite the snapshot
+    the full run records."""
+    from repro.core import engine as eng_lib
+    from repro.serve.cnn_engine import CNNServeEngine
+
+    fleet = _build_fleet(models=[fast_cfg()])
+    rng = np.random.default_rng(0)
+    cfg0 = fleet[0][0]
+    trace = [(cfg0.name,
+              rng.normal(size=(cfg0.input_hw, cfg0.input_hw, 3)
+                         ).astype(np.float32)) for _ in range(FAST_LEN)]
+    engine = CNNServeEngine(eng_lib.paper_engine(), wave_size=WAVE,
+                            cache_capacity=len(fleet) + 1)
+    wall = _serve_trace(engine, fleet, trace)     # pad-and-mask arrivals
+    stats = engine.stats()
+    stats["wall_s"] = wall
+    stats["requests_per_s"] = len(trace) / wall if wall > 0 else 0.0
+    base_fill = stats["wave_fill_rate"]
+    base_waves = stats["waves"]
+    # continuous pass on the same warm engine: full waves only, deltas
+    s = engine._sched.stats
+    d0, p0, r0, x0 = s.dispatched, s.padded_slots, s.refilled_waves, \
+        engine.wave_stats.program_execs
+    for name, img in trace:
+        engine.submit(name, img)
+        engine.pump()
+    engine.flush()
+    slots = (s.dispatched - d0) + (s.padded_slots - p0)
+    fr = {
+        "baseline_fill_rate": base_fill,
+        "continuous_fill_rate": (s.dispatched - d0) / slots if slots else 0.0,
+        "baseline_waves": base_waves,
+        "continuous_waves": engine.wave_stats.waves - base_waves,
+        "refilled_waves": s.refilled_waves - r0,
+        "program_execs": engine.wave_stats.program_execs - x0,
+    }
+    # occupancy / launch stats for the one traced model
+    from repro import compiler
+    cfg = fleet[0][0]
+    program = engine.program_for(cfg.name)
+    g = program.graph
+    unfused = compiler.build_graph(cfg)
+    times = pm.cnn_node_times(g, cfg)
+    slack = compiler.level_schedule(g, "slack")
+    alap = compiler.level_schedule(g, "alap")
+    fs = compiler.fusion_stats(g)
+    stats["engine_occupancy"] = compiler.engine_occupancy(
+        g, program.schedule)["occupancy"]
+    stats["engine_occupancy_alap"] = compiler.engine_occupancy(
+        g, alap)["occupancy"]
+    stats["engine_occupancy_slack"] = compiler.engine_occupancy(
+        g, slack)["occupancy"]
+    stats["tw_occupancy"] = compiler.time_weighted_occupancy(
+        g, program.schedule, times)["occupancy"]
+    stats["tw_occupancy_slack"] = compiler.time_weighted_occupancy(
+        g, slack, times)["occupancy"]
+    stats["launches"] = {cfg.name: {
+        "unfused": compiler.launch_count(unfused),
+        "fused": fs["launches"],
+        "fused_ops": fs["fused_ops"],
+        "materialized_edges": fs["materialized_edges"],
+        "materialized_unfused":
+            compiler.fusion_stats(unfused)["materialized_edges"],
+    }}
+    zoo = zoo_fusion_occupancy()
+    payload, _, _ = bench_payload(fleet=fleet, trace=trace, stats=stats,
+                                  fr=fr, zoo=zoo)
+    payload["fast"] = True
+    return payload
 
 
 def summary_line() -> str:
@@ -361,11 +463,14 @@ if __name__ == "__main__":
     ap.add_argument("--summary", action="store_true",
                     help="one-line program-cache hit-rate only")
     ap.add_argument("--fast", action="store_true",
-                    help="model-only rows (skip wall-clock)")
+                    help="measured sub-10s trace subset; prints the "
+                         "BENCH_serve.json schema to stdout")
     args = ap.parse_args()
     if args.summary:
         print(summary_line())
+    elif args.fast:
+        print(json.dumps(fast_payload(), indent=2, sort_keys=True))
     else:
         print("name,us_per_call,derived")
-        for row_name, us, derived in run(measure=not args.fast):
+        for row_name, us, derived in run(measure=True):
             print(f"{row_name},{us:.1f},{derived}")

@@ -24,3 +24,9 @@ python -m benchmarks.serve_lm --summary
 
 echo "== decode throughput =="
 python -m benchmarks.serve_lm --decode-summary
+
+echo "== fleet scaling smoke (forced 8 host devices) =="
+# subprocess sweep over {1, 8} forced devices: asserts derived ops/s
+# scales monotonically with the mesh (the full {1,2,4,8} sweep that
+# records BENCH_serve.json's "fleet" block runs without --smoke)
+python -m benchmarks.serve_fleet --smoke

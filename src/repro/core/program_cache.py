@@ -62,6 +62,12 @@ class ProgramKey:
                                       # uncalibrated programs
     variant: str = ""                 # e.g. "scheduled" / "sequential" /
                                       # "scheduled:prefill"
+    mesh: Optional[Hashable] = None   # mesh topology (device count + axis
+                                      # shape) the program was traced for;
+                                      # None = single implicit device.  A
+                                      # shared cache must never hand a
+                                      # program traced for one mesh to an
+                                      # engine serving on another.
 
 
 class ProgramCache:

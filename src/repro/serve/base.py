@@ -22,6 +22,7 @@ programs from the same kind of keyed cache.  The base owns what they share:
 from __future__ import annotations
 
 import hashlib
+import time
 from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
@@ -32,6 +33,7 @@ import numpy as np
 from repro.compiler.executor import Program, schedule_variant
 from repro.core.config import EngineConfig
 from repro.core.program_cache import ProgramCache, ProgramKey
+from repro.serve.mesh_exec import MeshExecutor
 
 
 def calibration_digest(batches: Sequence, params=None,
@@ -72,11 +74,19 @@ class SlotStats:
     waves: int = 0                       # full-or-forced groups handed out
     padded_slots: int = 0                # empty slots in forced groups
     refilled_waves: int = 0              # groups spanning >1 arrival epoch
+    locality_hits: int = 0               # requests placed in their model's
+                                         # sticky device pool
+    locality_misses: int = 0             # spilled into a foreign pool
 
     @property
     def fill_rate(self) -> float:
         slots = self.dispatched + self.padded_slots
         return self.dispatched / slots if slots else 0.0
+
+    @property
+    def locality_rate(self) -> float:
+        placed = self.locality_hits + self.locality_misses
+        return self.locality_hits / placed if placed else 0.0
 
 
 @dataclass
@@ -84,6 +94,7 @@ class _Entry:
     ticket: int
     epoch: int
     payload: object
+    affinity: Hashable = None            # pool-locality key (model name)
 
 
 class SlotScheduler:
@@ -99,24 +110,92 @@ class SlotScheduler:
     every dispatch round (`next_epoch`), so a dispatched wave whose entries
     span epochs is counted as a refilled wave -- slots that would have been
     pad under flush-per-arrival batching.
+
+    With `pools` > 1 (one pool per mesh replica) a wave spans
+    `pools * slots` rows and refill is LOCALITY-AWARE: each affinity key
+    (the CNN engine passes the model name) gets a sticky home pool
+    (round-robin on first sight), and `take_wave` packs that key's
+    requests into its home pool's slot block first, spilling round-robin
+    only when the block is full -- so a replica keeps seeing the model
+    whose program rows it already executed (locality_hits / misses in
+    stats).
     """
 
-    def __init__(self, slots: int):
+    def __init__(self, slots: int, pools: int = 1):
         if slots < 1:
             raise ValueError("slots must be >= 1")
+        if pools < 1:
+            raise ValueError("pools must be >= 1")
         self.slots = slots
+        self.pools = pools
         self.stats = SlotStats()
         self.epoch = 0
         self._queues: "OrderedDict[Hashable, List[_Entry]]" = OrderedDict()
+        self._home_pool: Dict[Tuple[Hashable, Hashable], int] = {}
+        self._pool_rr: Dict[Hashable, int] = {}
         self._next_ticket = 0
 
-    def submit(self, group: Hashable, payload) -> int:
+    @property
+    def wave_slots(self) -> int:
+        """Rows per physical wave: one `slots`-sized pool per device."""
+        return self.slots * self.pools
+
+    def submit(self, group: Hashable, payload, affinity: Hashable = None
+               ) -> int:
         ticket = self._next_ticket
         self._next_ticket += 1
         self._queues.setdefault(group, []).append(
-            _Entry(ticket, self.epoch, payload))
+            _Entry(ticket, self.epoch, payload, affinity))
         self.stats.submitted += 1
         return ticket
+
+    def home_pool(self, group: Hashable, affinity: Hashable) -> int:
+        """The affinity key's sticky device pool within the group
+        (assigned round-robin on first sight, stable afterwards)."""
+        key = (group, affinity)
+        pool = self._home_pool.get(key)
+        if pool is None:
+            rr = self._pool_rr.get(group, 0)
+            pool = self._home_pool[key] = rr % self.pools
+            self._pool_rr[group] = rr + 1
+        return pool
+
+    def _pack_pools(self, group: Hashable, entries: List[_Entry]
+                    ) -> List[_Entry]:
+        """Order a wave's entries so each affinity key's requests fill its
+        home pool's slot block first (wave row i belongs to device pool
+        i // slots)."""
+        if self.pools <= 1:
+            return entries
+        by_aff: "OrderedDict[Hashable, List[_Entry]]" = OrderedDict()
+        for e in entries:
+            by_aff.setdefault(e.affinity, []).append(e)
+        placed: List[Optional[_Entry]] = [None] * self.wave_slots
+        homes: Dict[int, int] = {}      # final row -> home pool
+        for aff, es in by_aff.items():
+            home = self.home_pool(group, aff)
+            i = 0
+            for k in range(self.pools):
+                base = ((home + k) % self.pools) * self.slots
+                for row in range(base, base + self.slots):
+                    if i >= len(es):
+                        break
+                    if placed[row] is None:
+                        placed[row] = es[i]
+                        homes[row] = home
+                        i += 1
+        # a partial (forced) wave compacts; full waves keep their rows
+        out, hit_rows = [], []
+        for row, e in enumerate(placed):
+            if e is not None:
+                hit_rows.append((len(out), homes[row]))
+                out.append(e)
+        for row, home in hit_rows:
+            if row // self.slots == home:
+                self.stats.locality_hits += 1
+            else:
+                self.stats.locality_misses += 1
+        return out
 
     def next_epoch(self) -> None:
         """Mark a dispatch round boundary (a pump/flush or decode-burst
@@ -150,19 +229,53 @@ class SlotScheduler:
 
     def take_wave(self, group: Hashable, force: bool = False
                   ) -> Optional[List[Tuple[int, object]]]:
-        """Pop one wave of exactly `slots` requests, or None when the group
-        is partial.  force=True drains a final partial wave (its empty
-        slots are charged to padded_slots)."""
+        """Pop one wave of exactly `wave_slots` (= pools * slots) requests,
+        or None when the group is partial.  force=True drains a final
+        partial wave (its empty slots are charged to padded_slots).  Multi-
+        pool waves come back locality-packed (see _pack_pools)."""
+        cap = self.wave_slots
         q = self._queues.get(group, [])
-        if not q or (len(q) < self.slots and not force):
+        if not q or (len(q) < cap and not force):
             return None
-        taken, self._queues[group] = q[:self.slots], q[self.slots:]
+        taken, self._queues[group] = q[:cap], q[cap:]
         self.stats.dispatched += len(taken)
         self.stats.waves += 1
-        self.stats.padded_slots += self.slots - len(taken)
+        self.stats.padded_slots += cap - len(taken)
         if len({e.epoch for e in taken}) > 1:
             self.stats.refilled_waves += 1
+        taken = self._pack_pools(group, taken)
         return [(e.ticket, e.payload) for e in taken]
+
+
+class LatencyTracker:
+    """Per-request wall-clock latency, submit -> response materialization.
+
+    Both engines clock every ticket at submit() and again at the response
+    edge where its result becomes a host array, so the distribution
+    measures what a caller actually waits -- queueing + batching + device
+    time + the response-edge sync, not just kernel time.  percentiles()
+    feeds the `latency_ms` block of BENCH_serve.json."""
+
+    def __init__(self):
+        self._open: Dict[int, float] = {}
+        self.samples_ms: List[float] = []
+
+    def submitted(self, ticket: int) -> None:
+        self._open[ticket] = time.perf_counter()
+
+    def completed(self, ticket: int) -> None:
+        t0 = self._open.pop(ticket, None)
+        if t0 is not None:
+            self.samples_ms.append((time.perf_counter() - t0) * 1e3)
+
+    def percentiles(self) -> Dict[str, float]:
+        if not self.samples_ms:
+            return {"n": 0, "p50_ms": 0.0, "p99_ms": 0.0, "mean_ms": 0.0}
+        a = np.asarray(self.samples_ms)
+        return {"n": int(a.size),
+                "p50_ms": float(np.percentile(a, 50)),
+                "p99_ms": float(np.percentile(a, 99)),
+                "mean_ms": float(a.mean())}
 
 
 class ProgramServeBase:
@@ -170,13 +283,19 @@ class ProgramServeBase:
 
     def __init__(self, eng: EngineConfig, cache_capacity: int = 8,
                  scheduled: bool = True, cache: Optional[ProgramCache] = None,
-                 schedule_policy: str = "asap"):
+                 schedule_policy: str = "asap", mesh=None):
         self.eng = eng
         self.scheduled = scheduled
         self.schedule_policy = schedule_policy
         self.cache = (ProgramCache(cache_capacity, on_evict=self._on_evict)
                       if cache is None else cache)
         self._jitted: Dict[object, object] = {}
+        # mesh= routes all dispatch through the sharded executor; None
+        # keeps the single-implicit-device behavior bit-for-bit
+        self.mexec: Optional[MeshExecutor] = (
+            mesh if isinstance(mesh, MeshExecutor) or mesh is None
+            else MeshExecutor(mesh))
+        self.latency = LatencyTracker()
 
     # -- program cache -------------------------------------------------------
 
@@ -186,7 +305,9 @@ class ProgramServeBase:
 
     def _program_key(self, model_cfg, calib_id: Optional[str],
                      tag: str = "") -> ProgramKey:
-        return ProgramKey(model_cfg, self.eng, calib_id, self._variant(tag))
+        topo = self.mexec.topology if self.mexec is not None else None
+        return ProgramKey(model_cfg, self.eng, calib_id, self._variant(tag),
+                          mesh=topo)
 
     def _cached_program(self, key: ProgramKey,
                         compile_fn: Callable[[], Program]) -> Program:

@@ -27,7 +27,18 @@ registered CNNs on one fabric (the f-CNNx setting):
   * fold     -- the first time a model's program is bound, its weight
     layout transforms (im2col reshape, DWC lane padding) are constant-
     folded into the param tree (passes.fold_weight_layouts), so traced
-    programs stop re-laying-out weights per call.
+    programs stop re-laying-out weights per call;
+  * shard    -- with `mesh=` the engine serves data-parallel across the
+    mesh (serve/mesh_exec.py): the physical wave grows to one wave_size
+    slot pool PER data replica, the buffer shards over the batch axis
+    (weights replicate), and the SlotScheduler's locality-aware refill
+    packs each model's requests into its sticky replica's pool first.
+    Sharded logits are bit-identical to single-device (int8 GEMMs
+    accumulate in int32, so replica-local rows are exact);
+  * async    -- dispatch launches every wave and keeps logits as device
+    arrays in flight; the host syncs (one np.asarray per wave-model
+    execution) only at the response edges of pump()/flush()/infer(), so
+    assembling wave N+1 overlaps the device executing wave N.
 
 A multi-model wave executes the shared buffer once per distinct model in
 it and each request reads its own slot's logits (CNN programs are
@@ -102,16 +113,26 @@ class CNNServeEngine(ProgramServeBase):
     def __init__(self, eng: EngineConfig, wave_size: int = 4,
                  cache_capacity: int = 8, scheduled: bool = True,
                  cache: Optional[ProgramCache] = None,
-                 schedule_policy: str = "asap"):
+                 schedule_policy: str = "asap", mesh=None):
         if wave_size < 1:
             raise ValueError("wave_size must be >= 1")
         super().__init__(eng, cache_capacity=cache_capacity,
                          scheduled=scheduled, cache=cache,
-                         schedule_policy=schedule_policy)
+                         schedule_policy=schedule_policy, mesh=mesh)
+        # wave_size is PER-DEVICE slots; with a mesh the physical wave is
+        # one slot pool per data replica and the buffer shards over the
+        # batch axis, so each replica executes exactly its own pool's rows
         self.wave_size = wave_size
+        pools = self.mexec.n_data if self.mexec is not None else 1
         self.wave_stats = WaveStats()
+        self.execs_by_model: Dict[str, int] = {}
         self._models: Dict[str, _Model] = {}
-        self._sched = SlotScheduler(wave_size)
+        self._sched = SlotScheduler(wave_size, pools=pools)
+
+    @property
+    def wave_rows(self) -> int:
+        """Rows per physical wave buffer (= wave_size x data replicas)."""
+        return self._sched.wave_slots
 
     # -- model registry ------------------------------------------------------
 
@@ -180,8 +201,12 @@ class CNNServeEngine(ProgramServeBase):
         compile time (im2col reshape, DWC lane padding) -- computed once per
         (model, program) binding."""
         if m.folded is None or m.folded[0] is not program:
-            m.folded = (program, compiler.fold_weight_layouts(
-                program.graph, m.qparams))
+            qp = compiler.fold_weight_layouts(program.graph, m.qparams)
+            if self.mexec is not None:
+                # data-parallel waves: weights replicate across the mesh
+                # once per (model, program) binding, not per dispatch
+                qp = self.mexec.replicate(qp)
+            m.folded = (program, qp)
         return m.folded[1]
 
     # -- request batching ----------------------------------------------------
@@ -204,8 +229,11 @@ class CNNServeEngine(ProgramServeBase):
             # drop every other pending request with it
             raise ValueError(f"submit() takes one {want} image per "
                              f"{name!r} request, got shape {image.shape}")
-        # slot groups are keyed by shape: same-shape models share waves
-        return self._sched.submit(want, (name, image))
+        # slot groups are keyed by shape: same-shape models share waves;
+        # the model name is the pool-locality key on multi-device meshes
+        ticket = self._sched.submit(want, (name, image), affinity=name)
+        self.latency.submitted(ticket)
+        return ticket
 
     def pending(self) -> int:
         return self._sched.pending()
@@ -225,35 +253,48 @@ class CNNServeEngine(ProgramServeBase):
         return [results[t] for t in sorted(results)]
 
     def _dispatch(self, force: bool) -> Dict[int, np.ndarray]:
-        results: Dict[int, np.ndarray] = {}
+        """Async dispatch with response-edge sync: every wave-model
+        execution is launched first (results stay device arrays in
+        flight, so host-side assembly of the next wave buffer overlaps
+        device compute), then ONE np.asarray per execution materializes
+        the logits at the response edge."""
+        in_flight: List[Tuple[object, List[Tuple[int, int]]]] = []
         for group in self._sched.groups():
             while True:
                 wave = self._sched.take_wave(group, force=force)
                 if wave is None:
                     break
-                self._run_wave(wave, group, results)
+                self._run_wave(wave, group, in_flight)
         self._sched.next_epoch()
+        results: Dict[int, np.ndarray] = {}
+        for dev_logits, slots in in_flight:      # response edge: host sync
+            logits = np.asarray(dev_logits)
+            for slot, ticket in slots:
+                results[ticket] = logits[slot]   # mask foreign/pad slots
+                self.latency.completed(ticket)
         return results
 
-    def _run_wave(self, wave, shape, results: Dict[int, np.ndarray]) -> None:
-        """Execute one wave buffer.  Slots may belong to different models
+    def _run_wave(self, wave, shape, in_flight) -> None:
+        """Launch one wave buffer.  Slots may belong to different models
         (same shape): the buffer runs once per distinct model and each
-        ticket reads its own slot's row."""
-        buf = np.zeros((self.wave_size,) + shape, np.float32)
+        ticket reads its own slot's row.  Appends (device logits, slots)
+        per execution without blocking; _dispatch materializes."""
+        buf = np.zeros((self.wave_rows,) + shape, np.float32)
         slots_of: Dict[str, List[Tuple[int, int]]] = {}
         for slot, (ticket, (name, img)) in enumerate(wave):
             buf[slot] = img
             slots_of.setdefault(name, []).append((slot, ticket))
         jbuf = jnp.asarray(buf)
+        if self.mexec is not None:
+            jbuf = self.mexec.place_wave(jbuf)   # rows shard over replicas
         for name, slots in slots_of.items():
             run, qparams = self._executor_for(name)
-            logits = np.asarray(run(qparams, jbuf))
+            in_flight.append((run(qparams, jbuf), slots))
             self.wave_stats.program_execs += 1
-            for slot, ticket in slots:
-                results[ticket] = logits[slot]      # mask foreign/pad slots
+            self.execs_by_model[name] = self.execs_by_model.get(name, 0) + 1
         self.wave_stats.requests += len(wave)
         self.wave_stats.waves += 1
-        self.wave_stats.padded += self.wave_size - len(wave)
+        self.wave_stats.padded += self.wave_rows - len(wave)
 
     def infer(self, name: str, images) -> np.ndarray:
         """Convenience: submit a [N, H, W, C] batch as N requests and flush.
@@ -286,7 +327,14 @@ class CNNServeEngine(ProgramServeBase):
             "wave_occupancy": self.wave_stats.occupancy,
             "wave_fill_rate": self.wave_stats.occupancy,
             "program_execs": self.wave_stats.program_execs,
+            "execs_by_model": dict(self.execs_by_model),
             "refilled_waves": self._sched.stats.refilled_waves,
             "queued": self._sched.pending(),
+            "latency_ms": self.latency.percentiles(),
         })
+        if self.mexec is not None:
+            out["mesh"] = self.mexec.describe()
+            out["wave_rows"] = self.wave_rows
+            out["pool_locality_rate"] = self._sched.stats.locality_rate
+            out["pool_locality_hits"] = self._sched.stats.locality_hits
         return out

@@ -29,6 +29,14 @@ on the local device(s) through the unified serve path (serve/base.py):
     batch composition cannot change its output (the order-invariance
     property test pins that; see run() on the unset-width default).
 
+With `mesh=` the engine serves tensor-parallel (serve/mesh_exec.py):
+projection weights shard over the mesh's "model" axis at whole-head
+granularity, the KV cache replicates, and every decode-burst GEMM runs
+sharded -- bit-identical to single-device execution (the sharded-parity
+property test pins it).  Decode dispatch is async: bursts keep emitted
+token columns on device and the host syncs only at response edges (a
+request completing), never per step.
+
 SSM / MoE mixers and the audio encoder-decoder stay eager: `stats()`
 reports the exact `lowering_blockers` instead of silently falling back.
 """
@@ -99,10 +107,11 @@ class ServeEngine(ProgramServeBase):
                  compile_prefill: bool = True,
                  compile_decode: bool = True,
                  decode_burst: int = 4,
-                 prefill_len: Optional[int] = None):
+                 prefill_len: Optional[int] = None,
+                 mesh=None):
         super().__init__(eng, cache_capacity=cache_capacity,
                          scheduled=scheduled, cache=cache,
-                         schedule_policy=schedule_policy)
+                         schedule_policy=schedule_policy, mesh=mesh)
         self.arch = arch
         self.batch, self.max_seq = batch_size, max_seq
         self.decode_burst = max(1, decode_burst)
@@ -110,6 +119,17 @@ class ServeEngine(ProgramServeBase):
         self._float_params = params
         self.params = eng_lib.quantize_params(params, eng)
         self.is_audio = arch.family == "audio"
+        # mesh= places the param tree tensor-parallel over the "model"
+        # axis (whole-head granularity; see serve/mesh_exec.py) -- decode
+        # bursts then run their projection GEMMs sharded, bit-identical
+        # to single-device
+        self.tp_placement = None
+        if self.mexec is not None:
+            if self.is_audio:
+                self.params = self.mexec.replicate(self.params)
+            else:
+                self.params, self.tp_placement = \
+                    self.mexec.place_lm_params(arch, self.params)
         mod = W if self.is_audio else T
         self.mod = mod
         # Prefill/decode compile through the engine IR when the arch
@@ -254,8 +274,11 @@ class ServeEngine(ProgramServeBase):
                                         self.eng)
         else:
             cs = T.cache_schema(self.arch, self.batch, self.max_seq, self.eng)
-        return jax.tree_util.tree_map(
+        cache = jax.tree_util.tree_map(
             lambda s: jnp.zeros(s.shape, s.dtype), cs, is_leaf=is_spec)
+        if self.mexec is not None:
+            cache = self.mexec.replicate(cache)   # KV cache stays replicated
+        return cache
 
     def submit(self, prompt, max_new_tokens: int = 16) -> int:
         """Queue one prompt; returns its ticket (the key of its decoded
@@ -269,7 +292,9 @@ class ServeEngine(ProgramServeBase):
             raise ValueError(
                 f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens})"
                 f" exceeds max_seq={self.max_seq}")
-        return self._sched.submit(_LM, (prompt, int(max_new_tokens)))
+        ticket = self._sched.submit(_LM, (prompt, int(max_new_tokens)))
+        self.latency.submitted(ticket)
+        return ticket
 
     def pending(self) -> int:
         return self._sched.pending(_LM)
@@ -288,7 +313,15 @@ class ServeEngine(ProgramServeBase):
         and batch composition (the order-invariance property test); with
         it unset, prompts shorter than the queue's max see a
         queue-dependent pad width, exactly as the per-wave padding before
-        them did."""
+        them did.
+
+        Dispatch is ASYNC with response-edge sync: decode bursts keep the
+        emitted token columns as device arrays in flight (one [B, burst]
+        block per burst, no per-step host readback), and the host
+        materializes a block only at a response edge -- when some slot's
+        request completes at the end of a burst.  Blocks every live slot
+        has consumed are dropped, so in-flight device memory stays bounded
+        by the longest active request."""
         results: Dict[int, np.ndarray] = {}
         sched, B = self._sched, self.batch
         if not sched.pending(_LM):
@@ -304,7 +337,25 @@ class ServeEngine(ProgramServeBase):
         cur = jnp.zeros((B, 1), jnp.int32)
         tickets: List[Optional[int]] = [None] * B
         remaining = np.zeros(B, np.int64)
-        outs: List[list] = [[] for _ in range(B)]
+        start = np.zeros(B, np.int64)     # slot's first global step
+        step = 0                          # global decode-step counter
+        blocks: List[List] = []           # [start step, [B, w] device toks]
+        block_np: Dict[int, np.ndarray] = {}   # id(block) -> host tokens
+
+        def tokens_for(slot: int, lo: int, hi: int) -> np.ndarray:
+            """Materialize steps [lo, hi) of one slot from the in-flight
+            blocks -- the response edge's only host sync."""
+            parts = []
+            for s0, blk in blocks:
+                w = blk.shape[1]
+                if s0 + w <= lo or s0 >= hi:
+                    continue
+                arr = block_np.get(id(blk))
+                if arr is None:
+                    arr = block_np[id(blk)] = np.asarray(blk)
+                parts.append(arr[slot, max(lo - s0, 0):min(hi - s0, w)])
+            return (np.concatenate(parts).astype(np.int32) if parts
+                    else np.zeros(0, np.int32))
 
         while True:
             free = [i for i in range(B) if remaining[i] == 0]
@@ -324,7 +375,7 @@ class ServeEngine(ProgramServeBase):
                         self.serve_stats.slot_refills += 1
                     tickets[slot] = ticket
                     remaining[slot] = mnt
-                    outs[slot] = []
+                    start[slot] = step
                 # batched prefill of the refill slots only; foreign rows
                 # compute garbage that the masked merge throws away
                 logits, fresh = prefill_exec(self.params, self._empty_cache(),
@@ -345,19 +396,34 @@ class ServeEngine(ProgramServeBase):
                 break
             burst = int(min(self.decode_burst,
                             min(remaining[i] for i in act)))
+            cols = []
             for _ in range(burst):
-                row = np.asarray(cur[:, 0])       # one sync per step
-                for i in act:
-                    outs[i].append(int(row[i]))
+                cols.append(cur)          # emitted token, still on device
                 logits, cache = decode_exec(self.params, cache, cur)
                 cur = jnp.argmax(logits[:, -1, :], axis=-1)[:, None
                                                             ].astype(jnp.int32)
                 self.serve_stats.decode_steps += 1
                 self.serve_stats.active_slot_steps += len(act)
+            blocks.append([step, cols[0] if burst == 1
+                           else jnp.concatenate(cols, axis=1)])
+            step += burst
+            finished = False
             for i in act:
                 remaining[i] -= burst
-                if remaining[i] == 0:
-                    results[tickets[i]] = np.asarray(outs[i], np.int32)
+                if remaining[i] == 0:     # response edge for this ticket
+                    results[tickets[i]] = tokens_for(i, int(start[i]), step)
+                    self.latency.completed(tickets[i])
+                    finished = True
+            if finished:
+                # drop blocks every live slot is past (bounded in-flight)
+                live = [int(start[i]) for i in range(B) if remaining[i] > 0]
+                lo = min(live) if live else step
+                keep = [b for b in blocks if b[0] + b[1].shape[1] > lo]
+                kept_ids = {id(b[1]) for b in keep}
+                for b in blocks:
+                    if id(b[1]) not in kept_ids:
+                        block_np.pop(id(b[1]), None)
+                blocks = keep
         return results
 
     # -- generation ----------------------------------------------------------
@@ -419,7 +485,12 @@ class ServeEngine(ProgramServeBase):
             "slot_refills": s.slot_refills,
             "slot_refill_rate": s.refill_rate,
             "slot_occupancy": s.slot_occupancy,
+            "latency_ms": self.latency.percentiles(),
         })
+        if self.mexec is not None:
+            out["mesh"] = self.mexec.describe()
+            if self.tp_placement is not None:
+                out["tp_placement"] = self.tp_placement
         for tag, key in (("prefill", self._prefill_key()),
                          ("decode", self._decode_key())):
             program = self.cache.peek(key)

@@ -1,0 +1,215 @@
+"""Sharded multi-device placement for the serving tier.
+
+`launch/mesh.py` builds production meshes that, until now, only the
+training/launch path consumed.  This module is the serving-side consumer:
+it places compiled engine programs on a ("data", "model") device mesh so
+one engine serves from every chip at once.
+
+Two placement regimes, both bit-identical to single-device execution:
+
+  * data-parallel CNN waves -- the wave buffer shards over the batch axis
+    (`NamedSharding(mesh, P("data"))` via the same `batch_axes` /
+    divisibility rule as `launch.mesh.act_pspec`) while the folded weight
+    tree replicates.  The static-int8 path accumulates GEMMs in int32, so
+    per-replica partial batches reproduce the single-device rows exactly
+    (the sharded-parity property test pins this zoo-wide).
+
+  * tensor-parallel LM decode bursts -- LinearOp weights shard over the
+    "model" axis, reusing `models.params.resolve_pspec` for the logical
+    tp axes, with one serving-specific restriction: attention projections
+    shard only at WHOLE-HEAD granularity.  Splitting inside a kv head
+    would shard the attention score contraction over head_dim and reorder
+    its float reduction (measured: ~4e-1 logit drift on a reduced arch
+    whose single 32-dim kv head was split 4 ways -- greedy decode then
+    diverges from token 1).  Column-parallel wq/wu/wg, row-parallel
+    wo/wd (int8 GEMMs, int32 partial sums) and vocab-sharded embeddings
+    are exact, so everything else shards whenever divisible.
+
+`MeshTopology` is the hashable mesh descriptor `ProgramKey` carries, so
+programs traced for different meshes never collide in a shared
+ProgramCache.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.quant import QTensor
+from repro.launch import mesh as mesh_lib
+from repro.models.params import resolve_pspec
+
+__all__ = ["MeshTopology", "MeshExecutor", "make_serve_mesh",
+           "tp_shardable", "lm_tp_pspec"]
+
+
+@dataclass(frozen=True)
+class MeshTopology:
+    """Hashable mesh descriptor: device count + axis shape.  This is the
+    ProgramKey component -- two engines serving the same model on meshes
+    of different shape must not share a cached program/trace."""
+    axes: Tuple[Tuple[str, int], ...]
+
+    @classmethod
+    def from_mesh(cls, mesh) -> "MeshTopology":
+        return cls(tuple((str(a), int(mesh.shape[a]))
+                         for a in mesh.axis_names))
+
+    @property
+    def devices(self) -> int:
+        n = 1
+        for _, size in self.axes:
+            n *= size
+        return n
+
+    def size(self, axis: str) -> int:
+        return dict(self.axes).get(axis, 1)
+
+    def __str__(self) -> str:
+        shape = "x".join(str(s) for _, s in self.axes)
+        names = ",".join(a for a, _ in self.axes)
+        return f"mesh[{shape};{names}]"
+
+
+def make_serve_mesh(n_data: Optional[int] = None, n_model: int = 1) -> Mesh:
+    """A ("data", "model") serving mesh over the first n_data*n_model
+    local devices (default: all of them on the data axis)."""
+    devs = jax.devices()
+    if n_data is None:
+        n_data = max(1, len(devs) // max(1, n_model))
+    need = n_data * n_model
+    if need > len(devs):
+        raise ValueError(f"mesh ({n_data}x{n_model}) needs {need} devices, "
+                         f"have {len(devs)}")
+    grid = np.array(devs[:need]).reshape(n_data, n_model)
+    return Mesh(grid, ("data", "model"))
+
+
+# -- tensor-parallel LM placement -------------------------------------------
+
+# Serving-TP logical axes per LM param name (params replicate over "data";
+# only the "tp" -> "model" dimension shards).  resolve_pspec drops any
+# non-divisible dim, so these are upper bounds.
+_TP_AXES: Dict[str, Tuple] = {
+    "wq": (None, "tp"), "wk": (None, "tp"), "wv": (None, "tp"),
+    "wo": ("tp", None),
+    "wu": (None, "tp"), "wg": (None, "tp"), "wd": ("tp", None),
+    "embed": ("tp", None),            # vocab rows; tied head stays exact
+    "head": (None, "tp"),             # vocab columns
+}
+
+
+def tp_shardable(name: str, arch, tp: int) -> bool:
+    """The whole-head granularity guard.  Attention projections may only
+    shard when the model axis divides their HEAD count -- a shard boundary
+    inside one head's head_dim slice would shard the score/value
+    contraction and change the attention float math (not bit-identical).
+    MLP and embedding dims carry no such structure."""
+    if tp <= 1:
+        return False
+    if name in ("wq", "wo"):
+        return arch.n_heads % tp == 0
+    if name in ("wk", "wv"):
+        return arch.n_kv_heads % tp == 0
+    return name in _TP_AXES
+
+
+def lm_tp_pspec(name: str, shape, arch, mesh) -> P:
+    """PartitionSpec for one LM param under serving TP: the logical tp
+    axes via resolve_pspec, gated by the whole-head rule.  Unknown names
+    (norms, biases, SSM mixers) replicate -- always exact."""
+    tp = dict(zip(mesh.axis_names,
+                  [mesh.shape[a] for a in mesh.axis_names])).get("model", 1)
+    if not tp_shardable(name, arch, tp):
+        return P()
+    return resolve_pspec(mesh, shape, _TP_AXES[name])
+
+
+class MeshExecutor:
+    """Places wave buffers, param trees, and decode state on a serving
+    mesh.  Engines route all device placement through this object; with no
+    executor they behave exactly as before (single implicit device)."""
+
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+        self.topology = MeshTopology.from_mesh(mesh)
+        self._replicated = NamedSharding(mesh, P())
+
+    # -- shape --------------------------------------------------------------
+
+    @property
+    def n_devices(self) -> int:
+        return self.topology.devices
+
+    @property
+    def n_data(self) -> int:
+        return self.topology.size("data") * self.topology.size("pod")
+
+    @property
+    def n_model(self) -> int:
+        return self.topology.size("model")
+
+    # -- placement ----------------------------------------------------------
+
+    def replicate(self, tree):
+        """Every leaf replicated across the mesh (QTensor leaves are
+        pytrees of (q, scale); both replicate)."""
+        return jax.device_put(tree, self._replicated)
+
+    def batch_pspec(self, batch: int) -> P:
+        """Batch-axis spec for a wave buffer: the act_pspec rule -- shard
+        over the data axes when divisible, replicate otherwise."""
+        dp = mesh_lib.batch_axes(self.mesh)
+        return P(dp) if batch % max(self.n_data, 1) == 0 else P()
+
+    def place_wave(self, buf: jax.Array) -> jax.Array:
+        """Shard a [rows, ...] wave buffer over the data axis: each
+        replica holds its own slot-pool's rows."""
+        return jax.device_put(
+            buf, NamedSharding(self.mesh, self.batch_pspec(buf.shape[0])))
+
+    def _place_named(self, name: Optional[str], leaf, arch):
+        spec = lm_tp_pspec(name, _leaf_shape(leaf), arch, self.mesh) \
+            if name else P()
+        sh = NamedSharding(self.mesh, spec)
+        if isinstance(leaf, QTensor):
+            # int8 payload shards; the (scalar / per-channel) scale is
+            # tiny -- replicate it, elementwise requant stays exact
+            return QTensor(jax.device_put(leaf.q, sh),
+                           jax.device_put(leaf.scale, self._replicated)), spec
+        return jax.device_put(leaf, sh), spec
+
+    def place_lm_params(self, arch, params):
+        """Tensor-parallel placement of an LM param tree by leaf name.
+        Returns (placed tree, report) where the report counts sharded vs
+        replicated leaves -- the engine surfaces it in stats()."""
+        report = {"tp_sharded": 0, "tp_replicated": 0, "tp_axis": self.n_model}
+
+        def rec(node, name=None):
+            if isinstance(node, dict):
+                return {k: rec(v, k) for k, v in node.items()}
+            # QTensor is a NamedTuple: a placement leaf, not a container
+            if isinstance(node, (list, tuple)) \
+                    and not isinstance(node, QTensor):
+                return type(node)(rec(v, name) for v in node)
+            placed, spec = self._place_named(name, node, arch)
+            if spec == P():
+                report["tp_replicated"] += 1
+            else:
+                report["tp_sharded"] += 1
+            return placed
+
+        return rec(params), report
+
+    def describe(self) -> Dict[str, object]:
+        return {"devices": self.n_devices, "data": self.n_data,
+                "model": self.n_model, "topology": str(self.topology)}
+
+
+def _leaf_shape(leaf):
+    if isinstance(leaf, QTensor):
+        return tuple(leaf.q.shape)
+    return tuple(np.shape(leaf))
