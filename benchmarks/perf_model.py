@@ -378,7 +378,12 @@ def lm_node_times(graph, arch, batch: int, seq: int,
             "wo": (nh * hd, d), "wg": (d, ff), "wu": (d, ff), "wd": (ff, d)}
     out: dict = {}
     for n in graph.nodes:
-        if isinstance(n, G.LinearOp):
+        if isinstance(n, G.LinearGroupOp):
+            # One fused launch over the N-concatenated members: same MACs
+            # and A-read as the members, one A-fetch instead of len(ws)
+            kns = [dims.get(p[-1] if p else "", (d, d)) for p in n.ws]
+            out[n.id] = _gemm_time(m, kns[0][0], sum(kn[1] for kn in kns))
+        elif isinstance(n, G.LinearOp):
             kn = dims.get(n.w[-1] if n.w else "", (d, d))
             out[n.id] = _gemm_time(m, *kn)
         elif isinstance(n, G.HeadOp):

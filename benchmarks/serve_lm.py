@@ -21,7 +21,9 @@ compiler):
 
 --summary prints the one-line LM program-cache + occupancy summary;
 --decode-summary prints the compiled-vs-eager decode throughput one-liner
-(scripts/check.sh appends both to the gate output).
+plus the w4a8-vs-w8a8 tokens/s and weight-bytes/token comparison, and
+merges the numbers into BENCH_serve.json's "lm_decode" block
+(scripts/check.sh appends both lines to the gate output).
 """
 import time
 
@@ -150,6 +152,65 @@ def decode_stats(steps: int = DECODE_STEPS, seed: int = 0):
     }
 
 
+def _proj_weight_bytes(params) -> int:
+    """Decode-GEMM weight bytes read per decode step: the container bytes
+    (core.quant.container_nbytes) of every projection weight the DecodeStep
+    program's GEMMs consume -- the W4_KEYS set, whatever their packing
+    (f32 / QTensor int8 / Q4Tensor int4)."""
+    from repro.core.engine import W4_KEYS
+    from repro.core.quant import container_nbytes
+
+    total = 0
+
+    def rec(node, name=None):
+        nonlocal total
+        if isinstance(node, dict):
+            for k, v in node.items():
+                rec(v, k)
+        elif isinstance(node, (list, tuple)) and not hasattr(node, "_fields"):
+            for v in node:                # NamedTuples are weight leaves
+                rec(v, name)
+        elif name in W4_KEYS:
+            total += container_nbytes(node)
+
+    rec(params)
+    return total
+
+
+def decode_quant_stats(steps: int = DECODE_STEPS, seed: int = 0):
+    """w4a8 vs w8a8 compiled decode on one arch: measured tokens/s and the
+    per-token projection-weight read (int4 packing must cut it to <= 0.55x
+    of int8 -- packed nibbles plus f16 group scales/zeros)."""
+    from repro.core.config import EngineConfig
+    from repro.serve.engine import ServeEngine
+
+    (arch, params, calib, prompts) = _fleet(seed)[0]
+
+    def measure(quant: str):
+        eng = EngineConfig(quant=quant, backend="ref")
+        engine = ServeEngine(arch, params, eng, batch_size=2,
+                             max_seq=MAX_SEQ, calib_batches=calib,
+                             prefill_len=PROMPT_LEN)
+        engine.generate(prompts[:2], max_new_tokens=1)   # trace warmup
+        t0 = time.perf_counter()
+        engine.generate(prompts, max_new_tokens=steps)
+        dt = time.perf_counter() - t0
+        return (len(prompts) * steps / dt,
+                _proj_weight_bytes(engine.params))
+
+    tps_w8, bytes_w8 = measure("w8a8")
+    tps_w4, bytes_w4 = measure("w4a8")
+    return {
+        "arch": arch.name,
+        "tokens_per_s_w8": tps_w8,
+        "tokens_per_s_w4": tps_w4,
+        "w4_speedup": tps_w4 / tps_w8 if tps_w8 else 0.0,
+        "weight_bytes_per_token_w8": bytes_w8,
+        "weight_bytes_per_token_w4": bytes_w4,
+        "weight_bytes_ratio": bytes_w4 / bytes_w8 if bytes_w8 else 0.0,
+    }
+
+
 def run(measure: bool = True):
     if not measure:
         return []
@@ -178,6 +239,13 @@ def run(measure: bool = True):
         f"eager_tok_s={d['tokens_per_s_eager']:.1f},"
         f"speedup={d['speedup']:.2f}x,"
         f"slot_refill_rate={d['slot_refill_rate']:.2f}"))
+    q = decode_quant_stats()
+    out.append((
+        f"serve_lm/decode_w4/{q['arch']}", 0.0,
+        f"w4_tok_s={q['tokens_per_s_w4']:.1f},"
+        f"w8_tok_s={q['tokens_per_s_w8']:.1f},"
+        f"w4_speedup={q['w4_speedup']:.2f}x,"
+        f"weight_bytes_ratio={q['weight_bytes_ratio']:.3f}"))
     out.append((
         "serve_lm/trace/cached", stats["wall_s"] * 1e6,
         f"hit_rate={stats['cache_hit_rate']:.3f},"
@@ -205,13 +273,34 @@ def summary_line() -> str:
 
 
 def decode_summary_line() -> str:
+    from benchmarks.serve_cnn import write_bench_json
+
     d = decode_stats()
+    q = decode_quant_stats()
+    write_bench_json({"lm_decode": {
+        "arch": d["arch"],
+        "tokens_per_s_compiled": d["tokens_per_s_compiled"],
+        "tokens_per_s_eager": d["tokens_per_s_eager"],
+        "speedup": d["speedup"],
+        "tokens_per_s_w8": q["tokens_per_s_w8"],
+        "tokens_per_s_w4": q["tokens_per_s_w4"],
+        "w4_speedup": q["w4_speedup"],
+        "weight_bytes_per_token_w8": q["weight_bytes_per_token_w8"],
+        "weight_bytes_per_token_w4": q["weight_bytes_per_token_w4"],
+        "weight_bytes_ratio": q["weight_bytes_ratio"],
+    }})
     return (f"lm decode throughput ({d['arch']}): compiled "
             f"{d['tokens_per_s_compiled']:.1f} tok/s vs eager "
             f"{d['tokens_per_s_eager']:.1f} tok/s "
             f"({d['speedup']:.2f}x); slot-refill rate "
             f"{100 * d['slot_refill_rate']:.1f}%, slot occupancy "
-            f"{100 * d['slot_occupancy']:.1f}%")
+            f"{100 * d['slot_occupancy']:.1f}%; "
+            f"w4 {q['tokens_per_s_w4']:.1f} tok/s vs w8 "
+            f"{q['tokens_per_s_w8']:.1f} tok/s "
+            f"({q['w4_speedup']:.2f}x), weight bytes/token "
+            f"{q['weight_bytes_per_token_w4']} vs "
+            f"{q['weight_bytes_per_token_w8']} "
+            f"({q['weight_bytes_ratio']:.3f}x)")
 
 
 if __name__ == "__main__":

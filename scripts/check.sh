@@ -22,7 +22,9 @@ python -m benchmarks.serve_cnn --summary
 echo "serving perf snapshot: $(pwd)/BENCH_serve.json"
 python -m benchmarks.serve_lm --summary
 
-echo "== decode throughput =="
+echo "== decode throughput (compiled vs eager, w4 vs w8) =="
+# also merges tokens/s + weight-bytes/token into BENCH_serve.json's
+# "lm_decode" block (merge-preserving; serve_cnn/serve_fleet keys survive)
 python -m benchmarks.serve_lm --decode-summary
 
 echo "== fleet scaling smoke (forced 8 host devices) =="

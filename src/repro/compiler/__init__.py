@@ -28,14 +28,15 @@ from repro.compiler.executor import (Program, compile_cnn, compile_lm,
                                      rope_table_stats, schedule_variant)
 from repro.compiler.graph import (AddOp, AttnOp, ConcatOp, ConvOp, DwcOp,
                                   EmbedOp, Epilogue, Graph, HeadOp, InputOp,
-                                  LinearOp, MulOp, NormOp, PoolOp,
-                                  build_graph, can_lower, get_param,
-                                  lower_transformer, lowering_blockers)
+                                  LinearGroupOp, LinearOp, MulOp, NormOp,
+                                  PoolOp, ViewOp, build_graph, can_lower,
+                                  get_param, lower_transformer,
+                                  lowering_blockers)
 from repro.compiler.passes import (QuantPlan, dynamic_roundtrip_count,
                                    f32_roundtrip_edges, fold_requant,
                                    fold_weight_layouts, fuse_epilogues,
-                                   fusion_stats, launch_count,
-                                   residual_chains, set_param)
+                                   fuse_projections, fusion_stats,
+                                   launch_count, residual_chains, set_param)
 from repro.compiler.schedule import (Schedule, engine_occupancy, engine_unit,
                                      level_schedule, schedule_stats,
                                      time_weighted_occupancy,
@@ -99,16 +100,16 @@ def compile_lm_calibrated(arch, params, batches, eng=None,
 
 __all__ = [
     "AddOp", "AttnOp", "ChannelCalibrator", "ConcatOp", "ConvOp", "DwcOp",
-    "EmbedOp", "Epilogue", "Graph", "HeadOp", "InputOp", "LinearOp", "MulOp",
-    "NormOp", "PercentileCalibrator", "PoolOp", "Program", "QuantPlan",
-    "Schedule", "build_graph", "calibrate", "calibrate_lm", "can_lower",
+    "EmbedOp", "Epilogue", "Graph", "HeadOp", "InputOp", "LinearGroupOp",
+    "LinearOp", "MulOp", "NormOp", "PercentileCalibrator", "PoolOp",
+    "Program", "QuantPlan", "Schedule", "ViewOp", "build_graph", "calibrate", "calibrate_lm", "can_lower",
     "compile_calibrated", "compile_cnn", "compile_lm",
     "compile_lm_calibrated", "dynamic_roundtrip_count", "engine_occupancy",
     "engine_unit", "execute", "execute_decode", "f32_roundtrip_edges",
-    "fold_requant", "fold_weight_layouts", "fuse_epilogues", "fusion_stats",
-    "get_param", "launch_count", "level_schedule", "lower_transformer",
-    "lowering_blockers", "make_calibrator", "program_cache",
-    "residual_chains", "rope_table_stats", "schedule_stats",
-    "schedule_variant", "set_param", "time_weighted_occupancy",
-    "validate_schedule",
+    "fold_requant", "fold_weight_layouts", "fuse_epilogues",
+    "fuse_projections", "fusion_stats", "get_param", "launch_count",
+    "level_schedule", "lower_transformer", "lowering_blockers",
+    "make_calibrator", "program_cache", "residual_chains",
+    "rope_table_stats", "schedule_stats", "schedule_variant", "set_param",
+    "time_weighted_occupancy", "validate_schedule",
 ]

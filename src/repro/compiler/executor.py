@@ -52,13 +52,14 @@ import jax.numpy as jnp
 
 from repro.compiler import passes as passes_lib
 from repro.compiler.graph import (AddOp, AttnOp, ConcatOp, ConvOp, DwcOp,
-                                  EmbedOp, Graph, HeadOp, InputOp, LinearOp,
-                                  MulOp, NormOp, OpNode, PoolOp, build_graph,
+                                  EmbedOp, Graph, HeadOp, InputOp,
+                                  LinearGroupOp, LinearOp, MulOp, NormOp,
+                                  OpNode, PoolOp, ViewOp, build_graph,
                                   get_param, lower_transformer)
 from repro.compiler.passes import QuantPlan, fold_requant
 from repro.compiler.schedule import Schedule, level_schedule
 from repro.core.config import ArchConfig, CNNConfig, EngineConfig
-from repro.core.quant import QTensor, quantize_static
+from repro.core.quant import Q4Tensor, QTensor, quantize_static
 from repro.kernels import ops, ref
 from repro.models import layers as L
 from repro.models import transformer as T
@@ -161,7 +162,8 @@ def compile_lm(arch: ArchConfig,
                scales: Optional[Dict[int, float]] = None,
                scheduled: bool = True, policy: str = "asap",
                prefill: bool = False, mode: Optional[str] = None,
-               granularity: str = "per_tensor") -> Program:
+               granularity: str = "per_tensor",
+               fuse: bool = True) -> Program:
     """Lower a transformer ArchConfig to an engine program.
 
     `mode` selects the program: "full" computes full-sequence logits like
@@ -171,24 +173,40 @@ def compile_lm(arch: ArchConfig,
     legacy `prefill=True` flag is shorthand for mode="prefill".  Dynamic
     programs are memoized per (arch, variant) in the bounded
     program_cache(); calibrated ones are keyed by the serving layer.
+
+    `fuse` (default ON, mirroring compile_cnn) runs the LM graph rewrites:
+    passes.fuse_projections collapses each Q/K/V triple and gate/up pair
+    into ONE multi-output Conv PE launch, then passes.fuse_epilogues folds
+    the residual adds after the O/down projections into their GEMMs.
+    Calibration always observes the UNFUSED graph; its per-edge scales are
+    remapped through both rewrites (deterministic, so the full and decode
+    twins stay node-aligned).  fuse=False keeps the one-op-per-launch
+    graph -- the fused-vs-unfused parity baseline.
     """
     mode = mode or ("prefill" if prefill else "full")
     if mode not in ("full", "prefill", "decode"):
         raise ValueError(f"unknown LM program mode {mode!r}")
-    variant = schedule_variant(scheduled, policy) + f":{mode}"
+    variant = (schedule_variant(scheduled, policy) + f":{mode}"
+               + ("" if fuse else ":nofuse"))
     kind = "decode" if mode == "decode" else "forward"
 
-    def lower():
+    def lower(sc=None):
         if mode == "decode":
-            return lower_transformer(arch, mode="decode")
-        return lower_transformer(arch, last_only=(mode == "prefill"))
+            g = lower_transformer(arch, mode="decode")
+        else:
+            g = lower_transformer(arch, last_only=(mode == "prefill"))
+        if fuse:
+            g, sc = passes_lib.fuse_projections(g, sc)
+            g, sc = passes_lib.fuse_epilogues(g, sc)
+        return g, sc
 
     if scales is None:
         key = ProgramKey(arch, None, None, variant)
         return _dynamic_cache.get_or_compile(
-            key, lambda: _finish_program(lower(), arch, None,
+            key, lambda: _finish_program(lower()[0], arch, None,
                                          scheduled, policy, kind))
-    return _finish_program(lower(), arch, scales, scheduled, policy, kind,
+    g, scales = lower(scales)
+    return _finish_program(g, arch, scales, scheduled, policy, kind,
                            granularity=granularity)
 
 
@@ -489,8 +507,20 @@ def _execute_dynamic(program: Program, params, images, eng: EngineConfig,
             return jnp.concatenate([vals[i] for i in n.inputs], axis=-1)
         if isinstance(n, LinearOp):
             w, b = get_param(params, n.w), get_param(params, n.b)
+            ep = n.epilogue
+            if ep is not None and ep.add:
+                return ops.linear_ep(vals[n.inputs[0]], w, b, n.act, ep,
+                                     vals[n.inputs[-1]], eng,
+                                     out_dtype=jnp.float32)
             return ops.linear(vals[n.inputs[0]], w, b, n.act, eng,
                               out_dtype=jnp.float32)
+        if isinstance(n, LinearGroupOp):
+            ws = [get_param(params, w) for w in n.ws]
+            bs = [get_param(params, b) for b in n.bs]
+            return ops.linear_group(vals[n.inputs[0]], ws, bs, n.acts, eng,
+                                    out_dtype=jnp.float32)
+        if isinstance(n, ViewOp):
+            return vals[n.inputs[0]][n.index]
         if isinstance(n, EmbedOp):
             return _embed_eval(n, vals[n.inputs[0]], params)
         if isinstance(n, NormOp):
@@ -517,12 +547,13 @@ def _execute_dynamic(program: Program, params, images, eng: EngineConfig,
 # Static mode (calibrated end-to-end int8 dataflow)
 # ---------------------------------------------------------------------------
 
-def _require_qtensor(w, n: OpNode):
-    if not isinstance(w, QTensor):
+def _require_qtensor(w, n: OpNode, path=None):
+    if not isinstance(w, (QTensor, Q4Tensor)):
         raise ValueError(
-            f"static program: {type(n).__name__} #{n.id} expects int8 "
-            f"QTensor weights at {n.w}; quantize params with "
-            "core.engine.quantize_params first")
+            f"static program: {type(n).__name__} #{n.id} expects quantized "
+            f"(QTensor / Q4Tensor) weights at "
+            f"{path if path is not None else getattr(n, 'w', None)}; "
+            "quantize params with core.engine.quantize_params first")
     return w
 
 
@@ -626,9 +657,27 @@ def _execute_static(program: Program, params, images,
             w = _require_qtensor(get_param(params, n.w), n)
             b = get_param(params, n.b)
             x = vals[n.inputs[0]]
-            r = ops.linear(x, w, b, n.act, eng, out_dtype=jnp.float32,
-                           out_scale=os)
+            ep = n.epilogue
+            if ep is not None and ep.add:
+                res, res_s = _scaled(vals[n.inputs[-1]])
+                r = ops.linear_ep(x, w, b, n.act, ep, res, eng,
+                                  res_scale=res_s, out_scale=os,
+                                  out_dtype=jnp.float32)
+            else:
+                r = ops.linear(x, w, b, n.act, eng, out_dtype=jnp.float32,
+                               out_scale=os)
             return QTensor(r, os) if os is not None else r
+        if isinstance(n, LinearGroupOp):
+            ws = [_require_qtensor(get_param(params, p), n, p)
+                  for p in n.ws]
+            bs = [get_param(params, b) for b in n.bs]
+            # One launch, tuple value; member edges stay f32 (their
+            # consumers -- attention, the gate product -- are float-domain
+            # MISC ops, so the views never requantize).
+            return ops.linear_group(vals[n.inputs[0]], ws, bs, n.acts, eng,
+                                    out_dtype=jnp.float32)
+        if isinstance(n, ViewOp):
+            return vals[n.inputs[0]][n.index]
         if isinstance(n, EmbedOp):
             return _q_or_raw(_embed_eval(n, _raw(vals[n.inputs[0]]),
                                          params), n, os)

@@ -20,7 +20,11 @@ Node kinds and the engine that executes them:
   AddOp     -> MISC core (residual add + NL epilogue)
   PoolOp    -> MISC core ("max" | "avg" | "global")
   ConcatOp  -> bank interleave (channel concat; free at the memory level)
-  LinearOp  -> Conv PE (classifier head / LM projection GEMM)
+  LinearOp  -> Conv PE (classifier head / LM projection GEMM; may carry a
+               fused residual-add `Epilogue` after passes.fuse_epilogues)
+  LinearGroupOp -> Conv PE (one launch, several output operands: the fused
+               Q/K/V and gate/up projection groups of passes.fuse_projections)
+  ViewOp    -> memory level (selects one member of a LinearGroupOp's tuple)
   MulOp     -> MISC core (elementwise gate, SwiGLU/GeGLU)
   NormOp    -> MISC core (RMS norm + requant epilogue)
   AttnOp    -> MISC core (RoPE + online-softmax attention between GEMMs)
@@ -142,9 +146,41 @@ class ConcatOp(OpNode):
 
 @dataclass(frozen=True)
 class LinearOp(OpNode):
+    """Projection / classifier GEMM on the Conv PE.  `epilogue` (from
+    passes.fuse_epilogues) absorbs a residual-add tail -- the MISC add after
+    an O/down projection rides the GEMM launch; pool tails never attach to
+    LinearOps (LM graphs have none)."""
     w: ParamPath = ()
     b: Optional[ParamPath] = None
     act: str = "none"
+    epilogue: Optional[Epilogue] = None
+
+
+@dataclass(frozen=True)
+class LinearGroupOp(OpNode):
+    """A fused multi-output projection group: several LinearOps that share
+    one input (Q/K/V, gate/up) collapsed by passes.fuse_projections into ONE
+    Conv PE launch with one output operand per member (the XEGEMM
+    hgemm_qkv_wint4 idiom: the activation row is read and quantized once,
+    all member columns MAC in the same grid).
+
+    The node's value is a TUPLE of member outputs, ordered like `ws`; each
+    member's consumers read it through a ViewOp (a memory-level alias, free
+    like ConcatOp).  Per-member bias paths use None for members without a
+    bias; `acts` carries each member's activation.
+    """
+    ws: Tuple[ParamPath, ...] = ()
+    bs: Tuple[Optional[ParamPath], ...] = ()
+    acts: Tuple[str, ...] = ()
+
+
+@dataclass(frozen=True)
+class ViewOp(OpNode):
+    """Selects member `index` of a LinearGroupOp's output tuple.  Purely a
+    memory-level alias (no engine launch, excluded from launch counts);
+    exists so downstream nodes keep single-edge inputs and the
+    node-id == edge-id invariant survives multi-output fusion."""
+    index: int = 0
 
 
 # --- LM (transformer prefill) op kinds --------------------------------------

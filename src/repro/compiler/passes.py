@@ -51,8 +51,9 @@ from typing import Dict, List, Optional, Tuple
 import jax.numpy as jnp
 
 from repro.compiler.graph import (AddOp, AttnOp, ConcatOp, ConvOp, DwcOp,
-                                  EmbedOp, Epilogue, Graph, InputOp, LinearOp,
-                                  MulOp, NormOp, PoolOp, get_param)
+                                  EmbedOp, Epilogue, Graph, InputOp,
+                                  LinearGroupOp, LinearOp, MulOp, NormOp,
+                                  PoolOp, ViewOp, get_param)
 from repro.core.quant import QTensor
 
 _MIN_SCALE = 1e-8
@@ -60,13 +61,18 @@ _MIN_SCALE = 1e-8
 # Which op kinds can emit int8 from their engine epilogue, and which consume
 # int8 natively.  CNN kinds do both (the historical all-int8 dataflow); the
 # LM float-domain ops (norm input, attention math, the gate product inputs,
-# the logits head) keep f32 operands on the MISC core.
+# the logits head) keep f32 operands on the MISC core.  A LinearGroupOp
+# consumes its shared input int8 like the member GEMMs it replaces, but its
+# output is a TUPLE of member values read through ViewOps -- the members'
+# consumers (attention, the gate product) are float-domain, so neither the
+# group nor its views emit int8.
 _INT8_EMIT = (InputOp, ConvOp, DwcOp, AddOp, PoolOp, ConcatOp, LinearOp,
               NormOp, AttnOp, MulOp)
-_INT8_CONSUME = (ConvOp, DwcOp, LinearOp, AddOp, PoolOp, ConcatOp)
+_INT8_CONSUME = (ConvOp, DwcOp, LinearOp, LinearGroupOp, AddOp, PoolOp,
+                 ConcatOp)
 # The quantized-GEMM engines: an f32 edge into one of these is a "roundtrip"
 # (the engine would have to re-quantize dynamically per call).
-_GEMM_OPS = (ConvOp, DwcOp, LinearOp)
+_GEMM_OPS = (ConvOp, DwcOp, LinearOp, LinearGroupOp)
 
 
 @dataclass(frozen=True)
@@ -228,6 +234,10 @@ def fuse_epilogues(graph: Graph, scales: Optional[Dict[int, object]] = None):
                                             node's LAST input edge)
       Conv/Dwc -> Pool(avg|global|max)     (pool tail)
       Conv/Dwc -> Add -> Pool(...)         (both)
+      Linear   -> Add                      (LM residual adds after the O /
+                                            down projections ride the Conv
+                                            PE GEMM; pool tails never
+                                            attach to a LinearOp)
 
     The fused node sits at the position of the chain's LAST op (so the
     residual operand, which may be lowered after the conv -- a bottleneck's
@@ -255,7 +265,8 @@ def fuse_epilogues(graph: Graph, scales: Optional[Dict[int, object]] = None):
     chains: Dict[int, Tuple] = {}
     absorbed: Dict[int, int] = {}        # interior old id -> chain end id
     for n in graph.nodes:
-        if not isinstance(n, (ConvOp, DwcOp)) or n.epilogue is not None:
+        if (not isinstance(n, (ConvOp, DwcOp, LinearOp))
+                or n.epilogue is not None):
             continue
         if n.id == graph.output or n.id in absorbed:
             continue
@@ -271,9 +282,11 @@ def fuse_epilogues(graph: Graph, scales: Optional[Dict[int, object]] = None):
             res_id = c.inputs[1] if c.inputs[0] == n.id else c.inputs[0]
             p = sole_consumer(c.id)
             if (isinstance(p, PoolOp) and p.pool in _FUSABLE_POOLS
-                    and p.id not in chains):
+                    and p.id not in chains
+                    and not isinstance(n, LinearOp)):
                 pool_id, end = p.id, p
-        elif isinstance(c, PoolOp) and c.pool in _FUSABLE_POOLS:
+        elif (isinstance(c, PoolOp) and c.pool in _FUSABLE_POOLS
+                and not isinstance(n, LinearOp)):
             pool_id, end = c.id, c
         else:
             continue
@@ -330,12 +343,99 @@ def fuse_epilogues(graph: Graph, scales: Optional[Dict[int, object]] = None):
     return fused, new_scales
 
 
+def fuse_projections(graph: Graph,
+                     scales: Optional[Dict[int, object]] = None):
+    """Collapse same-input LinearOp fan-outs into multi-output groups.
+
+    The Q/K/V projections of an attention block (and the gate/up pair of a
+    gated MLP) read the SAME normed activation row and differ only in their
+    weight columns.  This pass rewrites each such fan-out -- member
+    LinearOps sharing one input edge, each consumed solely by one AttnOp /
+    MulOp -- into a single LinearGroupOp (one Conv PE launch with one output
+    operand per member; the XEGEMM `hgemm_qkv_wint4(q, out0, out1, out2,
+    ...)` dispatch) plus per-member ViewOps so downstream nodes keep
+    single-value input edges.  3 launches become 1 for QKV, 2 become 1 for
+    gate/up; the shared activation is quantized and streamed once.
+
+    `scales` (per-edge calibration, keyed by the unfused ids) remap to the
+    new ids: each ViewOp inherits its member's edge scale and the group node
+    carries its first member's (the group's tuple output is never requantized
+    as a whole -- member edges keep their own calibration).  Like
+    fuse_epilogues, the rewrite is deterministic, so the full and decode
+    graphs (identical node sequences) fuse identically and calibration
+    transfer by node id survives.
+
+    Returns (fused_graph, remapped_scales) -- scales is None when not given.
+    """
+    consumers = graph.consumers()
+    groups: List[Tuple[int, ...]] = []
+    grouped = set()
+    for n in graph.nodes:
+        if isinstance(n, AttnOp):
+            members = n.inputs[:3]
+        elif isinstance(n, MulOp) and len(n.inputs) == 2:
+            members = n.inputs
+        else:
+            continue
+        if len(set(members)) != len(members):
+            continue
+        if not all(isinstance(graph.nodes[m], LinearOp)
+                   and graph.nodes[m].epilogue is None
+                   and len(consumers[m]) == 1
+                   and m not in grouped for m in members):
+            continue
+        shared = {graph.nodes[m].inputs for m in members}
+        if len(shared) != 1 or len(next(iter(shared))) != 1:
+            continue
+        groups.append(tuple(members))
+        grouped.update(members)
+
+    if not groups:
+        return graph, scales
+
+    first_of = {min(g): g for g in groups}
+    member_of = {m: g for g in groups for m in g}
+    new_nodes: List = []
+    new_id: Dict[int, int] = {}
+    new_scales: Optional[Dict[int, object]] = {} if scales is not None else None
+    for n in graph.nodes:
+        if n.id in member_of:
+            if n.id not in first_of:
+                continue        # re-emitted as a view at the first member
+            g = first_of[n.id]
+            mems = [graph.nodes[m] for m in g]
+            gid = len(new_nodes)
+            new_nodes.append(LinearGroupOp(
+                id=gid, inputs=tuple(new_id[i] for i in mems[0].inputs),
+                ws=tuple(m.w for m in mems),
+                bs=tuple(m.b for m in mems),
+                acts=tuple(m.act for m in mems)))
+            if new_scales is not None:
+                new_scales[gid] = scales[g[0]]
+            for idx, m in enumerate(g):
+                vid = len(new_nodes)
+                new_nodes.append(ViewOp(id=vid, inputs=(gid,), index=idx))
+                new_id[m] = vid
+                if new_scales is not None:
+                    new_scales[vid] = scales[m]
+            continue
+        nid = len(new_nodes)
+        new_nodes.append(dataclasses.replace(
+            n, id=nid, inputs=tuple(new_id[i] for i in n.inputs)))
+        new_id[n.id] = nid
+        if new_scales is not None:
+            new_scales[nid] = scales[n.id]
+    fused = Graph(tuple(new_nodes), output=new_id[graph.output],
+                  name=graph.name)
+    return fused, new_scales
+
+
 def launch_count(graph: Graph) -> int:
     """Engine kernel dispatches one execution of the graph issues.  Memory-
-    level ops (input DMA, bank-interleave concat, embedding row gather) ride
-    the load path, not a PE launch."""
+    level ops (input DMA, bank-interleave concat, embedding row gather, a
+    group member view) ride the load path, not a PE launch."""
     return sum(1 for n in graph.nodes
-               if not isinstance(n, (InputOp, ConcatOp, EmbedOp)))
+               if not isinstance(n, (InputOp, ConcatOp, EmbedOp, ViewOp)))
 
 
 # ---------------------------------------------------------------------------
@@ -371,6 +471,9 @@ def fusion_stats(graph: Graph) -> Dict[str, int]:
         "fused_ops": len(fused),
         "fused_adds": sum(1 for e in fused if e.add),
         "fused_pools": sum(1 for e in fused if e.pool != "none"),
+        "fused_projections": graph.count(LinearGroupOp),
+        "projection_members": sum(len(n.ws) for n in graph.nodes
+                                  if isinstance(n, LinearGroupOp)),
         "launches": launch_count(graph),
         # intermediate tensors one execution writes to memory (every
         # consumed edge; the fused graph writes fewer)
@@ -394,7 +497,14 @@ def f32_roundtrip_edges(graph: Graph, plan: QuantPlan
     for n in graph.nodes:
         if not isinstance(n, _GEMM_OPS):
             continue
-        for p in n.inputs:
+        ins = n.inputs
+        ep = getattr(n, "epilogue", None)
+        if ep is not None and ep.add:
+            # the fused residual operand (last input) is MISC-side chain
+            # math, not a GEMM operand -- an f32 residual stream is not a
+            # roundtrip (the unfused AddOp consumed it f32 too)
+            ins = ins[:-1]
+        for p in ins:
             if not plan.emit_int8.get(p, False) and not isinstance(
                     graph.nodes[p], InputOp):
                 bad.append((p, n.id))

@@ -29,8 +29,10 @@ width.  All policies produce valid levelings with identical results (the
 parity suite pins that); per-level engine occupancy (engine_occupancy) is
 the comparison metric the serving benchmark reports.
 
-LM graphs level through the same pass: the three QKV projections of a block
-co-level on the Conv PE, and the gate/up GEMMs of a SwiGLU pair do too.
+LM graphs level through the same pass: on an unfused graph the three QKV
+projections of a block co-level on the Conv PE (and the gate/up GEMMs of a
+SwiGLU pair do too); after passes.fuse_projections each group is ONE
+Conv PE launch followed by free memory-level views.
 """
 from __future__ import annotations
 
@@ -38,8 +40,9 @@ from dataclasses import dataclass, field
 from typing import Dict, Iterable, Tuple
 
 from repro.compiler.graph import (AddOp, AttnOp, ConcatOp, ConvOp, DwcOp,
-                                  EmbedOp, Graph, HeadOp, InputOp, LinearOp,
-                                  MulOp, NormOp, OpNode, PoolOp)
+                                  EmbedOp, Graph, HeadOp, InputOp,
+                                  LinearGroupOp, LinearOp, MulOp, NormOp,
+                                  OpNode, PoolOp, ViewOp)
 
 # The engine units of the fabric.  Ops mapped to different units in the same
 # level model truly concurrent hardware (distinct datapaths); two same-unit
@@ -57,13 +60,13 @@ def engine_unit(node: OpNode) -> str:
     """Which engine executes a node (graph.py's kind -> engine mapping)."""
     if isinstance(node, ConvOp):
         return LOW_CHANNEL if node.first_layer else CONV_PE
-    if isinstance(node, (LinearOp, HeadOp)):
+    if isinstance(node, (LinearOp, LinearGroupOp, HeadOp)):
         return CONV_PE                     # classifier-head / LM GEMMs
     if isinstance(node, DwcOp):
         return DWC_PE
     if isinstance(node, (AddOp, PoolOp, NormOp, MulOp, AttnOp)):
         return MISC                        # non-conv operators (paper III)
-    if isinstance(node, (InputOp, ConcatOp, EmbedOp)):
+    if isinstance(node, (InputOp, ConcatOp, EmbedOp, ViewOp)):
         return MEM                         # load / interleave / row gather
     raise TypeError(f"unknown op {type(node).__name__}")
 

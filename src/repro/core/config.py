@@ -178,7 +178,14 @@ class EngineConfig:
     #   none -> bf16/f32 math (training path)
     #   w8   -> int8 weights, bf16 activations (weight-only)
     #   w8a8 -> int8 x int8 -> int32 (the paper's mode)
+    #   w4a8 -> w8a8 everywhere, except LM projection weights pack to
+    #           per-group int4 (Q4Tensor) dequantized in-register by the
+    #           Conv-PE GEMM -- the weight-bandwidth decode mode
     quant: str = "none"
+    # Rows per (scale, zero) group along K for w4a8 packing.  Lives here so
+    # it keys ProgramCache entries (EngineConfig is part of ProgramKey):
+    # w4/w8 programs -- and different group sizes -- never collide.
+    w4_group_size: int = 64
     # Kernel backend: "ref" = pure-jnp oracle path (also the dry-run path:
     # XLA-TPU fuses the same epilogues), "pallas" = Pallas TPU kernels.
     backend: str = "ref"

@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.config import EngineConfig
-from repro.core.quant import QTensor, quantize
+from repro.core.quant import (Q4Tensor, QTensor, pack_int4, quantize,
+                              snap_group_size)
 from repro.models.params import ParamSpec, is_spec
 
 # Param-dict keys that route through ops.linear and therefore quantize.
@@ -25,6 +26,21 @@ QUANT_KEYS = frozenset({
     # squeeze-expand / classifier head -- the engine-program weights.
     "stem_w", "w", "w1", "w2", "w3", "wskip", "we", "wp", "ws", "head_w",
 })
+
+# LM projection weights: the weight-bandwidth-bound decode GEMMs that pack
+# to int4 under quant="w4a8" (embed/head and everything else stay int8).
+W4_KEYS = frozenset({"wq", "wk", "wv", "wo", "wg", "wu", "wd"})
+
+
+def weight_mode(eng: EngineConfig) -> str:
+    """Digest tag for the weight container layout ("" for w8/w8a8/none).
+
+    Folded into the calibration id (serve/base.calibration_digest) so w4 and
+    w8 programs of one model never collide in the ProgramCache even if the
+    EngineConfig were equal otherwise."""
+    if eng.quant == "w4a8":
+        return f"w4g{eng.w4_group_size}"
+    return ""
 
 
 # ---------------------------------------------------------------------------
@@ -51,6 +67,12 @@ def w8_engine(**kw) -> EngineConfig:
     return EngineConfig(quant="w8", backend="ref", **kw)
 
 
+def w4_engine(backend: str = "ref", **kw) -> EngineConfig:
+    """Int4 weight-only LM projections over the w8a8 fabric (XEGEMM_INT4
+    idiom): packed weights dequantize in-register on the Conv PE."""
+    return EngineConfig(quant="w4a8", backend=backend, **kw)
+
+
 # ---------------------------------------------------------------------------
 # Param-tree quantization (values and schemas)
 # ---------------------------------------------------------------------------
@@ -69,19 +91,34 @@ def _scale_spec(spec: ParamSpec, axis: int) -> ParamSpec:
 def _walk(tree, fn, key=None):
     if isinstance(tree, dict):
         return {k: _walk(v, fn, k) for k, v in tree.items()}
+    if isinstance(tree, (QTensor, Q4Tensor)):
+        return fn(key, tree)            # quantized container: one leaf
     if isinstance(tree, (list, tuple)):
         t = [_walk(v, fn, key) for v in tree]
         return type(tree)(t) if not isinstance(tree, tuple) else tuple(t)
     return fn(key, tree)
 
 
+def _packs_int4(eng: EngineConfig, key: str, ndim: int) -> bool:
+    return eng.quant == "w4a8" and key in W4_KEYS and ndim == 2
+
+
 def quantize_schema(schema, eng: EngineConfig):
-    """ParamSpec tree -> tree where quantized leaves become QTensor nodes."""
+    """ParamSpec tree -> tree where quantized leaves become QTensor nodes
+    (Q4Tensor nodes for w4a8 LM projections)."""
     if eng.quant == "none":
         return schema
 
     def fn(key, leaf):
         if (is_spec(leaf) and key in QUANT_KEYS and len(leaf.shape) >= 2):
+            if _packs_int4(eng, key, len(leaf.shape)):
+                k, n = leaf.shape
+                g = k // snap_group_size(k, eng.w4_group_size)
+                mk = lambda shape, dtype: ParamSpec(      # noqa: E731
+                    shape, (None,) * len(shape), "ones", dtype)
+                return Q4Tensor(packed=mk((k // 2, n), jnp.uint8),
+                                scale=mk((g, n), jnp.float16),
+                                zero=mk((g, n), jnp.float16))
             ax = _quant_axis(key, len(leaf.shape))
             return QTensor(
                 q=dataclasses.replace(leaf, init="small", dtype=jnp.int8),
@@ -99,6 +136,8 @@ def quantize_params(params, eng: EngineConfig):
     def fn(key, leaf):
         if (key in QUANT_KEYS and hasattr(leaf, "ndim") and leaf.ndim >= 2
                 and jnp.issubdtype(leaf.dtype, jnp.floating)):
+            if _packs_int4(eng, key, leaf.ndim):
+                return pack_int4(leaf, eng.w4_group_size)
             return quantize(leaf, axis=_quant_axis(key, leaf.ndim))
         return leaf
 

@@ -7,18 +7,24 @@ DPU (Section III-A).  We implement the TPU-side equivalent:
   * per-tensor (static, calibrated) or per-token (dynamic) activation
     quantization,
   * int32 accumulation with a fused dequant -> bias -> activation -> requant
-    epilogue (the NL core's job, Section IV-B2).
+    epilogue (the NL core's job, Section IV-B2),
+  * per-group asymmetric int4 weight-only packing (`Q4Tensor`) for the
+    weight-bandwidth-bound LM decode GEMMs: two nibbles per byte along the
+    reduction dim, one (scale, zero) pair per `group_size` rows per output
+    channel, dequantized in-register by the Conv-PE kernel.
 
 All functions are jit-safe and shard-transparent (elementwise + reductions).
 """
 from __future__ import annotations
 
+import math
 from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 INT8_MAX = 127.0
+INT4_LEVELS = 15.0                  # asymmetric codes in [0, 15]
 
 
 class QTensor(NamedTuple):
@@ -32,6 +38,96 @@ class QTensor(NamedTuple):
 
     def dequant(self, dtype=jnp.float32) -> jax.Array:
         return (self.q.astype(jnp.float32) * self.scale).astype(dtype)
+
+
+class Q4Tensor(NamedTuple):
+    """An int4 weight-only packed tensor (XEGEMM_INT4-style).
+
+    Two 4-bit codes per byte along the reduction dim K (row 2i in the low
+    nibble of byte-row i, row 2i+1 in the high nibble), with one asymmetric
+    (scale, zero) pair per `group_size` K-rows per output column:
+
+        w[k, n] = code[k, n] * scale[k // gs, n] + zero[k // gs, n]
+
+    All fields are arrays, so the container is a plain jax pytree (jit /
+    device_put / sharding transparent); the group size is derived from the
+    shapes, which keeps it static under tracing.
+    """
+    packed: jax.Array     # uint8 [K // 2, N], two codes per byte
+    scale: jax.Array      # f16 [K // gs, N]
+    zero: jax.Array       # f16 [K // gs, N]
+
+    @property
+    def shape(self):
+        return (2 * self.packed.shape[0],) + self.packed.shape[1:]
+
+    @property
+    def group_size(self) -> int:
+        return (2 * self.packed.shape[0]) // self.scale.shape[0]
+
+    def dequant(self, dtype=jnp.float32) -> jax.Array:
+        k, n = self.shape
+        g = self.scale.shape[0]
+        codes = unpack_int4(self.packed).reshape(g, k // g, n)
+        w = (codes.astype(jnp.float32) * self.scale.astype(jnp.float32)[:, None]
+             + self.zero.astype(jnp.float32)[:, None])
+        return w.reshape(k, n).astype(dtype)
+
+
+def snap_group_size(k: int, group_size: int) -> int:
+    """Largest divisor of K that is <= group_size and even (nibble pairs
+    never straddle a group boundary).  K must be even."""
+    if k % 2:
+        raise ValueError(f"int4 packing needs an even reduction dim, got {k}")
+    gs = math.gcd(int(group_size), k)
+    if gs % 2:
+        gs = math.gcd(2 * gs, k)    # K even => this lands on an even divisor
+    return gs
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    """[K//2, N] packed bytes -> [K, N] int32 codes in [0, 15]."""
+    low = (packed & 0xF).astype(jnp.int32)
+    high = (packed >> 4).astype(jnp.int32)
+    k2, n = packed.shape
+    return jnp.stack([low, high], axis=1).reshape(2 * k2, n)
+
+
+def pack_int4(w: jax.Array, group_size: int = 64) -> Q4Tensor:
+    """Per-group asymmetric int4 packing of a [K, N] GEMM weight.
+
+    scale = (max - min) / 15 and zero = min per (group, column), so the
+    codes span the full [0, 15] range of each group.  Scales and zeros are
+    stored f16 -- with the default group of 64 that prices the container at
+    ~0.55x of the int8 + per-channel-scale layout.
+    """
+    if w.ndim != 2:
+        raise ValueError(f"pack_int4 expects a 2-D GEMM weight, got {w.shape}")
+    k, n = w.shape
+    gs = snap_group_size(k, group_size)
+    g = k // gs
+    wg = w.astype(jnp.float32).reshape(g, gs, n)
+    lo = jnp.min(wg, axis=1)
+    hi = jnp.max(wg, axis=1)
+    # Round scale/zero to their stored f16 values BEFORE coding, so the codes
+    # minimize error against exactly what dequant will multiply/add.
+    scale = jnp.maximum(((hi - lo) / INT4_LEVELS).astype(jnp.float16),
+                        jnp.float16(1e-6))
+    zero = lo.astype(jnp.float16)
+    s32 = scale.astype(jnp.float32)[:, None]
+    z32 = zero.astype(jnp.float32)[:, None]
+    codes = jnp.clip(jnp.round((wg - z32) / s32), 0, 15)
+    codes = codes.reshape(k, n).astype(jnp.uint8)
+    packed = (codes[0::2] | (codes[1::2] << 4)).astype(jnp.uint8)
+    return Q4Tensor(packed, scale, zero)
+
+
+def container_nbytes(w) -> int:
+    """Weight-container bytes as shipped to the PE (QTensor / Q4Tensor /
+    raw array)."""
+    if isinstance(w, (QTensor, Q4Tensor)):
+        return sum(int(a.size) * a.dtype.itemsize for a in w)
+    return int(w.size) * w.dtype.itemsize
 
 
 def _absmax(x: jax.Array, axis, keepdims=True) -> jax.Array:

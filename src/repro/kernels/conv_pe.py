@@ -177,6 +177,132 @@ def matmul_int8_fused(a_q: jax.Array, b_q: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Int4 weight-only variant (XEGEMM_INT4 idiom): the weight operand streams
+# PACKED (two nibbles per byte along K, per-group scale + zero), halving the
+# GEMM's weight bytes; the kernel unpacks and dequantizes IN-REGISTER.  The
+# per-group int32 partial sums stay exact (ref.int4_group_dot is the value
+# oracle); one combine + NL epilogue per (bm, bn) block.  K is not gridded:
+# the decode GEMMs this path serves have small reduction dims, and a whole-K
+# block keeps the group reduction inside one kernel instance.
+# ---------------------------------------------------------------------------
+
+def _kernel_w4(a_ref, b_ref, wsc_ref, wz_ref, a_scale_ref, bias_ref, os_ref,
+               o_ref, *, act: str, has_bias: bool,
+               out_scale: Optional[float], vector_os: bool):
+    from repro.core.quant import unpack_int4
+    from repro.kernels.ref import int4_group_dot
+
+    codes = unpack_int4(b_ref[...])                     # [K, bn] in-register
+    x = int4_group_dot(a_ref[...], codes, wsc_ref[...], wz_ref[...])
+    x = x * a_scale_ref[...]
+    if has_bias:
+        x = x + bias_ref[...]
+    x = act_fn(act)(x)
+    if vector_os:
+        x = jnp.clip(jnp.round(x / os_ref[...]), -127, 127)
+    elif out_scale is not None:
+        x = jnp.clip(jnp.round(x / out_scale), -127, 127)
+    o_ref[...] = x.astype(o_ref.dtype)
+
+
+def _kernel_w4_res(a_ref, b_ref, wsc_ref, wz_ref, a_scale_ref, bias_ref,
+                   os_ref, r_ref, o_ref, *, act: str, has_bias: bool,
+                   out_scale: Optional[float], vector_os: bool,
+                   mid_scale: Optional[float], res_scale: float,
+                   add_act: str):
+    """Residual-epilogue variant: the absorbed MISC add after an O/down
+    projection rides the same in-register-dequant launch."""
+    from repro.core.quant import unpack_int4
+    from repro.kernels.ref import int4_group_dot
+
+    codes = unpack_int4(b_ref[...])
+    x = int4_group_dot(a_ref[...], codes, wsc_ref[...], wz_ref[...])
+    x = x * a_scale_ref[...]
+    if has_bias:
+        x = x + bias_ref[...]
+    x = act_fn(act)(x)
+    if mid_scale is not None:
+        x = jnp.clip(jnp.round(x / mid_scale), -127.0, 127.0) * mid_scale
+    x = x + r_ref[...].astype(jnp.float32) * res_scale
+    x = act_fn(add_act)(x)
+    if vector_os:
+        x = jnp.clip(jnp.round(x / os_ref[...]), -127, 127)
+    elif out_scale is not None:
+        x = jnp.clip(jnp.round(x / out_scale), -127, 127)
+    o_ref[...] = x.astype(o_ref.dtype)
+
+
+def matmul_int4_fused(a_q: jax.Array, b_packed: jax.Array,
+                      a_scale: jax.Array, w_scale: jax.Array,
+                      w_zero: jax.Array,
+                      bias: Optional[jax.Array] = None,
+                      act: str = "none",
+                      out_scale=None,
+                      out_dtype=jnp.float32,
+                      *,
+                      residual: Optional[jax.Array] = None,
+                      res_scale: float = 1.0,
+                      mid_scale: Optional[float] = None,
+                      add_act: str = "none",
+                      bm: int = 128, bn: int = 128,
+                      interpret: bool = False) -> jax.Array:
+    """Fused int4 weight-only GEMM: a_q [M, K] int8 x b_packed [K//2, N]
+    uint8 nibble pairs, w_scale/w_zero [G, N] per-group (K = G * gs).
+    M and N must be multiples of the block shapes (kernels/ops.py pads);
+    the group dim pads in whole groups with zero scale/zero.  Epilogue and
+    residual contract match matmul_int8_fused.
+    """
+    m, kdim = a_q.shape
+    k2, n = b_packed.shape
+    g = w_scale.shape[0]
+    assert kdim == 2 * k2 and kdim % g == 0, (kdim, k2, g)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    has_bias = bias is not None
+    bias2d = (bias.reshape(1, n).astype(jnp.float32) if has_bias
+              else jnp.zeros((1, n), jnp.float32))
+    vector_os = out_scale is not None and not isinstance(
+        out_scale, (int, float))
+    os2d = (jnp.asarray(out_scale, jnp.float32).reshape(1, n) if vector_os
+            else jnp.ones((1, n), jnp.float32))
+    odt = jnp.int8 if out_scale is not None else out_dtype
+
+    grid = (m // bm, n // bn)
+    in_specs = [
+        pl.BlockSpec((bm, kdim), lambda i, j: (i, 0)),        # A (whole K)
+        pl.BlockSpec((k2, bn), lambda i, j: (0, j)),          # B packed
+        pl.BlockSpec((g, bn), lambda i, j: (0, j)),           # group scales
+        pl.BlockSpec((g, bn), lambda i, j: (0, j)),           # group zeros
+        pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),           # a_scale
+        pl.BlockSpec((1, bn), lambda i, j: (0, j)),           # bias
+        pl.BlockSpec((1, bn), lambda i, j: (0, j)),           # out_scale
+    ]
+    operands = [a_q, b_packed, w_scale, w_zero,
+                a_scale.astype(jnp.float32).reshape(m, 1), bias2d, os2d]
+    if residual is None:
+        kernel = functools.partial(
+            _kernel_w4, act=act, has_bias=has_bias,
+            out_scale=None if vector_os else out_scale, vector_os=vector_os)
+    else:
+        assert residual.shape == (m, n), (residual.shape, m, n)
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j: (i, j)))
+        operands.append(residual)
+        kernel = functools.partial(
+            _kernel_w4_res, act=act, has_bias=has_bias,
+            out_scale=None if vector_os else out_scale, vector_os=vector_os,
+            mid_scale=mid_scale, res_scale=res_scale, add_act=add_act)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), odt),
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(*operands)
+
+
+# ---------------------------------------------------------------------------
 # Pooled-epilogue variant: per-image M blocking so the absorbed avg/global/
 # max pool tail accumulates in-kernel (the GAP tail never materializes the
 # pre-pool feature map)

@@ -20,8 +20,13 @@ import jax.numpy as jnp
 
 from repro.core import dse
 from repro.core.config import EngineConfig
-from repro.core.quant import QTensor, quantize_act_dynamic, quantize_static
+from repro.core.quant import (Q4Tensor, QTensor, quantize_act_dynamic,
+                              quantize_static)
 from repro.kernels import _epilogue, conv_pe, dwc_pe, low_channel, misc_pe, ref
+
+# Quant modes with int8 activations on the Conv PE fabric (w4a8 packs LM
+# projection *weights* to int4; everything else runs exactly like w8a8).
+_INT8_ACTS = ("w8a8", "w4a8")
 
 
 def _round_up(x: int, m: int) -> int:
@@ -133,6 +138,71 @@ def linear_int8(x, w: QTensor, bias: Optional[jax.Array],
     return out.reshape(*lead, n)
 
 
+def linear_w4(x, w: Q4Tensor, bias: Optional[jax.Array],
+              act: str, cfg: EngineConfig,
+              out_dtype=jnp.float32,
+              out_scale=None,
+              residual: Optional[jax.Array] = None,
+              res_scale: float = 1.0,
+              mid_scale: Optional[float] = None,
+              add_act: str = "none") -> jax.Array:
+    """Int4 weight-only GEMM over int8 activations (quant='w4a8').
+
+    x: float [..., K] (dynamic per-token act quant) OR QTensor with a static
+    pre-calibrated per-tensor scale; w: Q4Tensor (packed [K//2, N] nibble
+    pairs + per-group f16 scale/zero).  The Pallas kernel unpacks and
+    dequantizes the weight block in-register (XEGEMM_INT4 idiom); K is never
+    padded -- the kernel runs whole-K blocks so per-group partial sums stay
+    exact and bitwise-match the ref oracle.  Epilogue contract (out_scale /
+    residual / mid_scale / add_act) matches linear_int8.
+    """
+    static = isinstance(x, QTensor)
+    xv = x.q if static else x
+    lead = xv.shape[:-1]
+    kdim = xv.shape[-1]
+    n = w.packed.shape[-1]
+    if out_scale is not None and not isinstance(out_scale, (int, float)):
+        out_scale = jnp.asarray(out_scale, jnp.float32).reshape(1, n)
+    m = 1
+    for d in lead:
+        m *= d
+    x2 = xv.reshape(m, kdim)
+    if static:
+        xq = QTensor(x2, jnp.full((m, 1), float(x.scale), jnp.float32))
+    else:
+        xq = quantize_act_dynamic(x2, per_token=True)      # a_scale [M, 1]
+
+    if cfg.backend == "pallas" and not cfg.baseline:
+        bm, bn, _ = pick_blocks(m, n, kdim, 1, cfg)
+        mp, np_ = _round_up(m, bm), _round_up(n, bn)
+        aq = _pad2d(xq.q, mp, kdim)                        # pad M only
+        asc = jnp.pad(xq.scale, ((0, mp - m), (0, 0)))
+        # N padding: packed columns pad with zero codes and zero
+        # scale/zero, so padded outputs are exactly 0 and slice off.
+        bq = _pad2d(w.packed, kdim // 2, np_)
+        wsc = jnp.pad(w.scale, ((0, 0), (0, np_ - n)))
+        wz = jnp.pad(w.zero, ((0, 0), (0, np_ - n)))
+        b = (jnp.pad(bias.astype(jnp.float32), (0, np_ - n))
+             if bias is not None else None)
+        osc = out_scale
+        if out_scale is not None and not isinstance(out_scale, (int, float)):
+            osc = jnp.pad(jnp.asarray(out_scale, jnp.float32).reshape(1, n),
+                          ((0, 0), (0, np_ - n)), constant_values=1.0)
+        r = (_pad2d(residual.reshape(m, n), mp, np_)
+             if residual is not None else None)
+        out = conv_pe.matmul_int4_fused(
+            aq, bq, asc, wsc, wz, b, act, out_scale=osc, out_dtype=out_dtype,
+            residual=r, res_scale=res_scale, mid_scale=mid_scale,
+            add_act=add_act, bm=bm, bn=bn,
+            interpret=cfg.interpret)[:m, :n]
+    else:
+        assert residual is None, "fused residual composes in the wrapper"
+        out = ref.matmul_int4_fused(xq.q, w.packed, xq.scale, w.scale, w.zero,
+                                    bias, act, out_scale=out_scale,
+                                    out_dtype=out_dtype)
+    return out.reshape(*lead, n)
+
+
 def linear_w8(x: jax.Array, w: QTensor, bias: Optional[jax.Array],
               act: str, cfg: EngineConfig, out_dtype=jnp.float32) -> jax.Array:
     """Weight-only int8: dequantize weights, bf16 MAC (memory-bound decode)."""
@@ -161,29 +231,115 @@ def linear(x, w, bias, act: str, cfg: EngineConfig,
     """Dispatch on quant mode and weight container type.
 
     x may be a QTensor (pre-quantized int8 activations with a static scale);
-    that path requires w8a8 + QTensor weights.  out_scale (static) requests
-    int8 output via the fused requant epilogue.  residual/res_scale/
-    mid_scale/add_act thread a fused residual epilogue into the int8 kernel
-    (conv2d_pe's pallas path only).
+    that path requires int8-act quant (w8a8/w4a8) + quantized weights.
+    out_scale (static) requests int8 output via the fused requant epilogue.
+    residual/res_scale/mid_scale/add_act thread a fused residual epilogue
+    into the int8/int4 kernel (the pallas paths only).
     """
-    if isinstance(w, QTensor) and cfg.quant == "w8a8":
+    if isinstance(w, Q4Tensor):
+        if cfg.quant != "w4a8":
+            raise ValueError(
+                "Q4Tensor weights require quant='w4a8' (got %r)" % cfg.quant)
+        return linear_w4(x, w, bias, act, cfg,
+                         out_dtype=out_dtype or jnp.float32,
+                         out_scale=out_scale, residual=residual,
+                         res_scale=res_scale, mid_scale=mid_scale,
+                         add_act=add_act)
+    if isinstance(w, QTensor) and cfg.quant in _INT8_ACTS:
         return linear_int8(x, w, bias, act, cfg,
                            out_dtype=out_dtype or jnp.float32,
                            out_scale=out_scale, residual=residual,
                            res_scale=res_scale, mid_scale=mid_scale,
                            add_act=add_act)
     if residual is not None:
-        raise ValueError("fused residual epilogues require quant='w8a8' "
-                         "with QTensor weights")
+        raise ValueError("fused residual epilogues require quant='w8a8'/"
+                         "'w4a8' with quantized weights")
     if isinstance(x, QTensor) or out_scale is not None:
         raise ValueError(
-            "static int8 activations / out_scale require quant='w8a8' "
-            "with QTensor weights (got quant=%r, w=%s)"
+            "static int8 activations / out_scale require quant='w8a8'/'w4a8' "
+            "with quantized weights (got quant=%r, w=%s)"
             % (cfg.quant, type(w).__name__))
     if isinstance(w, QTensor):
         return linear_w8(x, w, bias, act, cfg,
                          out_dtype=out_dtype or x.dtype)
     return linear_f(x, w, bias, act, cfg, out_dtype=out_dtype)
+
+
+def linear_group(x, ws, bs, acts, cfg: EngineConfig,
+                 out_dtype=None):
+    """Fused multi-output projection group (Q/K/V, gate/up): one shared
+    input, member outputs returned as a tuple.
+
+    On the pallas int8/int4 paths the member weights concatenate along N
+    into ONE kernel launch (the XEGEMM ``hgemm_qkv_wint4(q, out0, out1,
+    out2, ...)`` idiom): the activation row is quantized and read once and
+    every member's columns MAC in the same grid.  Column blocks never mix
+    members' reductions, so slicing the fused f32 output is bitwise
+    identical to member-wise launches.  Float / ref / baseline paths compose
+    member-wise -- bit-identical to the unfused graph by construction.
+    """
+    ns = [w.shape[-1] for w in ws]
+    kinds = {type(w) for w in ws}
+    pallas = cfg.backend == "pallas" and not cfg.baseline
+    fused = None
+    if pallas and kinds == {QTensor} and cfg.quant in _INT8_ACTS:
+        fused = QTensor(
+            jnp.concatenate([w.q for w in ws], axis=1),
+            jnp.concatenate([w.scale.reshape(1, -1) for w in ws], axis=1))
+    elif pallas and kinds == {Q4Tensor} and cfg.quant == "w4a8":
+        # Members share K (one input) and the snapped group size, so the
+        # per-group scale/zero tables concatenate along N too.
+        fused = Q4Tensor(
+            jnp.concatenate([w.packed for w in ws], axis=1),
+            jnp.concatenate([w.scale for w in ws], axis=1),
+            jnp.concatenate([w.zero for w in ws], axis=1))
+    if fused is None:
+        return tuple(linear(x, w, b, a, cfg, out_dtype=out_dtype)
+                     for w, b, a in zip(ws, bs, acts))
+    bias = None
+    if any(b is not None for b in bs):
+        bias = jnp.concatenate(
+            [b.astype(jnp.float32) if b is not None
+             else jnp.zeros((nn,), jnp.float32) for b, nn in zip(bs, ns)])
+    out = linear(x, fused, bias, "none", cfg, out_dtype=jnp.float32)
+    outs, off = [], 0
+    for nn, a in zip(ns, acts):
+        y = out[..., off:off + nn]
+        if a != "none":
+            y = ref.act_fn(a)(y)
+        outs.append(y.astype(out_dtype) if out_dtype is not None else y)
+        off += nn
+    return tuple(outs)
+
+
+def linear_ep(x, w, bias, act: str, ep, residual, cfg: EngineConfig, *,
+              res_scale: float = 1.0, out_scale=None,
+              out_dtype=jnp.float32) -> jax.Array:
+    """LinearOp with a fused epilogue: the residual add after an O/down
+    projection rides the Conv PE launch (passes.fuse_epilogues on LM
+    graphs never attaches pool tails to LinearOps).
+
+    Pallas int8/int4 paths stream the residual into the kernel's NL core
+    (ep.mid_scale re-quantizes the GEMM output at its pre-fusion edge
+    scale); ref / baseline / float paths compose the identical chain math
+    on the GEMM output (_epilogue.fused_chain, the bit-exact oracle).
+    """
+    static = isinstance(x, QTensor)
+    quanted = ((isinstance(w, QTensor) and cfg.quant in _INT8_ACTS)
+               or (isinstance(w, Q4Tensor) and cfg.quant == "w4a8"))
+    pallas = (cfg.backend == "pallas" and not cfg.baseline and quanted
+              and ep.pool == "none")
+    if pallas:
+        return linear(x, w, bias, act, cfg, out_dtype=out_dtype,
+                      out_scale=out_scale, residual=residual,
+                      res_scale=res_scale,
+                      mid_scale=(ep.mid_scale if static and ep.mid_scale
+                                 else None),
+                      add_act=ep.add_act)
+    y = linear(x, w, bias, act, cfg, out_dtype=jnp.float32)
+    return _epilogue.fused_chain(
+        y, residual=residual, res_scale=res_scale,
+        **_chain_kwargs(ep, static and quanted, out_scale))
 
 
 # ---------------------------------------------------------------------------
@@ -281,7 +437,7 @@ def _conv_epilogue(col_in, wt: QTensor, bias, act: str, ep, residual,
     """Fused Conv PE epilogue dispatch (quantized GEMM path)."""
     static = isinstance(col_in, QTensor)
     pallas = (cfg.backend == "pallas" and not cfg.baseline
-              and cfg.quant == "w8a8")
+              and cfg.quant in _INT8_ACTS)
     if pallas and ep.pool == "none":
         # residual second operand streams into the GEMM kernel's NL core
         out = linear(col_in, wt, bias, act, cfg, out_dtype=out_dtype,
@@ -405,32 +561,32 @@ def dwc2d(x, w, bias: Optional[jax.Array], stride: int,
                 bias = bias[:c]
             prepadded = False
     if not cfg.use_dwc_engine:
-        # Baseline: depthwise as dense conv with diagonalized weights
-        # (one input channel per group lowered to a full GEMM -- wasteful by
-        # construction, like running DWC on the Conv PE).  Static int8 inputs
-        # pay the full dequant/requant round-trip here -- exactly the cost
-        # the DWC engine's fused epilogue avoids.
+        # Baseline (no DWC engine).  A grouped conv with group-count ==
+        # channels is exactly a per-channel depthwise conv, so lower it
+        # through the depthwise taps directly instead of materializing the
+        # [k, k, C, C] channel-diagonal weight matrix and running a full
+        # C**2 GEMM -- the old lowering burned O(C) compute and memory for
+        # identical values (adding the off-diagonal zeros is IEEE-exact).
+        # Static int8 inputs still pay the full dequant/requant round-trip
+        # here -- exactly the cost the DWC engine's fused epilogue avoids.
         if static:
             x = x.dequant()
         if padding == "SAME":
             ph = _same_pad(x.shape[1], k, stride)
             pw = _same_pad(x.shape[2], k, stride)
             x = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
-        wf = w.dequant() if is_q else wq
-        dense = jnp.zeros((k, k, c, c), jnp.float32)
-        idx = jnp.arange(c)
-        dense = dense.at[:, :, idx, idx].set(wf.astype(jnp.float32))
-        out = conv2d_pe(x, dense, bias, stride, "VALID", act,
-                        cfg, out_dtype=out_dtype)
+        wf = (w.dequant() if is_q else wq).astype(jnp.float32)
+        out = ref.dwc2d(x.astype(jnp.float32), wf, bias, stride, act,
+                        out_dtype=jnp.float32)
         if epilogue is not None:
             return _epilogue.fused_chain(
                 out, residual=residual, res_scale=res_scale,
                 **_chain_kwargs(epilogue, static, out_scale))
         if out_scale is not None:
             return quantize_static(out, jnp.float32(out_scale))
-        return out
+        return out.astype(out_dtype)
 
-    quant = (is_q and cfg.quant == "w8a8") or static
+    quant = (is_q and cfg.quant in _INT8_ACTS) or static
     if quant:
         if static:
             xin = x.q
@@ -563,7 +719,7 @@ def first_layer_conv(x, w, bias: Optional[jax.Array],
         static = False
     wq = w.q if is_q else w
     k = wq.shape[0]
-    quant = (is_q and cfg.quant == "w8a8") or static
+    quant = (is_q and cfg.quant in _INT8_ACTS) or static
     if quant:
         if static:
             xin, a_scale = x.q, float(x.scale)   # compile-time constant

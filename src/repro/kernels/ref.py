@@ -79,6 +79,60 @@ def matmul_int8_unfused(a_q, b_q, a_scale, w_scale, bias=None, act="none",
     return x.astype(out_dtype)
 
 
+def int4_group_dot(a_q: jax.Array, codes: jax.Array,
+                   w_scale: jax.Array, w_zero: jax.Array) -> jax.Array:
+    """The int4 weight-only MAC the Conv PE runs in-register.
+
+    a_q: int8/int32 [M, K]; codes: int32 [K, N] in [0, 15];
+    w_scale/w_zero: [G, N] per-group (K = G * gs).  Partial sums stay exact
+    int32 per group, then one f32 scale/zero combine per group:
+
+        out[m, n] = sum_g scale[g, n] * (a[m, g*gs:..] . codes[g*gs:.., n])
+                  + sum_g zero[g, n]  * (sum_k a[m, g*gs + k])
+
+    This is the single definition of the w4 GEMM value stream -- the Pallas
+    kernel applies the identical expression per block (column/row blocking
+    never reorders a group reduction), so ref and pallas agree bitwise.
+    """
+    m, k = a_q.shape
+    g, n = w_scale.shape
+    gs = k // g
+    ag = a_q.astype(jnp.int32).reshape(m, g, gs)
+    cg = codes.astype(jnp.int32).reshape(g, gs, n)
+    part = jnp.einsum("mgk,gkn->mgn", ag, cg,
+                      preferred_element_type=jnp.int32)
+    acc = jnp.sum(part.astype(jnp.float32)
+                  * w_scale.astype(jnp.float32)[None], axis=1)
+    asum = jnp.sum(ag, axis=-1).astype(jnp.float32)            # [M, G]
+    return acc + jnp.dot(asum, w_zero.astype(jnp.float32))
+
+
+def matmul_int4_fused(a_q: jax.Array, b_packed: jax.Array,
+                      a_scale: jax.Array, w_scale: jax.Array,
+                      w_zero: jax.Array,
+                      bias: Optional[jax.Array] = None,
+                      act: str = "none",
+                      out_scale: Optional[jax.Array] = None,
+                      out_dtype=jnp.float32) -> jax.Array:
+    """Int4 weight-only GEMM oracle: unpack -> group dot -> NL epilogue.
+
+    a_q: int8 [M, K] with a_scale f32 [M, 1] (per-token) or scalar;
+    b_packed: uint8 [K//2, N] nibble pairs with w_scale/w_zero [G, N].
+    Same epilogue contract as matmul_int8_fused.
+    """
+    from repro.core.quant import unpack_int4
+
+    codes = unpack_int4(b_packed)
+    x = int4_group_dot(a_q, codes, w_scale, w_zero) * a_scale
+    if bias is not None:
+        x = x + bias
+    x = act_fn(act)(x)
+    if out_scale is not None:
+        q = jnp.clip(jnp.round(x / out_scale), -127, 127)
+        return q.astype(jnp.int8)
+    return x.astype(out_dtype)
+
+
 # ---------------------------------------------------------------------------
 # C4: DWC PE -- depthwise convolution, NHWC
 # ---------------------------------------------------------------------------

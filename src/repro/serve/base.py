@@ -38,14 +38,19 @@ from repro.serve.mesh_exec import MeshExecutor
 
 def calibration_digest(batches: Sequence, params=None,
                        method: str = "absmax",
-                       granularity: str = "per_tensor") -> str:
+                       granularity: str = "per_tensor",
+                       weight_mode: str = "") -> str:
     """Stable id of the calibration inputs.  The recorded scales depend on
     the batches AND the float params (calibrate() runs the model) AND the
     calibrator method AND the scale granularity, so all four are digested:
     re-registering a model with new weights, new batches, a different
     calibrator (absmax vs percentile) or a different granularity
     (per-tensor vs per-channel) must miss the cache, not reuse stale
-    activation scales."""
+    activation scales.  `weight_mode` (engine.weight_mode: "" for int8
+    weights, "w4g64" for int4 group-quantized) is appended so w4 and w8
+    programs of the same model never share a cache line: the activation
+    scales coincide, but the packed parameter trees the jitted executables
+    close over do not."""
     h = hashlib.sha1()
     for b in batches:
         a = np.asarray(b)
@@ -59,6 +64,8 @@ def calibration_digest(batches: Sequence, params=None,
         digest = f"{digest}:{method}"
     if granularity != "per_tensor":
         digest = f"{digest}:pc"
+    if weight_mode:
+        digest = f"{digest}:{weight_mode}"
     return digest
 
 
@@ -164,8 +171,15 @@ class SlotScheduler:
                     ) -> List[_Entry]:
         """Order a wave's entries so each affinity key's requests fill its
         home pool's slot block first (wave row i belongs to device pool
-        i // slots)."""
+        i // slots).
+
+        A single-pool scheduler places every request in its (only) home
+        pool, so those placements count as locality hits -- otherwise
+        locality_rate reads 0.0 on a 1-device mesh and jumps to ~1.0 at 2
+        devices, breaking the monotone locality trend the fleet benchmark
+        plots."""
         if self.pools <= 1:
+            self.stats.locality_hits += len(entries)
             return entries
         by_aff: "OrderedDict[Hashable, List[_Entry]]" = OrderedDict()
         for e in entries:

@@ -139,13 +139,18 @@ class ServeEngine(ProgramServeBase):
         self.compiled = compile_prefill and lowerable
         self.compiled_decode = compile_decode and lowerable
         # calibration only feeds the compiled static programs; skip the
-        # (whole-param-tree) digest when both paths stay eager
+        # (whole-param-tree) digest when both paths stay eager.  w4a8
+        # shares w8a8's activation calibration (same float graph, same
+        # scales) but the digest carries weight_mode so w4 and w8 programs
+        # key distinct ProgramCache lines.
         batches = (list(calib_batches)
-                   if calib_batches is not None and eng.quant == "w8a8"
+                   if calib_batches is not None
+                   and eng.quant in ("w8a8", "w4a8")
                    and (self.compiled or self.compiled_decode) else None)
         self.calib_batches = batches
-        self.calib_id = (calibration_digest(batches, params, calibrator,
-                                            granularity)
+        self.calib_id = (calibration_digest(
+                             batches, params, calibrator, granularity,
+                             weight_mode=eng_lib.weight_mode(eng))
                          if batches is not None else None)
         self.calibrator = calibrator
         self.granularity = granularity

@@ -38,7 +38,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.quant import QTensor
+from repro.core.quant import Q4Tensor, QTensor
 from repro.launch import mesh as mesh_lib
 from repro.models.params import resolve_pspec
 
@@ -180,6 +180,20 @@ class MeshExecutor:
             # tiny -- replicate it, elementwise requant stays exact
             return QTensor(jax.device_put(leaf.q, sh),
                            jax.device_put(leaf.scale, self._replicated)), spec
+        if isinstance(leaf, Q4Tensor):
+            # The int4 packing interleaves K-row pairs into one uint8 and
+            # groups K rows per scale row, so a K shard ("model" on dim 0,
+            # the row-parallel wo/wd plan) would cut through nibble pairs
+            # and scale groups -- those weights replicate instead.  Column
+            # (N) shards cut cleanly: packed [K//2, N], scale and zero
+            # [G, N] all carry N last, and every per-column output is
+            # computed from one shard's columns alone.
+            if len(spec) > 0 and spec[0] is not None:
+                spec = P()
+                sh = self._replicated
+            return Q4Tensor(jax.device_put(leaf.packed, sh),
+                            jax.device_put(leaf.scale, sh),
+                            jax.device_put(leaf.zero, sh)), spec
         return jax.device_put(leaf, sh), spec
 
     def place_lm_params(self, arch, params):
@@ -191,9 +205,10 @@ class MeshExecutor:
         def rec(node, name=None):
             if isinstance(node, dict):
                 return {k: rec(v, k) for k, v in node.items()}
-            # QTensor is a NamedTuple: a placement leaf, not a container
+            # QTensor/Q4Tensor are NamedTuples: placement leaves, not
+            # containers
             if isinstance(node, (list, tuple)) \
-                    and not isinstance(node, QTensor):
+                    and not isinstance(node, (QTensor, Q4Tensor)):
                 return type(node)(rec(v, name) for v in node)
             placed, spec = self._place_named(name, node, arch)
             if spec == P():
@@ -212,4 +227,6 @@ class MeshExecutor:
 def _leaf_shape(leaf):
     if isinstance(leaf, QTensor):
         return tuple(leaf.q.shape)
+    if isinstance(leaf, Q4Tensor):
+        return tuple(leaf.shape)          # logical [K, N], not packed [K//2, N]
     return tuple(np.shape(leaf))

@@ -1,0 +1,112 @@
+"""ProgramCache variant-key + LRU semantics.
+
+The serving tier now keys programs by (model, engine, calibration-id,
+variant) where the calibration id carries the weight mode (w4g64 vs int8)
+and the variant carries the fusion mode (":nofuse" opt-out).  These tests
+pin the container semantics those keys rely on:
+
+  * w4/w8 and fused/":nofuse" variants of one model coexist -- distinct
+    keys, no aliasing, no eviction collisions while capacity holds;
+  * `__contains__` does NOT refresh recency (pruning a jit store against
+    the cache must not perturb eviction order);
+  * `get` DOES refresh recency; `peek` touches neither recency nor
+    counters;
+  * eviction pops the least-recently-used entry (popitem(last=False))."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.program_cache import CacheStats, ProgramCache, ProgramKey
+from repro.serve.base import calibration_digest
+
+
+def _key(tag="", calib="c0", model="m"):
+    return ProgramKey(model, "eng", calib, tag)
+
+
+class TestVariantKeys:
+    def test_w4_and_w8_calibration_ids_distinct(self):
+        batches = [np.arange(6, dtype=np.int32).reshape(2, 3)]
+        params = {"w": np.ones((2, 2), np.float32)}
+        d8 = calibration_digest(batches, params)
+        d4 = calibration_digest(batches, params, weight_mode="w4g64")
+        d4b = calibration_digest(batches, params, weight_mode="w4g32")
+        assert d8 != d4 and d4 != d4b
+        assert d4.endswith(":w4g64") and d4b.endswith(":w4g32")
+        # weight mode composes with (does not replace) the method /
+        # granularity suffixes
+        dp = calibration_digest(batches, params, method="p99.9",
+                                granularity="per_channel",
+                                weight_mode="w4g64")
+        assert dp.endswith(":p99.9:pc:w4g64")
+
+    def test_w4_w8_and_nofuse_variants_coexist(self):
+        """All four programs of one model -- {w8, w4} x {fused, nofuse} --
+        hold distinct cache lines with zero evictions."""
+        cache = ProgramCache(capacity=4)
+        keys = [_key("scheduled:decode", "c0"),
+                _key("scheduled:decode", "c0:w4g64"),
+                _key("scheduled:decode:nofuse", "c0"),
+                _key("scheduled:decode:nofuse", "c0:w4g64")]
+        assert len(set(keys)) == 4
+        for i, k in enumerate(keys):
+            cache.put(k, f"prog{i}")
+        assert len(cache) == 4 and cache.stats.evictions == 0
+        for i, k in enumerate(keys):
+            assert cache.peek(k) == f"prog{i}"
+
+    def test_get_or_compile_counts_per_variant(self):
+        cache = ProgramCache(capacity=4)
+        k8, k4 = _key("d", "c0"), _key("d", "c0:w4g64")
+        assert cache.get_or_compile(k8, lambda: "p8") == "p8"
+        assert cache.get_or_compile(k4, lambda: "p4") == "p4"
+        assert cache.get_or_compile(k8, lambda: "never") == "p8"
+        assert cache.stats.misses == 2 and cache.stats.hits == 1
+
+
+class TestLRUSemantics:
+    def _filled(self, n=3):
+        cache = ProgramCache(capacity=n)
+        keys = [_key(f"v{i}") for i in range(n)]
+        for i, k in enumerate(keys):
+            cache.put(k, i)
+        return cache, keys
+
+    def test_contains_does_not_refresh_recency(self):
+        cache, keys = self._filled()
+        assert keys[0] in cache                 # membership only
+        cache.put(_key("new"), "x")
+        assert keys[0] not in cache             # still evicted first
+        assert keys[1] in cache and keys[2] in cache
+
+    def test_get_refreshes_recency(self):
+        cache, keys = self._filled()
+        assert cache.get(keys[0]) == 0          # moves k0 to MRU
+        cache.put(_key("new"), "x")
+        assert keys[0] in cache
+        assert keys[1] not in cache             # k1 became LRU
+
+    def test_peek_touches_neither_recency_nor_counters(self):
+        cache, keys = self._filled()
+        before = CacheStats(**vars(cache.stats))
+        assert cache.peek(keys[0]) == 0
+        assert vars(cache.stats) == vars(before)
+        cache.put(_key("new"), "x")
+        assert keys[0] not in cache             # peek did not refresh
+
+    def test_eviction_order_is_lru(self):
+        cache, keys = self._filled()
+        evicted = []
+        cache2 = ProgramCache(capacity=3,
+                              on_evict=lambda k, v: evicted.append(k))
+        for i, k in enumerate(keys):
+            cache2.put(k, i)
+        for i in range(3):
+            cache2.put(_key(f"n{i}"), "x")
+        assert evicted == keys                  # oldest first, in order
+
+    def test_put_refreshes_existing_key(self):
+        cache, keys = self._filled()
+        cache.put(keys[0], "updated")           # re-put refreshes recency
+        cache.put(_key("new"), "x")
+        assert cache.peek(keys[0]) == "updated"
+        assert keys[1] not in cache
