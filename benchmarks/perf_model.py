@@ -362,7 +362,11 @@ def lm_node_times(graph, arch, batch: int, seq: int,
     """Modeled seconds per op of an LM program graph.
 
     `seq` is the query length (1 for a DecodeStep program); `cache_len` the
-    KV span attention reads (the cache size for decode, else `seq`).  Feeds
+    ACTUAL cached length attention reads for decode (the slots' mean
+    position, NOT max_seq -- pricing update-mode by the worst-case envelope
+    overstated attention cost for short sequences).  Block-paged AttnOps
+    (n.page_size > 0) round that span up to a page multiple: a request
+    occupies -- and the gather moves -- whole blocks.  Feeds
     compiler.time_weighted_occupancy: per-engine busy fractions weighted by
     modeled time, not per-level presence -- the ROADMAP's missing LM cost
     model.  Linear dims come from the param-path suffix the lowering wrote
@@ -390,7 +394,10 @@ def lm_node_times(graph, arch, batch: int, seq: int,
             rows = batch * (1 if n.last_only else seq)
             out[n.id] = _gemm_time(rows, d, v, act_bytes=4)
         elif isinstance(n, G.AttnOp):
-            window = min(n.window, span) if n.window else span
+            aspan = span
+            if n.mode == "update" and n.page_size:
+                aspan = -(-aspan // n.page_size) * n.page_size
+            window = min(n.window, aspan) if n.window else aspan
             flops = 4.0 * batch * seq * window * nh * hd    # qk + pv
             byts = (2 * batch * window * nkv * hd * 2        # kv reads (bf16)
                     + 3 * m * nh * hd * 4)                   # q in, ctx out
@@ -406,12 +413,15 @@ def lm_node_times(graph, arch, batch: int, seq: int,
 
 def lm_busy_fractions(arch, batch: int = 1, seq: int = 128,
                       mode: str = "prefill", cache_len: int = 0,
-                      policy: str = "asap") -> dict:
+                      policy: str = "asap", page_size: int = 0) -> dict:
     """Time-weighted per-engine busy fractions of a compiled LM program
-    (compiler.time_weighted_occupancy over lm_node_times)."""
+    (compiler.time_weighted_occupancy over lm_node_times).  `page_size`
+    (decode only) prices the block-paged DecodeStep variant."""
     from repro import compiler
 
-    prog = compiler.compile_lm(arch, mode=mode, policy=policy)
+    prog = compiler.compile_lm(arch, mode=mode, policy=policy,
+                               page_size=page_size if mode == "decode"
+                               else 0)
     qseq = 1 if mode == "decode" else seq
     times = lm_node_times(prog.graph, arch, batch, qseq,
                           cache_len=cache_len or seq)

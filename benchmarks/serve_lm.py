@@ -86,8 +86,12 @@ def serve_stats():
         slack = compiler.level_schedule(program.graph, "slack")
         occ_slack = compiler.engine_occupancy(program.graph, slack)
         tw_prefill = pm.lm_busy_fractions(arch, batch=2, seq=PROMPT_LEN)
+        # price decode attention by the ACTUAL mean cached length over the
+        # serve (prompt + half the emitted tokens), not the max_seq
+        # envelope -- the envelope overstated MISC attention time 2-4x here
         tw_decode = pm.lm_busy_fractions(arch, batch=2, mode="decode",
-                                         cache_len=MAX_SEQ)
+                                         cache_len=PROMPT_LEN
+                                         + NEW_TOKENS // 2)
         st = engine.stats()
         rows[arch.name] = {
             "levels": program.schedule.n_levels,
@@ -211,6 +215,133 @@ def decode_quant_stats(steps: int = DECODE_STEPS, seed: int = 0):
     }
 
 
+PAGE_SIZE = 8
+DRAFT_LEN = 3
+
+
+def paged_spec_stats(steps: int = DECODE_STEPS, seed: int = 0):
+    """Paged-KV + speculative decode vs the dense one-token baseline on one
+    arch: measured tokens/s for {dense, paged, paged+spec}, the accepted-
+    draft rate and tokens/burst, measured KV bytes/slot, per-request
+    latency p50/p99, and the sustainable-slot comparison at fixed memory.
+    Token ids of every variant are asserted identical to the dense run --
+    the bit-identity contract, enforced on the measured path itself."""
+    from repro.core.config import EngineConfig
+    from repro.serve.engine import ServeEngine
+
+    eng = EngineConfig(quant="w8a8", backend="ref")
+    (arch, params, calib, prompts) = _fleet(seed)[0]
+
+    def measure(**kw):
+        engine = ServeEngine(arch, params, eng, batch_size=2,
+                             max_seq=MAX_SEQ, calib_batches=calib,
+                             prefill_len=PROMPT_LEN, **kw)
+        engine.generate(prompts[:2], max_new_tokens=1)   # trace warmup
+        # report the measured run only: drop the warmup's counters and
+        # its (compile-heavy) latency samples
+        engine.serve_stats = engine.serve_stats.__class__(
+            batch=engine.serve_stats.batch)
+        engine.latency = engine.latency.__class__()
+        t0 = time.perf_counter()
+        out = engine.generate(prompts, max_new_tokens=steps)
+        dt = time.perf_counter() - t0
+        return len(prompts) * steps / dt, out, engine.stats()
+
+    tps_dense, ids_dense, st_dense = measure()
+    tps_paged, ids_paged, st_paged = measure(kv_layout="paged",
+                                             page_size=PAGE_SIZE)
+    tps_spec, ids_spec, st_spec = measure(kv_layout="paged",
+                                          page_size=PAGE_SIZE,
+                                          draft_len=DRAFT_LEN)
+    for nm, ids in (("paged", ids_paged), ("paged+spec", ids_spec)):
+        for a, b in zip(ids_dense, ids):
+            assert np.array_equal(a, b), f"{nm} ids diverged from dense"
+    # sustainable slots at the DENSE memory budget: dense reserves the
+    # max_seq envelope per slot; paged holds measured blocks per request
+    block_bytes = st_spec["kv_block_bytes"]
+    budget = st_dense["kv_bytes"]
+    per_req_blocks = max(1, round(st_spec["kv_bytes_per_slot"] / block_bytes))
+    slots_dense = int(budget // st_dense["kv_bytes_per_slot"])
+    slots_paged = int(budget // (per_req_blocks * block_bytes))
+    return {
+        "arch": arch.name,
+        "page_size": PAGE_SIZE,
+        "draft_len": DRAFT_LEN,
+        "tokens_per_s_dense": tps_dense,
+        "tokens_per_s_paged": tps_paged,
+        "tokens_per_s_spec": tps_spec,
+        "spec_speedup": tps_spec / tps_dense if tps_dense else 0.0,
+        "accepted_draft_rate": st_spec["accepted_draft_rate"],
+        "tokens_per_burst": st_spec["tokens_per_burst"],
+        "spec_steps": st_spec["spec_steps"],
+        "kv_bytes_per_slot_dense": st_dense["kv_bytes_per_slot"],
+        "kv_bytes_per_slot_paged": st_spec["kv_bytes_per_slot"],
+        "kv_block_utilization": st_spec["kv_blocks"]["peak_in_use"]
+        / st_spec["kv_blocks"]["num_blocks"],
+        "sustainable_slots_dense": slots_dense,
+        "sustainable_slots_paged": slots_paged,
+        "latency_ms_dense": st_dense["latency_ms"],
+        "latency_ms_spec": st_spec["latency_ms"],
+    }
+
+
+def _merge_lm_decode(fields: dict) -> None:
+    """Read-merge-write BENCH_serve.json's "lm_decode" sub-dict: the block
+    is shared by the w4/w8 leg and the paged/spec leg, and write_bench_json
+    merges TOP-LEVEL keys only -- a naive write would drop the other leg's
+    fields."""
+    import json
+    import os
+
+    from benchmarks.serve_cnn import BENCH_PATH, write_bench_json
+
+    block = {}
+    if os.path.exists(BENCH_PATH):
+        try:
+            with open(BENCH_PATH) as f:
+                block = json.load(f).get("lm_decode", {}) or {}
+        except (json.JSONDecodeError, OSError):
+            block = {}
+    block.update(fields)
+    write_bench_json({"lm_decode": block})
+
+
+def paged_summary_line(steps: int = DECODE_STEPS) -> str:
+    """The paged+speculative one-liner; merges measured tokens/s, accepted-
+    draft rate, tokens/burst, KV bytes/slot, sustainable slots, and p50/p99
+    latency into BENCH_serve.json["lm_decode"]."""
+    p = paged_spec_stats(steps=steps)
+    _merge_lm_decode({
+        "page_size": p["page_size"],
+        "draft_len": p["draft_len"],
+        "tokens_per_s_dense": p["tokens_per_s_dense"],
+        "tokens_per_s_paged": p["tokens_per_s_paged"],
+        "tokens_per_s_spec": p["tokens_per_s_spec"],
+        "spec_speedup": p["spec_speedup"],
+        "accepted_draft_rate": p["accepted_draft_rate"],
+        "tokens_per_burst": p["tokens_per_burst"],
+        "kv_bytes_per_slot_dense": p["kv_bytes_per_slot_dense"],
+        "kv_bytes_per_slot_paged": p["kv_bytes_per_slot_paged"],
+        "kv_block_utilization": p["kv_block_utilization"],
+        "sustainable_slots_dense": p["sustainable_slots_dense"],
+        "sustainable_slots_paged": p["sustainable_slots_paged"],
+        "latency_ms": p["latency_ms_spec"],
+    })
+    lat = p["latency_ms_spec"]
+    return (f"lm paged+spec ({p['arch']}, page={p['page_size']}, "
+            f"k={p['draft_len']}): spec {p['tokens_per_s_spec']:.1f} tok/s "
+            f"vs dense {p['tokens_per_s_dense']:.1f} "
+            f"({p['spec_speedup']:.2f}x), accept-rate "
+            f"{100 * p['accepted_draft_rate']:.1f}%, "
+            f"{p['tokens_per_burst']:.2f} tok/burst; KV bytes/slot "
+            f"{p['kv_bytes_per_slot_paged']:.0f} vs "
+            f"{p['kv_bytes_per_slot_dense']:.0f} dense, sustainable slots "
+            f"{p['sustainable_slots_paged']} vs "
+            f"{p['sustainable_slots_dense']}; latency p50 "
+            f"{lat.get('p50_ms', 0.0):.0f}ms p99 "
+            f"{lat.get('p99_ms', 0.0):.0f}ms")
+
+
 def run(measure: bool = True):
     if not measure:
         return []
@@ -246,6 +377,15 @@ def run(measure: bool = True):
         f"w8_tok_s={q['tokens_per_s_w8']:.1f},"
         f"w4_speedup={q['w4_speedup']:.2f}x,"
         f"weight_bytes_ratio={q['weight_bytes_ratio']:.3f}"))
+    p = paged_spec_stats()
+    out.append((
+        f"serve_lm/paged_spec/{p['arch']}", 0.0,
+        f"spec_tok_s={p['tokens_per_s_spec']:.1f},"
+        f"dense_tok_s={p['tokens_per_s_dense']:.1f},"
+        f"accept_rate={p['accepted_draft_rate']:.2f},"
+        f"tok_per_burst={p['tokens_per_burst']:.2f},"
+        f"slots={p['sustainable_slots_paged']}v"
+        f"{p['sustainable_slots_dense']}"))
     out.append((
         "serve_lm/trace/cached", stats["wall_s"] * 1e6,
         f"hit_rate={stats['cache_hit_rate']:.3f},"
@@ -273,11 +413,9 @@ def summary_line() -> str:
 
 
 def decode_summary_line() -> str:
-    from benchmarks.serve_cnn import write_bench_json
-
     d = decode_stats()
     q = decode_quant_stats()
-    write_bench_json({"lm_decode": {
+    _merge_lm_decode({
         "arch": d["arch"],
         "tokens_per_s_compiled": d["tokens_per_s_compiled"],
         "tokens_per_s_eager": d["tokens_per_s_eager"],
@@ -288,7 +426,7 @@ def decode_summary_line() -> str:
         "weight_bytes_per_token_w8": q["weight_bytes_per_token_w8"],
         "weight_bytes_per_token_w4": q["weight_bytes_per_token_w4"],
         "weight_bytes_ratio": q["weight_bytes_ratio"],
-    }})
+    })
     return (f"lm decode throughput ({d['arch']}): compiled "
             f"{d['tokens_per_s_compiled']:.1f} tok/s vs eager "
             f"{d['tokens_per_s_eager']:.1f} tok/s "
@@ -311,11 +449,16 @@ if __name__ == "__main__":
                     help="one-line LM program-cache + occupancy summary only")
     ap.add_argument("--decode-summary", action="store_true",
                     help="one-line compiled-vs-eager decode tokens/s only")
+    ap.add_argument("--fast", action="store_true",
+                    help="paged+speculative smoke: measured one-liner, "
+                         "lm_decode fields merge-written to BENCH_serve.json")
     args = ap.parse_args()
     if args.summary:
         print(summary_line())
     elif args.decode_summary:
         print(decode_summary_line())
+    elif args.fast:
+        print(paged_summary_line(steps=4))
     else:
         print("name,us_per_call,derived")
         for row_name, us, derived in run():

@@ -27,6 +27,12 @@ echo "== decode throughput (compiled vs eager, w4 vs w8) =="
 # "lm_decode" block (merge-preserving; serve_cnn/serve_fleet keys survive)
 python -m benchmarks.serve_lm --decode-summary
 
+echo "== paged KV + speculative decode smoke =="
+# dense vs paged vs paged+speculative on one arch: asserts bit-identical
+# token ids, merges accepted-draft rate / tokens-per-burst / KV bytes-per-
+# slot / p50-p99 latency into BENCH_serve.json's "lm_decode" block
+python -m benchmarks.serve_lm --fast
+
 echo "== fleet scaling smoke (forced 8 host devices) =="
 # subprocess sweep over {1, 8} forced devices: asserts derived ops/s
 # scales monotonically with the mesh (the full {1,2,4,8} sweep that

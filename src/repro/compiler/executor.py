@@ -59,7 +59,8 @@ from repro.compiler.graph import (AddOp, AttnOp, ConcatOp, ConvOp, DwcOp,
 from repro.compiler.passes import QuantPlan, fold_requant
 from repro.compiler.schedule import Schedule, level_schedule
 from repro.core.config import ArchConfig, CNNConfig, EngineConfig
-from repro.core.quant import Q4Tensor, QTensor, quantize_static
+from repro.core.quant import (Q4Tensor, QTensor, quantize_act_dynamic,
+                              quantize_static)
 from repro.kernels import ops, ref
 from repro.models import layers as L
 from repro.models import transformer as T
@@ -163,7 +164,7 @@ def compile_lm(arch: ArchConfig,
                scheduled: bool = True, policy: str = "asap",
                prefill: bool = False, mode: Optional[str] = None,
                granularity: str = "per_tensor",
-               fuse: bool = True) -> Program:
+               fuse: bool = True, page_size: int = 0) -> Program:
     """Lower a transformer ArchConfig to an engine program.
 
     `mode` selects the program: "full" computes full-sequence logits like
@@ -182,17 +183,25 @@ def compile_lm(arch: ArchConfig,
     remapped through both rewrites (deterministic, so the full and decode
     twins stay node-aligned).  fuse=False keeps the one-op-per-launch
     graph -- the fused-vs-unfused parity baseline.
+
+    `page_size` > 0 (decode mode only) compiles the block-paged DecodeStep
+    variant: global-layer AttnOps index cache["tables"] instead of a dense
+    [B, max_seq] cache.  The page size rides the program variant (":pN"),
+    so paged and dense programs hold distinct ProgramCache lines.
     """
     mode = mode or ("prefill" if prefill else "full")
     if mode not in ("full", "prefill", "decode"):
         raise ValueError(f"unknown LM program mode {mode!r}")
+    if page_size and mode != "decode":
+        raise ValueError("page_size applies to decode programs only")
     variant = (schedule_variant(scheduled, policy) + f":{mode}"
+               + (f":p{page_size}" if page_size else "")
                + ("" if fuse else ":nofuse"))
     kind = "decode" if mode == "decode" else "forward"
 
     def lower(sc=None):
         if mode == "decode":
-            g = lower_transformer(arch, mode="decode")
+            g = lower_transformer(arch, mode="decode", page_size=page_size)
         else:
             g = lower_transformer(arch, last_only=(mode == "prefill"))
         if fuse:
@@ -238,11 +247,19 @@ def execute(program: Program, params, inputs: jax.Array,
 
 
 class _DecodeCtx:
-    """Cache state threaded through a DecodeStep program's AttnOp updates."""
+    """Cache state threaded through a DecodeStep program's AttnOp updates.
+
+    `tables` is the block table [B, max_pages] of a paged cache (None for
+    dense).  `collect`, when set to a dict, flips the AttnOps into VERIFY
+    mode: fresh per-token (k, v) land there instead of the cache, which
+    stays untouched until `commit_decode_kv` applies the accepted prefix.
+    """
 
     def __init__(self, cache: dict):
         self.cache = cache
         self.pos = cache["pos"]          # scalar, or [B] per-slot positions
+        self.tables = cache.get("tables")
+        self.collect: Optional[Dict[int, tuple]] = None
         self.new_layers: Dict[int, dict] = {}
 
     def entry(self, layer: int) -> dict:
@@ -251,7 +268,10 @@ class _DecodeCtx:
     def finish(self) -> dict:
         layers = [self.new_layers.get(i, e)
                   for i, e in enumerate(self.cache["layers"])]
-        return {"layers": layers, "pos": self.pos + 1}
+        out = {"layers": layers, "pos": self.pos + 1}
+        if self.tables is not None:
+            out["tables"] = self.tables
+        return out
 
 
 def execute_decode(program: Program, params, cache: dict,
@@ -259,9 +279,10 @@ def execute_decode(program: Program, params, cache: dict,
                    ) -> Tuple[jax.Array, dict]:
     """Run a DecodeStep program: one token per slot against the KV cache.
 
-    tokens: [B, 1] int32; cache: the serving cache (T.cache_schema layout,
-    "pos" scalar or [B] per-slot).  Returns (logits [B, 1, V], new cache)
-    -- the compiled counterpart of `T.decode`, jit/donation friendly."""
+    tokens: [B, 1] int32; cache: the serving cache (T.cache_schema or
+    T.paged_cache_schema layout, "pos" scalar or [B] per-slot).  Returns
+    (logits [B, 1, V], new cache) -- the compiled counterpart of
+    `T.decode`, jit/donation friendly."""
     if program.kind != "decode":
         raise ValueError(f"execute_decode needs a decode program, got "
                          f"kind={program.kind!r}")
@@ -273,6 +294,73 @@ def execute_decode(program: Program, params, cache: dict,
         logits = _execute_dynamic(program, params, tokens, eng, None, None,
                                   decode=ctx)
     return logits, ctx.finish()
+
+
+def execute_verify(program: Program, params, cache: dict,
+                   tokens: jax.Array, eng: EngineConfig
+                   ) -> Tuple[jax.Array, Dict[int, tuple]]:
+    """Teacher-force W tokens per slot through a DecodeStep program WITHOUT
+    committing cache state -- the speculative-decode verification step.
+
+    tokens: [B, W] int32 (position i sits at cache position pos+i).  Each
+    AttnOp scatters its fresh per-token (k, v) into a read-once VIEW of the
+    cache, so token i attends to committed history plus drafts 0..i exactly
+    as sequential decode would -- logits are bit-identical to W sequential
+    `execute_decode` steps.  Returns (logits [B, W, V], kvs): per-layer
+    post-RoPE fresh (k, v) [B, W, Hkv, D] for `commit_decode_kv`.
+    """
+    if program.kind != "decode":
+        raise ValueError(f"execute_verify needs a decode program, got "
+                         f"kind={program.kind!r}")
+    ctx = _DecodeCtx(cache)
+    ctx.collect = {}
+    if program.static:
+        logits = _execute_static(program, params, tokens, eng, None,
+                                 decode=ctx)
+    else:
+        logits = _execute_dynamic(program, params, tokens, eng, None, None,
+                                  decode=ctx)
+    return logits, ctx.collect
+
+
+def commit_decode_kv(program: Program, cache: dict,
+                     kvs: Dict[int, tuple], accept: jax.Array,
+                     eng: EngineConfig) -> dict:
+    """Commit the accepted prefix of verified draft (k, v) into the cache.
+
+    kvs: `execute_verify`'s per-layer fresh (k, v) [B, W, Hkv, D];
+    accept: [B] int32, tokens to commit per slot (0 <= accept <= W; 0 for
+    idle slots).  Draft position i commits iff i < accept[b]; rejected
+    writes are redirected past the buffer end and dropped, so a rolled-back
+    slot's cache is untouched.  pos advances by accept.  Returns the new
+    cache dict (same schema, donation friendly)."""
+    accept = jnp.asarray(accept, jnp.int32)
+    b = accept.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(cache["pos"], jnp.int32), (b,))
+    tables = cache.get("tables")
+    layers = list(cache["layers"])
+    for n in program.graph.nodes:
+        if not (isinstance(n, AttnOp) and n.mode == "update"):
+            continue
+        k, v = kvs[n.layer]
+        entry = layers[n.layer]
+        for i in range(k.shape[1]):
+            mask = i < accept
+            ki, vi = k[:, i:i + 1], v[:, i:i + 1]
+            if n.page_size:
+                entry = T._paged_kv_store(entry, ki, vi, tables, pos + i,
+                                          eng, n.page_size, mask=mask)
+            elif n.layer_kind == "local":
+                w = entry["k"].shape[1]
+                entry = T._masked_kv_store(entry, ki, vi, (pos + i) % w,
+                                           mask, eng)
+            else:
+                entry = T._masked_kv_store(entry, ki, vi, pos + i, mask, eng)
+        layers[n.layer] = entry
+    out = {"layers": layers, "pos": cache["pos"] + accept}
+    if tables is not None:
+        out["tables"] = tables
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -371,15 +459,18 @@ def rope_table_stats() -> Dict[str, int]:
 
 def _rope_decode_memo(pos):
     """Decode-step RoPE: angles at the cache position(s), one table per
-    (B, head_dim, theta) per execute_decode() call.  `pos` is a scalar or
-    [B] per-slot position vector (both traced under jit)."""
+    (B, W, head_dim, theta) per execute_decode() call.  `pos` is a scalar
+    or [B] per-slot position vector (both traced under jit); draft token i
+    of a W-wide verify burst sits at position pos + i (W == 1 reproduces
+    the single-token table bitwise: + arange(1) is the integer identity)."""
     cache: Dict[Tuple, Tuple[jax.Array, jax.Array]] = {}
 
-    def rope(b: int, hd: int, theta: float):
-        key = (b, hd, theta)
+    def rope(b: int, w: int, hd: int, theta: float):
+        key = (b, w, hd, theta)
         if key not in cache:
-            positions = (pos[:, None] if jnp.asarray(pos).ndim == 1
-                         else jnp.broadcast_to(pos[None, None], (b, 1)))
+            base = (pos[:, None] if jnp.asarray(pos).ndim == 1
+                    else jnp.broadcast_to(pos[None, None], (b, 1)))
+            positions = base + jnp.arange(w, dtype=jnp.int32)[None, :]
             cache[key] = L.rope_angles(positions, hd, theta)
         return cache[key]
 
@@ -398,30 +489,82 @@ def _embed_eval(n: EmbedOp, tokens: jax.Array, params) -> jax.Array:
     return x
 
 
+def _cache_roundtrip(val: jax.Array, eng: EngineConfig) -> jax.Array:
+    """Cast a fresh k/v slice [B, 1, Hkv, D] exactly as a cache store+read
+    roundtrip would: int8 caches quantize per-token and dequantize back to
+    bf16; bf16 caches just downcast.  The speculative verify path scatters
+    these into the read-once cache view, so each draft token sees the SAME
+    bits sequential store-then-read decode would produce."""
+    if eng.kv_cache_dtype == "int8":
+        q = quantize_act_dynamic(val, per_token=True)
+        return (q.q.astype(jnp.float32) * q.scale).astype(jnp.bfloat16)
+    return val.astype(jnp.bfloat16)
+
+
 def _attn_update_eval(n: AttnOp, q: jax.Array, k: jax.Array, v: jax.Array,
                       rope_d, ctx: "_DecodeCtx", eng: EngineConfig
                       ) -> jax.Array:
     """AttnOp in `update` mode: write this token's (k, v) into the cache at
     the slot position, then attend against the cache -- the op-level twin
-    of the attention body of `T.decode` (bit-identical cache layout)."""
-    b = q.shape[0]
+    of the attention body of `T.decode` (bit-identical cache layout).
+
+    Three variants share this evaluator:
+      * dense commit (page_size == 0, width 1): the historical path, byte
+        for byte unchanged.
+      * paged commit (n.page_size > 0): the store goes through the block
+        table into the shared pool; the read gathers the slot-ordered
+        dense view, so attention math is identical to the dense cache.
+      * verify (ctx.collect set, width W >= 1): NOTHING commits.  Fresh
+        (k, v) scatter into a read-once view and draft token i attends to
+        committed history + drafts 0..i -- teacher-forced sequential
+        decode, restartable because the real cache never moved.
+    """
+    b, width = q.shape[0], q.shape[1]
     g = n.n_heads // n.n_kv_heads
-    q = q.reshape(b, 1, n.n_kv_heads, g, n.head_dim)
-    k = k.reshape(b, 1, n.n_kv_heads, n.head_dim)
-    v = v.reshape(b, 1, n.n_kv_heads, n.head_dim)
-    cos, sin = rope_d(b, n.head_dim, n.rope_theta)
+    q = q.reshape(b, width, n.n_kv_heads, g, n.head_dim)
+    k = k.reshape(b, width, n.n_kv_heads, n.head_dim)
+    v = v.reshape(b, width, n.n_kv_heads, n.head_dim)
+    cos, sin = rope_d(b, width, n.head_dim, n.rope_theta)
     q = L.apply_rope(q, cos, sin)
     k = L.apply_rope(k, cos, sin)
     entry = ctx.entry(n.layer)
-    if n.layer_kind == "local":
-        w = entry["k"].shape[1]
-        entry = T._kv_store(entry, k, v, ctx.pos % w, eng)
-        ring = True
+    paged = bool(n.page_size)
+    ring = n.layer_kind == "local"
+    if ctx.collect is not None:
+        ctx.collect[n.layer] = (k, v)
+        if paged:
+            kc, vc = T._paged_kv_read(entry, ctx.tables, eng)
+        else:
+            kc, vc = T._kv_read(entry, eng)
+        s = kc.shape[1]
+        pos = jnp.broadcast_to(jnp.asarray(ctx.pos, jnp.int32), (b,))
+        rows = jnp.arange(b)
+        outs = []
+        for i in range(width):
+            slot = (pos + i) % s if ring else pos + i
+            ki = _cache_roundtrip(k[:, i:i + 1], eng)[:, 0]
+            vi = _cache_roundtrip(v[:, i:i + 1], eng)[:, 0]
+            kc = kc.at[rows, slot].set(ki.astype(kc.dtype), mode="drop")
+            vc = vc.at[rows, slot].set(vi.astype(vc.dtype), mode="drop")
+            outs.append(L.decode_attention(
+                q[:, i:i + 1], kc, vc, pos + i + 1, window=n.window,
+                logit_softcap=n.softcap, ring=ring))
+        out = jnp.concatenate(outs, axis=1)
+        return out.reshape(b, width, n.n_heads * n.head_dim
+                           ).astype(jnp.float32)
+    if paged:
+        entry = T._paged_kv_store(entry, k, v, ctx.tables, ctx.pos, eng,
+                                  n.page_size)
+        ctx.new_layers[n.layer] = entry
+        kc, vc = T._paged_kv_read(entry, ctx.tables, eng)
     else:
-        entry = T._kv_store(entry, k, v, ctx.pos, eng)
-        ring = False
-    ctx.new_layers[n.layer] = entry
-    kc, vc = T._kv_read(entry, eng)
+        if ring:
+            w = entry["k"].shape[1]
+            entry = T._kv_store(entry, k, v, ctx.pos % w, eng)
+        else:
+            entry = T._kv_store(entry, k, v, ctx.pos, eng)
+        ctx.new_layers[n.layer] = entry
+        kc, vc = T._kv_read(entry, eng)
     out = L.decode_attention(q, kc, vc, ctx.pos + 1, window=n.window,
                              logit_softcap=n.softcap, ring=ring)
     return out.reshape(b, 1, n.n_heads * n.head_dim).astype(jnp.float32)

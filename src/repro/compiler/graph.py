@@ -215,10 +215,18 @@ class AttnOp(OpNode):
 
     mode="full":   full-sequence causal attention (prefill / training).
     mode="update": the cache-state recurrence of a DecodeStep program --
-      the single new (k, v) pair is written into the serving KV cache at
-      the slot's position index (ring-indexed for local layers), then the
+      the new (k, v) pairs are written into the serving KV cache at the
+      slot's position index (ring-indexed for local layers), then the
       query attends against the whole cache.  The executor threads the
-      cache through `execute_decode`."""
+      cache through `execute_decode`; a [B, k] token input runs the same
+      node as a roll-back-free draft-verification step (execute_verify).
+
+    page_size > 0 (update mode, global layers only): the cache state is
+    BLOCK-PAGED -- the op indexes a shared [num_blocks, page, Hkv, D] pool
+    through the slot's row of the block table (cache["tables"]) instead of
+    a dense per-slot [B, max_seq] buffer, so serving admits requests by
+    free blocks rather than worst-case length.  Local (ring) layers stay
+    dense: their window already bounds per-slot memory."""
     layer: int = 0
     layer_kind: str = "global"
     n_heads: int = 1
@@ -228,6 +236,7 @@ class AttnOp(OpNode):
     softcap: float = 0.0
     window: int = 0                  # >0: local attention window
     mode: str = "full"               # full | update (decode cache step)
+    page_size: int = 0               # >0: block-paged cache (update mode)
 
 
 @dataclass(frozen=True)
@@ -376,7 +385,7 @@ def can_lower(arch: ArchConfig) -> bool:
 
 
 def lower_transformer(arch: ArchConfig, last_only: bool = False,
-                      mode: str = "full") -> Graph:
+                      mode: str = "full", page_size: int = 0) -> Graph:
     """Lower a transformer to the engine op-graph.
 
     mode="full" (prefill / training): the program input is the token-id
@@ -391,6 +400,12 @@ def lower_transformer(arch: ArchConfig, last_only: bool = False,
     scales recorded on the full graph transfer to the decode graph by node
     id -- one calibration run statically quantizes both programs.
 
+    page_size > 0 (decode mode only) marks the global-layer AttnOps
+    block-paged: their cache state is a shared block pool indexed through
+    cache["tables"] (see AttnOp docstring).  The node sequence is
+    unchanged, so calibration scales still transfer by node id and paged
+    programs reuse the dense calibration run.
+
     Every projection is a LinearOp on the Conv PE; norms, residual adds,
     the SwiGLU gate and the attention core run on the MISC core, mirroring
     the paper's non-convolution operator mapping.
@@ -398,6 +413,11 @@ def lower_transformer(arch: ArchConfig, last_only: bool = False,
     if mode not in ("full", "decode"):
         raise ValueError(f"unknown lowering mode {mode!r} "
                          "(want 'full' or 'decode')")
+    if page_size and mode != "decode":
+        raise ValueError("page_size applies to decode programs only "
+                         "(prefill fills the cache through `collect`)")
+    if page_size < 0:
+        raise ValueError(f"page_size must be >= 0, got {page_size}")
     blockers = lowering_blockers(arch)
     if blockers:
         raise NotImplementedError(
@@ -425,7 +445,8 @@ def lower_transformer(arch: ArchConfig, last_only: bool = False,
                   head_dim=arch.head_dim, rope_theta=arch.rope_theta,
                   softcap=arch.attn_softcap,
                   window=arch.local_window if kind == "local" else 0,
-                  mode=attn_mode)
+                  mode=attn_mode,
+                  page_size=page_size if kind == "global" else 0)
         h = b.add(LinearOp, [a], w=ap + ("wo",))
         if arch.post_norms:
             h = b.add(NormOp, [h], w=p + ("post_attn_norm",),
@@ -450,5 +471,8 @@ def lower_transformer(arch: ArchConfig, last_only: bool = False,
               w=("embed",) if arch.tie_embeddings else ("head",),
               tied=arch.tie_embeddings, softcap=arch.final_softcap,
               last_only=last_only and mode == "full")
-    name = arch.name if mode == "full" else f"{arch.name}:decode"
+    if mode == "full":
+        name = arch.name
+    else:
+        name = f"{arch.name}:decode" + (f":p{page_size}" if page_size else "")
     return Graph(tuple(b.nodes), output=x, name=name)

@@ -101,3 +101,46 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV gather (scalar-prefetch block-table indexed copy)
+# ---------------------------------------------------------------------------
+
+def _gather_kernel(tbl_ref, pool_ref, o_ref):
+    del tbl_ref  # consumed by the index maps
+    o_ref[0] = pool_ref[0]
+
+
+def paged_gather(pool: jax.Array, tables: jax.Array, *,
+                 interpret: bool = False) -> jax.Array:
+    """Block-table gather: pool [N, P, ...] + tables [B, M] (entries already
+    clipped into [0, N-1] by the ops wrapper) -> dense view [B, M*P, ...].
+
+    The table rides scalar prefetch (PrefetchScalarGridSpec) so each grid
+    step's input BlockSpec picks pool block `tables[b, m]` directly -- the
+    copy itself is a straight VMEM move, one (P, F) tile per page.
+    """
+    n, p = pool.shape[0], pool.shape[1]
+    b, m = tables.shape
+    trailing = pool.shape[2:]
+    f = 1
+    for dim in trailing:
+        f *= dim
+    pool_f = pool.reshape(n, p, f)
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, m),
+            in_specs=[
+                pl.BlockSpec((1, p, f), lambda bi, mi, tbl: (tbl[bi, mi],
+                                                             0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, p, f), lambda bi, mi, tbl: (
+                bi * m + mi, 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((b * m, p, f), pool.dtype),
+        interpret=interpret,
+    )(tables, pool_f)
+    return out.reshape((b, m * p) + trailing)

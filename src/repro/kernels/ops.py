@@ -828,3 +828,27 @@ def flash_mha(q: jax.Array, k: jax.Array, v: jax.Array, *,
                             1, 0, 2, 3), causal=causal,
                             logit_softcap=softcap)[0]
     return out[:, :l].reshape(b, h, l, d)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache gather -- beyond-paper (LM serving)
+# ---------------------------------------------------------------------------
+
+def paged_gather(pool: jax.Array, tables: jax.Array,
+                 cfg: EngineConfig) -> jax.Array:
+    """Gather a block-paged KV pool [N, P, ...] into the slot-ordered dense
+    view [B, M*P, ...] a dense cache would hold, via block table [B, M].
+
+    Table entries are clipped into [0, N-1] HERE, once, for both backends:
+    unallocated pages carry the positive sentinel N (negative sentinels
+    would WRAP under JAX gather), and the Pallas index_map cannot take an
+    out-of-range block id.  Whatever a clipped sentinel reads sits at
+    positions >= the slot's length and is masked to -inf downstream, so the
+    two backends stay bitwise identical.
+    """
+    tables = jnp.clip(tables, 0, pool.shape[0] - 1)
+    if cfg.backend == "pallas" and not cfg.baseline:
+        from repro.kernels import flash_attn
+        return flash_attn.paged_gather(pool, tables,
+                                       interpret=cfg.interpret)
+    return ref.paged_gather(pool, tables)

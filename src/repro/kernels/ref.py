@@ -304,3 +304,26 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array,
     logits = jnp.where(mask[None, None], logits, -1e30)
     p = jax.nn.softmax(logits, axis=-1)
     return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV gather (block-table indexed cache -> slot-ordered dense view)
+# ---------------------------------------------------------------------------
+
+def paged_gather(pool: jax.Array, tables: jax.Array) -> jax.Array:
+    """Gather block-paged cache state into a slot-ordered dense view.
+
+    pool:   [N, P, ...] -- N blocks of P positions (K, V, or scale pools).
+    tables: [B, M] int32 -- block id of slot b's m-th page (values are
+            clipped into [0, N-1], so sentinel/unallocated entries read
+            SOME finite block whose data the decode mask discards).
+    Returns [B, M*P, ...]: the exact values the dense cache would hold at
+    every in-length position -- a pure copy, the paged/dense bit-identity
+    anchor the Pallas kernel is checked against.
+    """
+    n, p = pool.shape[0], pool.shape[1]
+    b, m = tables.shape
+    blk = jnp.clip(tables, 0, n - 1)
+    flat = (blk[..., None] * p + jnp.arange(p)[None, None, :]
+            ).reshape(b, m * p)
+    return pool.reshape((n * p,) + pool.shape[2:])[flat]

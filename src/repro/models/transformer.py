@@ -393,6 +393,205 @@ def _kv_read(entry: dict, eng: EngineConfig):
 
 
 # ---------------------------------------------------------------------------
+# Block-paged serving cache (global-attention layers)
+# ---------------------------------------------------------------------------
+
+def num_pages(max_seq: int, page_size: int) -> int:
+    """Table width: pages per slot at worst-case length."""
+    return -(-max_seq // page_size)
+
+
+def paged_cache_schema(arch: ArchConfig, batch: int, max_seq: int,
+                       eng: EngineConfig, page_size: int,
+                       num_blocks: Optional[int] = None) -> dict:
+    """Block-paged variant of cache_schema.
+
+    Global-attention layers keep their K/V in a SHARED block pool
+    [num_blocks, page_size, Hkv, D] indexed through one block table
+    cache["tables"] [B, max_pages] (block b of every layer's pool belongs
+    to the same slot, so one table serves all layers).  `num_blocks`
+    defaults to dense capacity (batch * max_pages); a serving engine hands
+    out fewer and admits by free blocks instead of worst-case length.
+
+    Local (ring) and SSM layers stay dense per-slot: the ring window /
+    state size already bounds their memory, so paging them buys nothing.
+    max_seq must be a page multiple (the engine rounds it up) so the
+    gathered dense view is shape-identical to the dense cache -- the
+    bit-identity contract of the paged path.
+    """
+    if max_seq % page_size:
+        raise ValueError(f"max_seq={max_seq} must be a multiple of "
+                         f"page_size={page_size} (round it up)")
+    pages = num_pages(max_seq, page_size)
+    if num_blocks is None:
+        num_blocks = batch * pages
+    kv_dt = jnp.int8 if eng.kv_cache_dtype == "int8" else jnp.bfloat16
+    nkv, hd = arch.n_kv_heads, arch.head_dim
+    per_layer = []
+    for i in range(arch.n_layers):
+        kind = arch.layer_kind(i)
+        if kind == "mamba":
+            per_layer.append(S.mamba_state_schema(arch, batch, jnp.bfloat16))
+        elif kind == "recurrent":
+            per_layer.append(S.rglru_state_schema(arch, batch, jnp.bfloat16))
+        elif kind == "local":
+            s = min(arch.local_window, max_seq)
+            d = {
+                "k": ParamSpec((batch, s, nkv, hd), ("dp", "tp"), "zeros", kv_dt),
+                "v": ParamSpec((batch, s, nkv, hd), ("dp", "tp"), "zeros", kv_dt),
+            }
+            if eng.kv_cache_dtype == "int8":
+                d["k_scale"] = ParamSpec((batch, s, nkv), ("dp", "tp"),
+                                         "zeros", jnp.float32)
+                d["v_scale"] = ParamSpec((batch, s, nkv), ("dp", "tp"),
+                                         "zeros", jnp.float32)
+            per_layer.append(d)
+        else:
+            d = {
+                "k": ParamSpec((num_blocks, page_size, nkv, hd), (None, None),
+                               "zeros", kv_dt),
+                "v": ParamSpec((num_blocks, page_size, nkv, hd), (None, None),
+                               "zeros", kv_dt),
+            }
+            if eng.kv_cache_dtype == "int8":
+                d["k_scale"] = ParamSpec((num_blocks, page_size, nkv),
+                                         (None, None), "zeros", jnp.float32)
+                d["v_scale"] = ParamSpec((num_blocks, page_size, nkv),
+                                         (None, None), "zeros", jnp.float32)
+            per_layer.append(d)
+    return {"layers": per_layer,
+            "tables": ParamSpec((batch, pages), (None, None), "zeros",
+                                jnp.int32),
+            "pos": ParamSpec((), (), "zeros", jnp.int32)}
+
+
+def _paged_flat_idx(tables: jax.Array, idx: jax.Array, page: int
+                    ) -> jax.Array:
+    """Flat pool index of per-slot position idx [B]: the slot's block id
+    (from its table row) times the page size plus the in-page offset.
+    Unallocated table entries hold the POSITIVE sentinel `num_blocks`
+    (negative indices would wrap in a JAX scatter), so their flat index is
+    out of bounds and a mode="drop" scatter discards the write -- an idle
+    slot can never corrupt a freed (or reassigned) block."""
+    blk = jnp.take_along_axis(tables, (idx // page)[:, None], axis=1)[:, 0]
+    return blk * page + idx % page
+
+
+def _paged_kv_store(entry: dict, k, v, tables: jax.Array, idx,
+                    eng: EngineConfig, page: int, mask=None) -> dict:
+    """Write ONE new token's k/v [B, 1, Hkv, D] into the block pool at
+    per-slot positions idx ([B] or scalar), through the block table.
+    `mask` [B] bool, when given, gates the write per slot (False rows are
+    redirected out of bounds and dropped -- the speculative-commit path)."""
+    entry = dict(entry)
+    b = k.shape[0]
+    idx = jnp.broadcast_to(jnp.asarray(idx, jnp.int32), (b,))
+    flat = _paged_flat_idx(tables, idx, page)
+    if mask is not None:
+        flat = jnp.where(mask, flat, entry["k"].shape[0] * page)
+
+    def store(pool, val):
+        fp = pool.reshape((-1,) + pool.shape[2:])
+        fp = fp.at[flat].set(val[:, 0].astype(pool.dtype), mode="drop")
+        return fp.reshape(pool.shape)
+
+    if eng.kv_cache_dtype == "int8":
+        kq = quantize_act_dynamic(k, per_token=True)
+        vq = quantize_act_dynamic(v, per_token=True)
+        entry["k"] = store(entry["k"], kq.q)
+        entry["v"] = store(entry["v"], vq.q)
+        entry["k_scale"] = store(entry["k_scale"], kq.scale[..., 0])
+        entry["v_scale"] = store(entry["v_scale"], vq.scale[..., 0])
+        return entry
+    entry["k"] = store(entry["k"], k)
+    entry["v"] = store(entry["v"], v)
+    return entry
+
+
+def _masked_kv_store(entry: dict, k, v, idx, mask, eng: EngineConfig
+                     ) -> dict:
+    """Dense single-token store with a per-slot write gate: like _kv_store
+    with vector idx, but rows where `mask` [B] is False are redirected one
+    past the sequence end and dropped (mode="drop" ignores positive OOB;
+    negative sentinels would wrap) -- the speculative-commit path, where a
+    rejected draft must leave the slot's cache untouched."""
+    entry = dict(entry)
+    b = k.shape[0]
+    s = entry["k"].shape[1]
+    idx = jnp.broadcast_to(jnp.asarray(idx, jnp.int32), (b,))
+    slot = jnp.where(mask, idx, s)
+
+    def store(buf, val):
+        return buf.at[jnp.arange(b), slot].set(
+            val[:, 0].astype(buf.dtype), mode="drop")
+
+    if eng.kv_cache_dtype == "int8":
+        kq = quantize_act_dynamic(k, per_token=True)
+        vq = quantize_act_dynamic(v, per_token=True)
+        entry["k"] = store(entry["k"], kq.q)
+        entry["v"] = store(entry["v"], vq.q)
+        entry["k_scale"] = store(entry["k_scale"], kq.scale[..., 0])
+        entry["v_scale"] = store(entry["v_scale"], vq.scale[..., 0])
+        return entry
+    entry["k"] = store(entry["k"], k)
+    entry["v"] = store(entry["v"], v)
+    return entry
+
+
+def _paged_kv_read(entry: dict, tables: jax.Array, eng: EngineConfig):
+    """Gather the slot-ordered dense view [B, pages*page, Hkv, D] of a
+    block pool through the table -- a pure copy, so attention over the view
+    is bit-identical to the dense cache (positions >= the slot's length
+    hold garbage from stale/unallocated blocks, but the decode mask sends
+    them to exp-underflow zero exactly like dense zero-padding)."""
+    from repro.kernels import ops
+    k = ops.paged_gather(entry["k"], tables, eng)
+    v = ops.paged_gather(entry["v"], tables, eng)
+    if eng.kv_cache_dtype == "int8":
+        ks = ops.paged_gather(entry["k_scale"], tables, eng)
+        vs = ops.paged_gather(entry["v_scale"], tables, eng)
+        k = (k.astype(jnp.float32) * ks[..., None]).astype(jnp.bfloat16)
+        v = (v.astype(jnp.float32) * vs[..., None]).astype(jnp.bfloat16)
+        return k, v
+    return k, v
+
+
+def _paged_prefill_store(entry: dict, k, v, tables: jax.Array,
+                         mask: jax.Array, eng: EngineConfig, page: int
+                         ) -> dict:
+    """Scatter a prefill's whole k/v span [B, L, Hkv, D] into the block
+    pool through the table, rows gated by `mask` [B] (the serving engine's
+    refilled slots; foreign rows' writes drop)."""
+    entry = dict(entry)
+    b, l = k.shape[0], k.shape[1]
+    pidx = jnp.arange(l)
+    blk = jnp.take_along_axis(
+        tables, jnp.broadcast_to((pidx // page)[None, :], (b, l)), axis=1)
+    flat = blk * page + (pidx % page)[None, :]          # [B, L]
+    oob = entry["k"].shape[0] * page                    # mode="drop" target
+    flat = jnp.where(mask[:, None], flat, oob)          # foreign rows drop
+
+    def store(pool, val):
+        fp = pool.reshape((-1,) + pool.shape[2:])
+        fp = fp.at[flat.reshape(-1)].set(
+            val.reshape((-1,) + val.shape[2:]).astype(pool.dtype),
+            mode="drop")
+        return fp.reshape(pool.shape)
+
+    if eng.kv_cache_dtype == "int8":
+        kq = quantize_act_dynamic(k, per_token=True)
+        vq = quantize_act_dynamic(v, per_token=True)
+        entry["k"] = store(entry["k"], kq.q)
+        entry["v"] = store(entry["v"], vq.q)
+        entry["k_scale"] = store(entry["k_scale"], kq.scale[..., 0])
+        entry["v_scale"] = store(entry["v_scale"], vq.scale[..., 0])
+        return entry
+    entry["k"] = store(entry["k"], k)
+    entry["v"] = store(entry["v"], v)
+    return entry
+
+
+# ---------------------------------------------------------------------------
 # Prefill
 # ---------------------------------------------------------------------------
 

@@ -37,6 +37,23 @@ property test pins it).  Decode dispatch is async: bursts keep emitted
 token columns on device and the host syncs only at response edges (a
 request completing), never per step.
 
+With `kv_layout="paged"` the engine's global-attention KV state lives in a
+shared block pool (T.paged_cache_schema) behind ONE block table: a request
+holds exactly ceil((prompt + max_new_tokens) / page_size) blocks from a
+BlockAllocator (serve/kv_alloc.py), and admission gates on FREE BLOCKS, not
+worst-case slot envelopes -- so sustainable concurrency at fixed memory
+follows the measured request footprint (the paper's bandwidth thesis
+applied to cache capacity).  Paged decode is bit-identical to dense: the
+gather is a pure copy and masked positions exp-underflow to exactly zero.
+
+With `draft_len=k` decode runs SPECULATIVE bursts: each step teacher-forces
+the current token plus k self-speculative n-gram drafts (no second model)
+through ONE [B, 1+k]-wide DecodeStep execution (`execute_verify`), accepts
+the longest greedy-consistent prefix, and commits only accepted positions
+(`commit_decode_kv`) -- rejected drafts never touch the cache, so emitted
+ids match one-token greedy decode token-for-token while each burst can
+commit multiple tokens.
+
 SSM / MoE mixers and the audio encoder-decoder stay eager: `stats()`
 reports the exact `lowering_blockers` instead of silently falling back.
 """
@@ -61,6 +78,7 @@ from repro.models import whisper as W
 from repro.models.params import is_spec
 from repro.serve.base import (ProgramServeBase, SlotScheduler,
                               calibration_digest)
+from repro.serve.kv_alloc import BlockAllocator
 from repro.serve.program_cache import ProgramCache
 
 _LM = "lm"                            # the scheduler's single slot group
@@ -73,6 +91,20 @@ class Request:
     out_tokens: Optional[list] = None
 
 
+@dataclasses.dataclass(frozen=True)
+class SubmitRejection:
+    """Structured submit() rejection (queue-level backpressure, NOT an
+    exception): the request cannot be served by this engine configuration.
+    Falsy, so `if ticket:` keeps working for accepted submissions."""
+    reason: str                     # "over_length" | "over_capacity"
+    detail: str
+    prompt_len: int
+    max_new_tokens: int
+
+    def __bool__(self) -> bool:
+        return False
+
+
 @dataclasses.dataclass
 class LMServeStats:
     """Continuous-batching counters across run() calls."""
@@ -81,6 +113,12 @@ class LMServeStats:
     decode_steps: int = 0             # decode program/burst steps
     active_slot_steps: int = 0        # slot-steps that served a request
     slot_refills: int = 0             # slots reused after a finished request
+    rejected_requests: int = 0        # structured submit() rejections
+    spec_steps: int = 0               # speculative verify bursts
+    spec_slot_steps: int = 0          # slot-bursts (active slots x bursts)
+    drafted_tokens: int = 0           # draft tokens eligible for acceptance
+    accepted_drafts: int = 0          # drafts that matched greedy decode
+    committed_tokens: int = 0         # tokens emitted by spec bursts
     batch: int = 0
 
     @property
@@ -93,6 +131,20 @@ class LMServeStats:
         """Fraction of requests admitted by refilling a finished slot
         mid-run rather than by the initial batch fill."""
         return self.slot_refills / self.requests if self.requests else 0.0
+
+    @property
+    def accepted_draft_rate(self) -> float:
+        """Fraction of eligible draft tokens that matched greedy decode."""
+        return (self.accepted_drafts / self.drafted_tokens
+                if self.drafted_tokens else 0.0)
+
+    @property
+    def tokens_per_burst(self) -> float:
+        """Mean tokens committed per slot per verify burst, in [1, 1+k]
+        (per SLOT-burst, not per batch step: dividing by bursts alone
+        would credit batch width as speculation win)."""
+        return (self.committed_tokens / self.spec_slot_steps
+                if self.spec_slot_steps else 0.0)
 
 
 class ServeEngine(ProgramServeBase):
@@ -108,7 +160,11 @@ class ServeEngine(ProgramServeBase):
                  compile_decode: bool = True,
                  decode_burst: int = 4,
                  prefill_len: Optional[int] = None,
-                 mesh=None):
+                 mesh=None,
+                 kv_layout: str = "dense",
+                 page_size: int = 8,
+                 kv_blocks: Optional[int] = None,
+                 draft_len: int = 0):
         super().__init__(eng, cache_capacity=cache_capacity,
                          scheduled=scheduled, cache=cache,
                          schedule_policy=schedule_policy, mesh=mesh)
@@ -138,6 +194,46 @@ class ServeEngine(ProgramServeBase):
         lowerable = not self.is_audio and compiler.can_lower(arch)
         self.compiled = compile_prefill and lowerable
         self.compiled_decode = compile_decode and lowerable
+        # -- block-paged KV cache + speculative decode configuration ------
+        if kv_layout not in ("dense", "paged"):
+            raise ValueError(f"kv_layout must be 'dense' or 'paged', got "
+                             f"{kv_layout!r}")
+        self.kv_layout = kv_layout
+        self.paged = kv_layout == "paged"
+        self.draft_len = int(draft_len)
+        self.page_size = int(page_size)
+        if self.draft_len < 0:
+            raise ValueError(f"draft_len must be >= 0, got {draft_len}")
+        if self.paged or self.draft_len:
+            if not (self.compiled and self.compiled_decode):
+                blockers = self.lowering_blockers() or ["compile_* disabled"]
+                raise ValueError(
+                    "paged KV / speculative decode need the compiled "
+                    f"prefill+decode programs ({'; '.join(blockers)})")
+            if self.mexec is not None:
+                raise ValueError("paged KV / speculative decode are "
+                                 "single-device paths (mesh=None)")
+        self.alloc: Optional[BlockAllocator] = None
+        if self.paged:
+            if self.page_size < 1:
+                raise ValueError(f"page_size must be >= 1, got {page_size}")
+            # round max_seq UP to a page multiple: the gathered view is
+            # then shape-identical to the dense cache (bit-identity)
+            self.max_seq = T.num_pages(self.max_seq,
+                                       self.page_size) * self.page_size
+            self.kv_pages = T.num_pages(self.max_seq, self.page_size)
+            total = (int(kv_blocks) if kv_blocks is not None
+                     else batch_size * self.kv_pages)
+            self.alloc = BlockAllocator(total)
+            # host mirror of cache["tables"]; the POSITIVE sentinel `total`
+            # (one past the pool) makes unallocated-page writes drop --
+            # negative sentinels would WRAP in a JAX scatter
+            self._host_tables = np.full((batch_size, self.kv_pages), total,
+                                        np.int32)
+            self._slot_blocks: List[List[int]] = [[] for _ in
+                                                  range(batch_size)]
+        self._paged_jit = None        # (program, jitted paged prefill+merge)
+        self._spec_jit = None         # (program, jitted verify+commit step)
         # calibration only feeds the compiled static programs; skip the
         # (whole-param-tree) digest when both paths stay eager.  w4a8
         # shares w8a8's activation calibration (same float graph, same
@@ -202,17 +298,25 @@ class ServeEngine(ProgramServeBase):
         return self._program_key(self.arch, self.calib_id, tag="prefill")
 
     def _decode_key(self):
-        return self._program_key(self.arch, self.calib_id, tag="decode")
+        # page size and draft length ride the key: paged/dense x draft
+        # variants hold DISTINCT ProgramCache lines (and jitted traces --
+        # a [B, 1+k] verify trace is not a [B, 1] decode trace)
+        tag = ("decode"
+               + (f":p{self.page_size}" if self.paged else "")
+               + (f":k{self.draft_len}" if self.draft_len else ""))
+        return self._program_key(self.arch, self.calib_id, tag=tag)
 
     def _compile_mode(self, mode: str) -> ex.Program:
+        page = self.page_size if (self.paged and mode == "decode") else 0
         if self.calib_batches is None:
             return compiler.compile_lm(self.arch, scheduled=self.scheduled,
                                        policy=self.schedule_policy,
-                                       mode=mode)
+                                       mode=mode, page_size=page)
         return compiler.compile_lm(self.arch, scales=self._lm_scales(),
                                    scheduled=self.scheduled,
                                    policy=self.schedule_policy, mode=mode,
-                                   granularity=self.granularity)
+                                   granularity=self.granularity,
+                                   page_size=page)
 
     def prefill_program(self) -> ex.Program:
         """The compiled prefill program: ProgramCache hit, or compile."""
@@ -271,38 +375,174 @@ class ServeEngine(ProgramServeBase):
                     prog, params, cache, tokens, self.eng),
                 donate_argnums=(1,)))
 
+    def _run_paged_prefill(self, program: ex.Program, params, cache, batch,
+                           mask):
+        """Execute the prefill program and scatter the refilled slots'
+        collected (k, v) spans through the block table into the live paged
+        cache -- prefill + merge fused in one jitted step (`mask` [B] gates
+        rows; foreign rows' writes drop via the table sentinel)."""
+        tokens = batch["tokens"]
+        kvs: Dict[int, tuple] = {}
+        logits = ex.execute(program, params, tokens, self.eng, collect=kvs)
+        sel_mask = mask
+
+        def sel(o, n):
+            m = sel_mask.reshape((sel_mask.shape[0],) + (1,) * (o.ndim - 1))
+            return jnp.where(m, n.astype(o.dtype), o)
+
+        layers = []
+        for i in range(self.arch.n_layers):
+            entry = cache["layers"][i]
+            k, v = kvs[i]
+            if self.arch.layer_kind(i) == "local":
+                w = entry["k"].shape[1]
+                fresh = jax.tree_util.tree_map(jnp.zeros_like, entry)
+                fresh = T._kv_store(fresh, k[:, -w:], v[:, -w:], 0, self.eng)
+                entry = jax.tree_util.tree_map(sel, entry, fresh)
+            else:
+                entry = T._paged_prefill_store(entry, k, v, cache["tables"],
+                                               mask, self.eng,
+                                               self.page_size)
+            layers.append(entry)
+        pos = jnp.where(mask, jnp.asarray(tokens.shape[1], jnp.int32),
+                        jnp.asarray(cache["pos"], jnp.int32))
+        return logits, {"layers": layers, "tables": cache["tables"],
+                        "pos": pos}
+
+    def _paged_prefill_exec(self):
+        """Jitted paged prefill+merge (traced once per cached program)."""
+        program = self.prefill_program()
+        if self._paged_jit is None or self._paged_jit[0] is not program:
+            fn = jax.jit(functools.partial(self._run_paged_prefill, program),
+                         donate_argnums=(1,))
+            self._paged_jit = (program, fn)
+        return self._paged_jit[1]
+
+    def _spec_exec(self):
+        """The jitted speculative step: ONE [B, 1+k]-wide verify execution,
+        greedy acceptance, masked commit -- a single device round-trip per
+        burst, cache donated like the plain decode step."""
+        program = self.decode_program()
+        if self._spec_jit is None or self._spec_jit[0] is not program:
+            def step(params, cache, tokens, cap):
+                # tokens [B, W]: column 0 is each slot's current token, the
+                # rest are n-gram drafts; cap [B] bounds acceptance (0 for
+                # idle slots, so their rows can never commit)
+                logits, kvs = ex.execute_verify(program, params, cache,
+                                                tokens, self.eng)
+                g = jnp.argmax(logits, -1).astype(jnp.int32)   # [B, W]
+                match = (tokens[:, 1:] == g[:, :-1]).astype(jnp.int32)
+                accept = jnp.minimum(
+                    1 + jnp.sum(jnp.cumprod(match, axis=1), axis=1), cap)
+                cache = ex.commit_decode_kv(program, cache, kvs, accept,
+                                            self.eng)
+                idx = jnp.maximum(accept - 1, 0)
+                nxt = jnp.take_along_axis(g, idx[:, None], axis=1)[:, 0]
+                return accept, nxt, cache
+            self._spec_jit = (program, jax.jit(step, donate_argnums=(1,)))
+        return self._spec_jit[1]
+
     # -- request queue / continuous batching ---------------------------------
 
     def _empty_cache(self):
         if self.is_audio:
             cs = W.whisper_cache_schema(self.arch, self.batch, self.max_seq,
                                         self.eng)
+        elif self.paged:
+            cs = T.paged_cache_schema(self.arch, self.batch, self.max_seq,
+                                      self.eng, self.page_size,
+                                      num_blocks=self.alloc.num_blocks)
         else:
             cs = T.cache_schema(self.arch, self.batch, self.max_seq, self.eng)
         cache = jax.tree_util.tree_map(
             lambda s: jnp.zeros(s.shape, s.dtype), cs, is_leaf=is_spec)
+        if self.paged:
+            cache["tables"] = jnp.asarray(self._host_tables)
         if self.mexec is not None:
             cache = self.mexec.replicate(cache)   # KV cache stays replicated
         return cache
 
-    def submit(self, prompt, max_new_tokens: int = 16) -> int:
+    def submit(self, prompt, max_new_tokens: int = 16):
         """Queue one prompt; returns its ticket (the key of its decoded
-        token ids in run()'s results)."""
+        token ids in run()'s results), or a falsy `SubmitRejection` when
+        the request cannot be served (over max_seq, or over the paged
+        pool's total capacity) -- queue-level backpressure instead of an
+        exception, so callers can shed load without try/except."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if max_new_tokens < 1:
             raise ValueError(
                 f"max_new_tokens must be >= 1, got {max_new_tokens} (a "
                 "0-token request would never own its slot and be dropped)")
         if len(prompt) + max_new_tokens > self.max_seq:
-            raise ValueError(
-                f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens})"
-                f" exceeds max_seq={self.max_seq}")
+            self.serve_stats.rejected_requests += 1
+            return SubmitRejection(
+                reason="over_length",
+                detail=(f"prompt ({len(prompt)}) + max_new_tokens "
+                        f"({max_new_tokens}) exceeds "
+                        f"max_seq={self.max_seq}"),
+                prompt_len=len(prompt), max_new_tokens=int(max_new_tokens))
+        if self.paged:
+            need = T.num_pages(len(prompt) + max_new_tokens, self.page_size)
+            if need > self.alloc.num_blocks:
+                self.serve_stats.rejected_requests += 1
+                return SubmitRejection(
+                    reason="over_capacity",
+                    detail=(f"request needs {need} KV blocks but the pool "
+                            f"holds {self.alloc.num_blocks} total"),
+                    prompt_len=len(prompt),
+                    max_new_tokens=int(max_new_tokens))
         ticket = self._sched.submit(_LM, (prompt, int(max_new_tokens)))
         self.latency.submitted(ticket)
         return ticket
 
     def pending(self) -> int:
         return self._sched.pending(_LM)
+
+    def _blocks_needed(self, plen: int, mnt: int) -> int:
+        """Blocks covering positions [0, padded-prompt + new tokens); the
+        dense cache silently drops writes past max_seq, so cap there (the
+        paged sentinel reproduces the same drop)."""
+        return T.num_pages(min(plen + mnt, self.max_seq), self.page_size)
+
+    def _admit(self, nfree: int, plen: int):
+        """FIFO admission: dense takes up to `nfree` queued requests; paged
+        additionally gates each on free blocks, head-of-line (no
+        reordering -- arrival order is the serving contract), allocating
+        the request's blocks and writing its host table row."""
+        if not self.paged:
+            return self._sched.take(_LM, limit=nfree)
+        taken, reserved = [], 0
+        while len(taken) < nfree and self._sched.pending(_LM):
+            prompt, mnt = self._sched.peek(_LM)[0]
+            # gate on free minus what THIS wave already reserved: the
+            # actual allocs happen later in _bind_blocks, so probing each
+            # request against the raw free count would over-admit
+            need = self._blocks_needed(plen, mnt)
+            if not self.alloc.can_allocate(reserved + need):
+                break                 # backpressure: wait for frees
+            reserved += need
+            taken.extend(self._sched.take(_LM, limit=1))
+        return taken
+
+    def _bind_blocks(self, slot: int, plen: int, mnt: int) -> None:
+        """Allocate an admitted request's blocks into its slot's table row
+        (host mirror; pushed to device at the admission edge, the only
+        point where freed blocks may be reassigned)."""
+        need = self._blocks_needed(plen, mnt)
+        blocks = self.alloc.alloc(need)
+        self._slot_blocks[slot] = blocks
+        row = np.full(self.kv_pages, self.alloc.num_blocks, np.int32)
+        row[:need] = blocks
+        self._host_tables[slot] = row
+
+    def _release_blocks(self, slot: int) -> None:
+        """Response edge: return the slot's blocks and clear its row to the
+        drop sentinel (the dead slot's in-flight writes then land nowhere,
+        so a freed block reassigned at the NEXT admission edge -- after the
+        cleared row is pushed -- can never be corrupted)."""
+        self.alloc.free(self._slot_blocks[slot])
+        self._slot_blocks[slot] = []
+        self._host_tables[slot] = self.alloc.num_blocks
 
     def run(self) -> Dict[int, np.ndarray]:
         """Serve the queue to completion with continuous batching: prefill
@@ -326,7 +566,13 @@ class ServeEngine(ProgramServeBase):
         materializes a block only at a response edge -- when some slot's
         request completes at the end of a burst.  Blocks every live slot
         has consumed are dropped, so in-flight device memory stays bounded
-        by the longest active request."""
+        by the longest active request.
+
+        With `draft_len` set, the burst loop is the speculative variant
+        (`_run_speculative`): host-synced per burst (the n-gram drafter
+        needs emitted ids), one verify+commit device step per burst."""
+        if self.draft_len:
+            return self._run_speculative()
         results: Dict[int, np.ndarray] = {}
         sched, B = self._sched, self.batch
         if not sched.pending(_LM):
@@ -334,7 +580,8 @@ class ServeEngine(ProgramServeBase):
         plen = self.prefill_len
         if plen is None:
             plen = max(len(p) for p, _ in sched.peek(_LM))
-        prefill_exec = self._prefill_exec()
+        prefill_exec = (self._paged_prefill_exec() if self.paged
+                        else self._prefill_exec())
         decode_exec = self._decode_exec()
 
         cache = self._empty_cache()
@@ -365,38 +612,57 @@ class ServeEngine(ProgramServeBase):
         while True:
             free = [i for i in range(B) if remaining[i] == 0]
             if free and sched.pending(_LM):
-                taken = sched.take(_LM, limit=len(free))
-                toks = np.zeros((B, plen), np.int32)
-                mask = np.zeros(B, bool)
-                for slot, (ticket, (prompt, mnt)) in zip(free, taken):
-                    if len(prompt) > plen:
-                        raise ValueError(
-                            f"prompt of length {len(prompt)} exceeds the "
-                            f"run's fixed prefill width {plen} (set "
-                            f"prefill_len at construction)")
-                    toks[slot, plen - len(prompt):] = prompt
-                    mask[slot] = True
-                    if tickets[slot] is not None:
-                        self.serve_stats.slot_refills += 1
-                    tickets[slot] = ticket
-                    remaining[slot] = mnt
-                    start[slot] = step
-                # batched prefill of the refill slots only; foreign rows
-                # compute garbage that the masked merge throws away
-                logits, fresh = prefill_exec(self.params, self._empty_cache(),
-                                             {"tokens": jnp.asarray(toks)})
-                jmask = jnp.asarray(mask)
-                cache = self.jmerge(cache, fresh, jmask)
-                first = jnp.argmax(logits[:, -1, :], axis=-1)
-                cur = jnp.where(jmask[:, None], first[:, None], cur
-                                ).astype(jnp.int32)
-                self.serve_stats.prefill_calls += 1
-                self.serve_stats.requests += len(taken)
-                sched.next_epoch()
+                taken = self._admit(len(free), plen)
+                if taken:
+                    toks = np.zeros((B, plen), np.int32)
+                    mask = np.zeros(B, bool)
+                    for slot, (ticket, (prompt, mnt)) in zip(free, taken):
+                        if len(prompt) > plen:
+                            raise ValueError(
+                                f"prompt of length {len(prompt)} exceeds the "
+                                f"run's fixed prefill width {plen} (set "
+                                f"prefill_len at construction)")
+                        toks[slot, plen - len(prompt):] = prompt
+                        mask[slot] = True
+                        if tickets[slot] is not None:
+                            self.serve_stats.slot_refills += 1
+                        tickets[slot] = ticket
+                        remaining[slot] = mnt
+                        start[slot] = step
+                        if self.paged:
+                            self._bind_blocks(slot, plen, mnt)
+                    jmask = jnp.asarray(mask)
+                    # batched prefill of the refill slots only; foreign rows
+                    # compute garbage that the masked merge throws away
+                    if self.paged:
+                        # admission edge: push the host table (new rows AND
+                        # rows cleared at response edges) before any writes
+                        cache["tables"] = jnp.asarray(self._host_tables)
+                        logits, cache = prefill_exec(
+                            self.params, cache,
+                            {"tokens": jnp.asarray(toks)}, jmask)
+                    else:
+                        logits, fresh = prefill_exec(
+                            self.params, self._empty_cache(),
+                            {"tokens": jnp.asarray(toks)})
+                        cache = self.jmerge(cache, fresh, jmask)
+                    first = jnp.argmax(logits[:, -1, :], axis=-1)
+                    cur = jnp.where(jmask[:, None], first[:, None], cur
+                                    ).astype(jnp.int32)
+                    self.serve_stats.prefill_calls += 1
+                    self.serve_stats.requests += len(taken)
+                    sched.next_epoch()
 
             act = [i for i in range(B) if remaining[i] > 0]
             if not act:
                 if sched.pending(_LM):
+                    if self.paged and self.alloc.in_use == 0:
+                        prompt, mnt = sched.peek(_LM)[0]
+                        raise RuntimeError(
+                            f"queued request needs "
+                            f"{self._blocks_needed(plen, mnt)} KV blocks "
+                            f"but the pool holds {self.alloc.num_blocks} "
+                            "total; raise kv_blocks or shrink the request")
                     continue
                 break
             burst = int(min(self.decode_burst,
@@ -418,6 +684,8 @@ class ServeEngine(ProgramServeBase):
                 if remaining[i] == 0:     # response edge for this ticket
                     results[tickets[i]] = tokens_for(i, int(start[i]), step)
                     self.latency.completed(tickets[i])
+                    if self.paged:
+                        self._release_blocks(i)
                     finished = True
             if finished:
                 # drop blocks every live slot is past (bounded in-flight)
@@ -431,6 +699,143 @@ class ServeEngine(ProgramServeBase):
                 blocks = keep
         return results
 
+    @staticmethod
+    def _ngram_draft(hist: List[int], k: int, max_n: int = 3) -> List[int]:
+        """Self-speculative n-gram proposal: k draft tokens continuing
+        `hist` (prompt + emitted ids, most recent last).  Matches the
+        longest suffix n-gram (n <= max_n) against earlier history and
+        copies what followed its most recent occurrence; with no match it
+        repeats the last token.  Pure host-side -- no second model, no
+        device work; a wrong draft only costs its share of the burst."""
+        seq = list(hist)
+        for _ in range(k):
+            nxt = None
+            for n in range(min(max_n, len(seq) - 1), 0, -1):
+                suf = seq[-n:]
+                for j in range(len(seq) - n - 1, -1, -1):
+                    if seq[j:j + n] == suf:
+                        nxt = seq[j + n]
+                        break
+                if nxt is not None:
+                    break
+            seq.append(seq[-1] if nxt is None else nxt)
+        return seq[-k:]
+
+    def _run_speculative(self) -> Dict[int, np.ndarray]:
+        """Speculative continuous batching: each burst teacher-forces the
+        current token plus `draft_len` n-gram drafts through ONE [B, 1+k]
+        verify step, commits the longest greedy-consistent prefix, and
+        rolls the rest back for free (rejected drafts never touched the
+        cache).  Emitted ids are token-for-token identical to the greedy
+        one-token loop; each burst commits 1..1+k tokens.  Host-synced per
+        burst: the drafter consumes emitted ids (that sync replaces run()'s
+        async block machinery)."""
+        results: Dict[int, np.ndarray] = {}
+        sched, B, W = self._sched, self.batch, 1 + self.draft_len
+        if not sched.pending(_LM):
+            return results
+        plen = self.prefill_len
+        if plen is None:
+            plen = max(len(p) for p, _ in sched.peek(_LM))
+        prefill_exec = (self._paged_prefill_exec() if self.paged
+                        else self._prefill_exec())
+        spec_exec = self._spec_exec()
+
+        cache = self._empty_cache()
+        cache["pos"] = jnp.zeros((B,), jnp.int32)
+        cur = np.zeros(B, np.int32)
+        tickets: List[Optional[int]] = [None] * B
+        remaining = np.zeros(B, np.int64)
+        hist: List[List[int]] = [[] for _ in range(B)]  # prompt + emitted
+        out: List[List[int]] = [[] for _ in range(B)]
+
+        while True:
+            free = [i for i in range(B) if remaining[i] == 0]
+            if free and sched.pending(_LM):
+                taken = self._admit(len(free), plen)
+                if taken:
+                    toks = np.zeros((B, plen), np.int32)
+                    mask = np.zeros(B, bool)
+                    for slot, (ticket, (prompt, mnt)) in zip(free, taken):
+                        if len(prompt) > plen:
+                            raise ValueError(
+                                f"prompt of length {len(prompt)} exceeds "
+                                f"the run's fixed prefill width {plen} "
+                                "(set prefill_len at construction)")
+                        toks[slot, plen - len(prompt):] = prompt
+                        mask[slot] = True
+                        if tickets[slot] is not None:
+                            self.serve_stats.slot_refills += 1
+                        tickets[slot] = ticket
+                        remaining[slot] = mnt
+                        hist[slot] = [int(t) for t in prompt]
+                        out[slot] = []
+                        if self.paged:
+                            self._bind_blocks(slot, plen, mnt)
+                    jmask = jnp.asarray(mask)
+                    if self.paged:
+                        cache["tables"] = jnp.asarray(self._host_tables)
+                        logits, cache = prefill_exec(
+                            self.params, cache,
+                            {"tokens": jnp.asarray(toks)}, jmask)
+                    else:
+                        logits, fresh = prefill_exec(
+                            self.params, self._empty_cache(),
+                            {"tokens": jnp.asarray(toks)})
+                        cache = self.jmerge(cache, fresh, jmask)
+                    first = np.asarray(jnp.argmax(logits[:, -1, :], -1))
+                    for slot in free[:len(taken)]:
+                        cur[slot] = first[slot]
+                    self.serve_stats.prefill_calls += 1
+                    self.serve_stats.requests += len(taken)
+                    sched.next_epoch()
+
+            act = [i for i in range(B) if remaining[i] > 0]
+            if not act:
+                if sched.pending(_LM):
+                    if self.paged and self.alloc.in_use == 0:
+                        prompt, mnt = sched.peek(_LM)[0]
+                        raise RuntimeError(
+                            f"queued request needs "
+                            f"{self._blocks_needed(plen, mnt)} KV blocks "
+                            f"but the pool holds {self.alloc.num_blocks} "
+                            "total; raise kv_blocks or shrink the request")
+                    continue
+                break
+
+            tok = np.zeros((B, W), np.int32)
+            cap = np.zeros(B, np.int32)
+            for i in act:
+                tok[i, 0] = cur[i]
+                if W > 1:
+                    tok[i, 1:] = self._ngram_draft(hist[i] + [int(cur[i])],
+                                                   W - 1)
+                cap[i] = min(int(remaining[i]), W)
+            accept, nxt, cache = spec_exec(self.params, cache,
+                                           jnp.asarray(tok),
+                                           jnp.asarray(cap))
+            accept, nxt = np.asarray(accept), np.asarray(nxt)
+            self.serve_stats.decode_steps += 1
+            self.serve_stats.spec_steps += 1
+            self.serve_stats.spec_slot_steps += len(act)
+            self.serve_stats.active_slot_steps += len(act)
+            for i in act:
+                a = int(accept[i])
+                emitted = tok[i, :a].tolist()
+                out[i].extend(emitted)
+                hist[i].extend(emitted)
+                cur[i] = nxt[i]
+                remaining[i] -= a
+                self.serve_stats.committed_tokens += a
+                self.serve_stats.drafted_tokens += int(cap[i]) - 1
+                self.serve_stats.accepted_drafts += a - 1
+                if remaining[i] == 0:     # response edge
+                    results[tickets[i]] = np.asarray(out[i], np.int32)
+                    self.latency.completed(tickets[i])
+                    if self.paged:
+                        self._release_blocks(i)
+        return results
+
     # -- generation ----------------------------------------------------------
 
     def generate(self, prompts: Sequence[np.ndarray], max_new_tokens: int = 16,
@@ -441,6 +846,10 @@ class ServeEngine(ProgramServeBase):
         if self.is_audio or enc_embeds is not None:
             return self._generate_waves(prompts, max_new_tokens, enc_embeds)
         tickets = [self.submit(p, max_new_tokens) for p in prompts]
+        rejected = [t for t in tickets if isinstance(t, SubmitRejection)]
+        if rejected:
+            raise ValueError(f"{len(rejected)} of {len(prompts)} prompts "
+                             f"rejected: {rejected[0].detail}")
         results = self.run()
         return [results[t] for t in tickets]
 
@@ -474,11 +883,38 @@ class ServeEngine(ProgramServeBase):
 
     # -- stats ---------------------------------------------------------------
 
+    def _kv_memory(self) -> Dict[str, float]:
+        """Measured KV-cache footprint: total bytes of global-layer KV
+        state, and bytes a single request actually occupies (dense: the
+        worst-case max_seq envelope every slot reserves; paged: mean blocks
+        held per admitted request)."""
+        itm = 1 if self.eng.kv_cache_dtype == "int8" else 2
+        nkv, hd = self.arch.n_kv_heads, self.arch.head_dim
+        per_pos = 2 * nkv * hd * itm      # k + v
+        if self.eng.kv_cache_dtype == "int8":
+            per_pos += 2 * nkv * 4        # k_scale + v_scale
+        n_glb = sum(1 for i in range(self.arch.n_layers)
+                    if self.arch.layer_kind(i) not in
+                    ("local", "mamba", "recurrent"))
+        if self.paged:
+            block_bytes = self.page_size * per_pos * n_glb
+            st = self.alloc.stats
+            per_slot = (block_bytes * st.blocks_served / st.allocs
+                        if st.allocs else float(block_bytes * self.kv_pages))
+            return {"kv_bytes": float(block_bytes * self.alloc.num_blocks),
+                    "kv_bytes_per_slot": per_slot,
+                    "kv_block_bytes": float(block_bytes)}
+        per_slot = float(self.max_seq * per_pos * n_glb)
+        return {"kv_bytes": per_slot * self.batch,
+                "kv_bytes_per_slot": per_slot}
+
     def stats(self) -> Dict[str, object]:
         out = {"arch": self.arch.name,
                "compiled_prefill": self.compiled,
                "compiled_decode": self.compiled_decode,
                "schedule_policy": self.schedule_policy,
+               "kv_layout": self.kv_layout,
+               "draft_len": self.draft_len,
                # the eager-fallback gate, made loud: WHY an arch fell back
                "lowering_blockers": self.lowering_blockers()}
         out.update(self.cache_stats())
@@ -490,8 +926,19 @@ class ServeEngine(ProgramServeBase):
             "slot_refills": s.slot_refills,
             "slot_refill_rate": s.refill_rate,
             "slot_occupancy": s.slot_occupancy,
+            "rejected_requests": s.rejected_requests,
             "latency_ms": self.latency.percentiles(),
         })
+        out.update(self._kv_memory())
+        if self.paged:
+            out["page_size"] = self.page_size
+            out["kv_blocks"] = self.alloc.describe()
+        if self.draft_len:
+            out.update({
+                "spec_steps": s.spec_steps,
+                "accepted_draft_rate": s.accepted_draft_rate,
+                "tokens_per_burst": s.tokens_per_burst,
+            })
         if self.mexec is not None:
             out["mesh"] = self.mexec.describe()
             if self.tp_placement is not None:

@@ -1,0 +1,98 @@
+"""KV-cache block allocator: admission by actual occupancy, not envelopes.
+
+The dense serving cache reserves `max_seq` positions per slot regardless of
+a request's real length -- the worst-case envelope the paper's bandwidth
+argument warns about (PAPER.md §III: size transfers by what moves, not by
+what could move).  BlockAllocator manages the shared block pool behind
+`T.paged_cache_schema`: a request holds exactly
+ceil((prompt + max_new_tokens) / page_size) blocks, and `ServeEngine`
+admits by free blocks instead of free slots alone, so sustainable
+concurrency at fixed memory scales with the MEASURED request footprint.
+
+A free-list allocator is enough: all blocks are interchangeable (one page
+of every global layer's pool), so there is no external fragmentation --
+any `n <= len(free)` request is satisfiable.  The free list is LIFO, which
+keeps the working set of hot blocks dense.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+
+@dataclasses.dataclass
+class AllocStats:
+    """Lifetime counters (across run() calls)."""
+    allocs: int = 0            # satisfied allocation requests
+    frees: int = 0             # released allocations
+    blocks_served: int = 0     # total blocks handed out
+    denied: int = 0            # can_allocate=False probes (backpressure)
+    peak_in_use: int = 0
+
+
+class BlockAllocator:
+    """Free-list allocator over `num_blocks` interchangeable cache blocks."""
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 1:
+            raise ValueError(f"num_blocks must be >= 1, got {num_blocks}")
+        self.num_blocks = num_blocks
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self.stats = AllocStats()
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def utilization(self) -> float:
+        return self.in_use / self.num_blocks
+
+    def can_allocate(self, n: int) -> bool:
+        """Admission probe; a False result is counted as backpressure."""
+        ok = n <= len(self._free)
+        if not ok:
+            self.stats.denied += 1
+        return ok
+
+    def alloc(self, n: int) -> List[int]:
+        """Pop `n` block ids, or raise -- callers gate on can_allocate."""
+        if n < 0:
+            raise ValueError(f"cannot allocate {n} blocks")
+        if n > len(self._free):
+            raise RuntimeError(
+                f"out of KV blocks: want {n}, have {len(self._free)} free "
+                f"of {self.num_blocks} (admission must gate on "
+                "can_allocate)")
+        out = [self._free.pop() for _ in range(n)]
+        self.stats.allocs += 1
+        self.stats.blocks_served += n
+        self.stats.peak_in_use = max(self.stats.peak_in_use, self.in_use)
+        return out
+
+    def free(self, blocks: List[int]) -> None:
+        """Return a request's blocks to the pool (double-free is a bug)."""
+        for b in blocks:
+            if not 0 <= b < self.num_blocks:
+                raise ValueError(f"block id {b} out of range "
+                                 f"[0, {self.num_blocks})")
+            if b in self._free:
+                raise ValueError(f"double free of block {b}")
+        self._free.extend(blocks)
+        if blocks:
+            self.stats.frees += 1
+
+    def describe(self) -> Dict[str, object]:
+        return {
+            "num_blocks": self.num_blocks,
+            "free_blocks": self.free_blocks,
+            "in_use": self.in_use,
+            "utilization": self.utilization(),
+            "peak_in_use": self.stats.peak_in_use,
+            "allocs": self.stats.allocs,
+            "frees": self.stats.frees,
+            "denied": self.stats.denied,
+        }

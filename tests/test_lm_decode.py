@@ -18,7 +18,7 @@ from repro.core import engine as eng_lib
 from repro.core.config import EngineConfig
 from repro.models import transformer as T
 from repro.models.params import init_params, is_spec
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import ServeEngine, SubmitRejection
 
 ENG = EngineConfig(quant="none", backend="ref")
 W8 = EngineConfig(quant="w8a8", backend="ref")
@@ -347,8 +347,12 @@ class TestServeEngineDecode:
     def test_oversized_prompt_rejected(self):
         arch, params, _ = _setup("qwen2-1.5b")
         se = ServeEngine(arch, params, ENG, batch_size=2, max_seq=16)
-        with pytest.raises(ValueError):
-            se.submit(np.zeros(12, np.int32), max_new_tokens=8)
+        # queue-level backpressure: a falsy SubmitRejection, not a raise
+        rej = se.submit(np.zeros(12, np.int32), max_new_tokens=8)
+        assert isinstance(rej, SubmitRejection) and not rej
+        assert rej.reason == "over_length"
+        assert se.stats()["rejected_requests"] == 1
+        assert se.pending() == 0
         # a 0-token request would never own its slot; reject at submit
         with pytest.raises(ValueError):
             se.submit(np.zeros(4, np.int32), max_new_tokens=0)

@@ -54,6 +54,25 @@ class TestVariantKeys:
         for i, k in enumerate(keys):
             assert cache.peek(k) == f"prog{i}"
 
+    def test_paged_and_draft_decode_variants_coexist(self):
+        """Decode programs for dense vs paged KV (":p{page}") and
+        speculative draft widths (":k{draft}") are distinct cache lines:
+        switching page size or draft length can never alias a stale
+        trace whose cache layout or burst width no longer matches."""
+        cache = ProgramCache(capacity=8)
+        keys = [_key("scheduled:decode"),
+                _key("scheduled:decode:p8"),
+                _key("scheduled:decode:p16"),
+                _key("scheduled:decode:p8:k3"),
+                _key("scheduled:decode:p8:k4"),
+                _key("scheduled:decode:k3")]
+        assert len(set(keys)) == 6
+        for i, k in enumerate(keys):
+            cache.put(k, f"prog{i}")
+        assert len(cache) == 6 and cache.stats.evictions == 0
+        for i, k in enumerate(keys):
+            assert cache.peek(k) == f"prog{i}"
+
     def test_get_or_compile_counts_per_variant(self):
         cache = ProgramCache(capacity=4)
         k8, k4 = _key("d", "c0"), _key("d", "c0:w4g64")
