@@ -116,8 +116,8 @@ def serve_stats(wave_batch: bool = True, fleet=None, trace=None, cache=None):
     stats["requests_per_s"] = len(trace) / wall if wall > 0 else 0.0
     # served (fused) programs: per-level + time-weighted engine occupancy
     # under each leveling policy, and launches/image vs the unfused twin
-    occ = {"asap": [], "alap": [], "slack": []}
-    tw = {"asap": [], "slack": []}
+    occ = {"asap": [], "alap": [], "slack": [], "cost": []}
+    tw = {"asap": [], "slack": [], "cost": []}
     launches = {}
     for cfg, _, _ in fleet:
         program = engine.program_for(cfg.name)
@@ -125,8 +125,12 @@ def serve_stats(wave_batch: bool = True, fleet=None, trace=None, cache=None):
         unfused = compiler.build_graph(cfg)
         times = pm.cnn_node_times(g, cfg)
         for policy in occ:
-            sched = (program.schedule if policy == "asap"
-                     else compiler.level_schedule(g, policy))
+            if policy == "asap":
+                sched = program.schedule
+            elif policy == "cost":
+                sched = compiler.level_schedule(g, "cost", node_times=times)
+            else:
+                sched = compiler.level_schedule(g, policy)
             occ[policy].append(
                 compiler.engine_occupancy(g, sched)["occupancy"])
             if policy in tw:
@@ -144,8 +148,10 @@ def serve_stats(wave_batch: bool = True, fleet=None, trace=None, cache=None):
     stats["engine_occupancy"] = float(np.mean(occ["asap"]))
     stats["engine_occupancy_alap"] = float(np.mean(occ["alap"]))
     stats["engine_occupancy_slack"] = float(np.mean(occ["slack"]))
+    stats["engine_occupancy_cost"] = float(np.mean(occ["cost"]))
     stats["tw_occupancy"] = float(np.mean(tw["asap"]))
     stats["tw_occupancy_slack"] = float(np.mean(tw["slack"]))
+    stats["tw_occupancy_cost"] = float(np.mean(tw["cost"]))
     stats["launches"] = launches
     if wave_batch:
         # the same trace arriving all at once: full waves per model
@@ -284,8 +290,11 @@ def zoo_fusion_occupancy():
     for name, cfg in CNN_ZOO.items():
         g = compiler.build_graph(cfg)
         fg, _ = compiler.fuse_epilogues(g)
+        times = pm.cnn_node_times(fg, cfg)
         scheds = {p: compiler.level_schedule(fg, p)
                   for p in ("asap", "alap", "slack")}
+        scheds["cost"] = compiler.level_schedule(fg, "cost",
+                                                 node_times=times)
         occ = {p: compiler.engine_occupancy(fg, s)["occupancy"]
                for p, s in scheds.items()}
         unf, fus = compiler.launch_count(g), compiler.launch_count(fg)
@@ -295,8 +304,12 @@ def zoo_fusion_occupancy():
             "launch_reduction": 1.0 - fus / unf,
             "fused_ops": compiler.fusion_stats(fg)["fused_ops"],
             "occupancy": occ,
+            "modeled_makespan_cost":
+                scheds["cost"].stats.get("modeled_makespan", 0.0),
             "tw_occupancy_slack": compiler.time_weighted_occupancy(
-                fg, scheds["slack"], pm.cnn_node_times(fg, cfg))["occupancy"],
+                fg, scheds["slack"], times)["occupancy"],
+            "tw_occupancy_cost": compiler.time_weighted_occupancy(
+                fg, scheds["cost"], times)["occupancy"],
         }
     return out
 
@@ -329,8 +342,10 @@ def bench_payload(fleet=None, trace=None, stats=None, fr=None, zoo=None):
             "per_level_asap": stats["engine_occupancy"],
             "per_level_alap": stats["engine_occupancy_alap"],
             "per_level_slack": stats["engine_occupancy_slack"],
+            "per_level_cost": stats["engine_occupancy_cost"],
             "time_weighted_asap": stats["tw_occupancy"],
             "time_weighted_slack": stats["tw_occupancy_slack"],
+            "time_weighted_cost": stats["tw_occupancy_cost"],
         },
         "zoo": zoo,
     }, stats, fr
@@ -405,6 +420,7 @@ def fast_payload():
     times = pm.cnn_node_times(g, cfg)
     slack = compiler.level_schedule(g, "slack")
     alap = compiler.level_schedule(g, "alap")
+    cost = compiler.level_schedule(g, "cost", node_times=times)
     fs = compiler.fusion_stats(g)
     stats["engine_occupancy"] = compiler.engine_occupancy(
         g, program.schedule)["occupancy"]
@@ -412,10 +428,14 @@ def fast_payload():
         g, alap)["occupancy"]
     stats["engine_occupancy_slack"] = compiler.engine_occupancy(
         g, slack)["occupancy"]
+    stats["engine_occupancy_cost"] = compiler.engine_occupancy(
+        g, cost)["occupancy"]
     stats["tw_occupancy"] = compiler.time_weighted_occupancy(
         g, program.schedule, times)["occupancy"]
     stats["tw_occupancy_slack"] = compiler.time_weighted_occupancy(
         g, slack, times)["occupancy"]
+    stats["tw_occupancy_cost"] = compiler.time_weighted_occupancy(
+        g, cost, times)["occupancy"]
     stats["launches"] = {cfg.name: {
         "unfused": compiler.launch_count(unfused),
         "fused": fs["launches"],
@@ -448,9 +468,11 @@ def summary_line() -> str:
             f"per-level engine occupancy "
             f"{100 * stats['engine_occupancy']:.1f}% asap / "
             f"{100 * stats['engine_occupancy_alap']:.1f}% alap / "
-            f"{100 * stats['engine_occupancy_slack']:.1f}% slack "
-            f"(time-weighted {100 * stats['tw_occupancy']:.1f}% -> "
-            f"{100 * stats['tw_occupancy_slack']:.1f}%); "
+            f"{100 * stats['engine_occupancy_slack']:.1f}% slack / "
+            f"{100 * stats['engine_occupancy_cost']:.1f}% cost "
+            f"(time-weighted {100 * stats['tw_occupancy']:.1f}% asap -> "
+            f"{100 * stats['tw_occupancy_slack']:.1f}% slack -> "
+            f"{100 * stats['tw_occupancy_cost']:.1f}% cost); "
             f"wave fill-rate {100 * fr['continuous_fill_rate']:.1f}% "
             f"continuous vs {100 * fr['baseline_fill_rate']:.1f}% "
             f"pad-and-mask; BENCH_serve.json: {path}")

@@ -1,0 +1,142 @@
+#!/usr/bin/env python
+"""Perf-regression gate over BENCH_serve.json.
+
+Compares a FRESH smoke run (fast legs of the serving benchmarks) against
+the committed snapshot (`git show HEAD:BENCH_serve.json`) and fails when
+a smoke leg regresses past the tolerance:
+
+  * any throughput figure (ops/s, tokens/s) drops by more than
+    --tolerance (default 20%), or
+  * any p99 latency rises by more than --tolerance.
+
+The guard reads the committed snapshot from git (NOT the working tree --
+the fresh legs merge-write into the working-tree file while running, so
+the tree copy is already contaminated by the run being judged).  Legs
+are the SMOKE subset only: throughput is noisy on shared CI hosts, and
+the slow full legs already re-record the snapshot on release runs.
+
+    PYTHONPATH=src:. python scripts/bench_guard.py [--tolerance 0.2]
+                                                   [--no-run]
+
+--no-run skips the fresh smoke run and re-checks whatever the working
+tree currently holds against HEAD -- the mode check.sh uses, since its
+earlier steps have just regenerated the tree snapshot.
+"""
+import argparse
+import json
+import subprocess
+import sys
+
+BENCH = "BENCH_serve.json"
+
+# (human label, path into the snapshot dict, "higher"|"lower" is better)
+# Only legs the smoke runs refresh: serve_lm --fast rewrites lm_decode's
+# paged/spec fields; serve_mixed --summary --fast rewrites "mixed_fast"
+# (the full "mixed" block is release-run only and keeps its committed
+# numbers).  Full-run-only fields (serve_cnn ops_per_s, fleet sweep) are
+# checked when present but skipped when either side lacks them.
+GUARDED = [
+    ("lm spec tokens/s", ("lm_decode", "tokens_per_s_spec"), "higher"),
+    ("lm dense tokens/s", ("lm_decode", "tokens_per_s_dense"), "higher"),
+    ("lm spec p99 ms", ("lm_decode", "latency_ms", "p99_ms"), "lower"),
+    ("mixed interleaved ops/s", ("mixed_fast", "interleaved", "ops_per_s"),
+     "higher"),
+    ("mixed interleaved tok/s",
+     ("mixed_fast", "interleaved", "tokens_per_s"), "higher"),
+    ("mixed interleaved p99 ms",
+     ("mixed_fast", "interleaved", "latency_ms", "p99_ms"), "lower"),
+    ("cnn serve ops/s", ("ops_per_s",), "higher"),
+]
+
+
+def _dig(d, path):
+    for k in path:
+        if not isinstance(d, dict) or k not in d:
+            return None
+        d = d[k]
+    return d if isinstance(d, (int, float)) else None
+
+
+def committed_snapshot():
+    """BENCH_serve.json as of HEAD, or None when it has no committed copy
+    (first PR that records it: nothing to regress against)."""
+    try:
+        out = subprocess.run(["git", "show", f"HEAD:{BENCH}"],
+                             capture_output=True, text=True, check=True)
+    except (subprocess.CalledProcessError, OSError):
+        return None
+    try:
+        return json.loads(out.stdout)
+    except json.JSONDecodeError:
+        return None
+
+
+def fresh_snapshot(run: bool):
+    """Refresh the smoke legs (merge-writing the working-tree snapshot),
+    then load it."""
+    if run:
+        for leg in (["-m", "benchmarks.serve_lm", "--fast"],
+                    ["-m", "benchmarks.serve_mixed", "--summary", "--fast"]):
+            subprocess.run([sys.executable] + leg, check=True)
+    try:
+        with open(BENCH) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+def compare(old, new, tolerance):
+    """[(label, old, new, ratio, ok)] for every guarded leg present in
+    BOTH snapshots; absent legs are skipped, not failed."""
+    rows = []
+    for label, path, better in GUARDED:
+        a, b = _dig(old, path), _dig(new, path)
+        if a is None or b is None or a <= 0:
+            continue
+        ratio = b / a
+        ok = ratio >= 1.0 - tolerance if better == "higher" \
+            else ratio <= 1.0 + tolerance
+        rows.append((label, a, b, ratio, ok))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="fractional regression allowed (default 0.2)")
+    ap.add_argument("--no-run", action="store_true",
+                    help="judge the working-tree snapshot as-is instead "
+                         "of re-running the smoke legs first")
+    args = ap.parse_args(argv)
+
+    old = committed_snapshot()
+    if old is None:
+        print("bench_guard: no committed BENCH_serve.json at HEAD; "
+              "nothing to regress against -- pass")
+        return 0
+    new = fresh_snapshot(run=not args.no_run)
+    if new is None:
+        print("bench_guard: FAIL -- fresh snapshot missing/unreadable")
+        return 1
+
+    rows = compare(old, new, args.tolerance)
+    if not rows:
+        print("bench_guard: no guarded legs present in both snapshots "
+              "-- pass (vacuous)")
+        return 0
+    failed = [r for r in rows if not r[4]]
+    for label, a, b, ratio, ok in rows:
+        mark = "ok  " if ok else "FAIL"
+        print(f"bench_guard: {mark} {label}: {a:.2f} -> {b:.2f} "
+              f"({ratio:.2f}x, tol {args.tolerance:.0%})")
+    if failed:
+        print(f"bench_guard: FAIL -- {len(failed)}/{len(rows)} guarded "
+              f"legs regressed past {args.tolerance:.0%}")
+        return 1
+    print(f"bench_guard: pass -- {len(rows)} guarded legs within "
+          f"{args.tolerance:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -38,3 +38,15 @@ echo "== fleet scaling smoke (forced 8 host devices) =="
 # scales monotonically with the mesh (the full {1,2,4,8} sweep that
 # records BENCH_serve.json's "fleet" block runs without --smoke)
 python -m benchmarks.serve_fleet --smoke
+
+echo "== mixed co-tenancy smoke (CNN waves + LM decode on one fabric) =="
+# interleaved vs serialized at equal work through the FabricPump; asserts
+# bit-identical outputs vs isolated engines and merge-writes the "mixed"
+# block (ops/s, tokens/s, p50/p99, merged-schedule occupancy per policy)
+python -m benchmarks.serve_mixed --summary --fast
+
+echo "== bench guard (fresh smoke vs committed BENCH_serve.json) =="
+# the steps above just regenerated the working-tree snapshot, so judge it
+# as-is against HEAD's copy: >20% ops/s or p99 regression on a smoke leg
+# fails the gate
+python scripts/bench_guard.py --no-run

@@ -24,7 +24,8 @@ calibration-id) in its own ProgramCache.
 from repro.compiler.calibrate import (ChannelCalibrator, PercentileCalibrator,
                                       calibrate, make_calibrator)
 from repro.compiler.executor import (Program, compile_cnn, compile_lm,
-                                     execute, execute_decode, program_cache,
+                                     execute, execute_decode,
+                                     execute_interleaved, program_cache,
                                      rope_table_stats, schedule_variant)
 from repro.compiler.graph import (AddOp, AttnOp, ConcatOp, ConvOp, DwcOp,
                                   EmbedOp, Epilogue, Graph, HeadOp, InputOp,
@@ -37,10 +38,12 @@ from repro.compiler.passes import (QuantPlan, dynamic_roundtrip_count,
                                    fold_weight_layouts, fuse_epilogues,
                                    fuse_projections, fusion_stats,
                                    launch_count, residual_chains, set_param)
-from repro.compiler.schedule import (Schedule, engine_occupancy, engine_unit,
-                                     level_schedule, schedule_stats,
+from repro.compiler.schedule import (MergedSchedule, Schedule,
+                                     engine_occupancy, engine_unit,
+                                     level_schedule, merge_schedules,
+                                     modeled_makespan, schedule_stats,
                                      time_weighted_occupancy,
-                                     validate_schedule)
+                                     validate_merged, validate_schedule)
 
 
 def compile_calibrated(cfg, params, batches, eng=None,
@@ -101,15 +104,18 @@ def compile_lm_calibrated(arch, params, batches, eng=None,
 __all__ = [
     "AddOp", "AttnOp", "ChannelCalibrator", "ConcatOp", "ConvOp", "DwcOp",
     "EmbedOp", "Epilogue", "Graph", "HeadOp", "InputOp", "LinearGroupOp",
-    "LinearOp", "MulOp", "NormOp", "PercentileCalibrator", "PoolOp",
-    "Program", "QuantPlan", "Schedule", "ViewOp", "build_graph", "calibrate", "calibrate_lm", "can_lower",
+    "LinearOp", "MergedSchedule", "MulOp", "NormOp", "PercentileCalibrator",
+    "PoolOp", "Program", "QuantPlan", "Schedule", "ViewOp", "build_graph",
+    "calibrate", "calibrate_lm", "can_lower",
     "compile_calibrated", "compile_cnn", "compile_lm",
     "compile_lm_calibrated", "dynamic_roundtrip_count", "engine_occupancy",
-    "engine_unit", "execute", "execute_decode", "f32_roundtrip_edges",
+    "engine_unit", "execute", "execute_decode", "execute_interleaved",
+    "f32_roundtrip_edges",
     "fold_requant", "fold_weight_layouts", "fuse_epilogues",
     "fuse_projections", "fusion_stats", "get_param", "launch_count",
     "level_schedule", "lower_transformer", "lowering_blockers",
-    "make_calibrator", "program_cache", "residual_chains",
+    "make_calibrator", "merge_schedules", "modeled_makespan",
+    "program_cache", "residual_chains",
     "rope_table_stats", "schedule_stats", "schedule_variant", "set_param",
-    "time_weighted_occupancy", "validate_schedule",
+    "time_weighted_occupancy", "validate_merged", "validate_schedule",
 ]

@@ -1,0 +1,339 @@
+"""Engine-tile cost model: modeled seconds per op of a compiled program.
+
+The paper's scheduling wins (Section IV-A/IV-C) come from a per-engine CTC
+analysis: each op's time on its engine unit is
+
+    t = max(effective_ops / engine_peak, bytes / HBM_BW)
+
+with the utilization penalties the DSE model (core/dse.py) prices --
+contraction/output-channel MXU alignment for Conv-PE GEMMs, VPU-bound
+depthwise convs, window folding on the Low-Channel unit.  This module is
+the compiler-side home of that pricing so the scheduler itself can be
+cost-driven: `level_schedule(policy="cost")` and `merge_schedules` weigh
+placement by `{node_id: seconds}` dicts produced here, and
+`benchmarks/perf_model.py` re-exports everything for the modeling tables.
+
+Two graph walks price both frontends:
+
+  * `cnn_node_times(graph, cfg)` -- shapes from the model schema
+    (models.cnn.cnn_schema) + stride/pool propagation, so fused programs
+    are priced as what they execute (a fused conv absorbs its residual
+    read; the standalone MISC pass disappears);
+  * `lm_node_times(graph, arch, batch, seq)` -- GEMM dims recovered from
+    the param-path suffix the lowering wrote (wq/wk/wv/wo/wg/wu/wd), so
+    one walk prices prefill and decode programs.
+
+`default_node_times(graph, cfg, kind)` dispatches on the program's config
+type -- the hook executor._finish_program uses to price programs compiled
+with the cost policy without the caller threading times through.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.core import dse
+
+PEAK_INT8 = dse.PEAK_INT8_OPS      # MXU int8
+PEAK_VPU = 5.0e12                  # VPU int ops/s (8x128 lanes, ~1 GHz, FMA)
+HBM = dse.HBM_BW
+PEAK_F32_VPU = PEAK_VPU / 4        # f32 VPU ops/s (MISC float domain)
+
+# Paper Section V-B: measured Conv-PE utilization on ResNet50 stage 0.  Used
+# as the stage-0 utilization of the no-low-channel-unit baseline (the
+# XVDPU-analog); our unit reaches the window-folded MXU coverage instead.
+STAGE0_BASELINE_UTIL = 0.131
+VPU_NATIVE_EFF = 0.4               # XLA grouped-conv VPU efficiency
+
+
+@dataclass
+class EngineModel:
+    # dwc_mode: "engine" (DWC PE: tiled VPU + fused requant),
+    #           "vpu"    (TPU-native XLA grouped conv: VPU, lower efficiency),
+    #           "dense"  (XVDPU-analog: depthwise on the GEMM engine --
+    #                     channel-diagonalized, ops x C inflation; this is
+    #                     what our baseline code path actually executes)
+    dwc_mode: str = "engine"
+    use_low_channel: bool = True
+    fused_epilogue: bool = True    # MISC on engine: no extra eltwise pass
+    # static_act: calibrated static scales -> activations stay int8 between
+    # engines (the compiled engine-program path).  False = the dynamic-f32
+    # pipeline: every edge is carried at f32 and re-quantized per call (an
+    # extra read-f32/write-int8 pass in front of every engine).
+    static_act: bool = True
+
+    @property
+    def use_dwc_engine(self):
+        return self.dwc_mode == "engine"
+
+    @property
+    def act_bytes(self) -> int:
+        return 1 if self.static_act else 4
+
+
+def _conv_time(px: int, ic: int, oc: int, k: int, eng: EngineModel,
+               first_layer: bool = False) -> float:
+    """One standard conv: px output pixels, k x k window."""
+    ops = 2.0 * px * ic * oc * k * k
+    # The engine always reads int8 (static edges, or the int8 the dynamic
+    # requant pass just wrote); dynamic additionally pays that pass (read
+    # f32 + write int8) and emits its output at f32.
+    in_bytes = px * ic            # stride-adjusted approx
+    w_bytes = k * k * ic * oc
+    out_bytes = px * oc * eng.act_bytes
+    # Both pipelines quantize the f32 input image once at the boundary;
+    # only the dynamic pipeline repeats the pass at every layer.
+    quant_bytes = (px * ic * 5
+                   if (first_layer or not eng.static_act) else 0)
+    if first_layer:
+        if eng.use_low_channel:
+            # window folding (contraction = ic*k*k) + concurrency: the unit
+            # runs while the main engines proceed (paper Section V-B), so
+            # only its memory traffic remains on the critical path.
+            return (in_bytes + w_bytes + out_bytes + quant_bytes) / HBM
+        util = STAGE0_BASELINE_UTIL
+    else:
+        util = dse.mxu_utilization(min(ic, 128), min(oc, 128), kk=1)
+    util = max(util, 1e-3)
+    t_compute = ops / (PEAK_INT8 * util)
+    t_mem = (in_bytes + w_bytes + out_bytes + quant_bytes) / HBM
+    if not eng.fused_epilogue:
+        t_mem += 2.0 * px * oc * 4 / HBM       # i32 psum round-trip
+    return max(t_compute, t_mem)
+
+
+def _dwc_time(px: int, c: int, k: int, eng: EngineModel) -> float:
+    ops = 2.0 * px * c * k * k
+    # int8 engine read + act_bytes output write (see _conv_time)
+    byts = px * c * (1 + eng.act_bytes) + k * k * c
+    if not eng.static_act:
+        byts += px * c * 5            # dynamic requant pass: read f32/write i8
+    if eng.dwc_mode == "engine":
+        t_compute = ops / PEAK_VPU
+    elif eng.dwc_mode == "vpu":
+        t_compute = ops / (PEAK_VPU * VPU_NATIVE_EFF)
+    else:
+        # "dense": diagonalized GEMM on the MXU (ops x C inflation,
+        # utilization capped by the 128-lane contraction)
+        dense_ops = 2.0 * px * c * c * k * k
+        util = dse.mxu_utilization(min(c, 128), min(c, 128))
+        t_compute = dense_ops / (PEAK_INT8 * max(util, 1e-3))
+        byts += k * k * c * c                  # dense weight reads
+    t_mem = byts / HBM
+    if not eng.fused_epilogue:
+        t_mem += 2.0 * px * c * 4 / HBM
+    return max(t_compute, t_mem)
+
+
+def _eltwise_time(px: int, c: int, eng: EngineModel) -> float:
+    if eng.fused_epilogue:
+        return 0.0                 # fused into the producing kernel
+    # separate read-read-write pass at the pipeline's activation width
+    return 3.0 * px * c * eng.act_bytes / HBM
+
+
+def _gemm_time(m: int, k: int, n: int, act_bytes: int = 1) -> float:
+    """One int8 Conv-PE GEMM: [m, k] @ [k, n]."""
+    ops = 2.0 * m * k * n
+    util = max(dse.mxu_utilization(min(k, 128), min(n, 128)), 1e-3)
+    byts = m * k * act_bytes + k * n + m * n * act_bytes
+    return max(ops / (PEAK_INT8 * util), byts / HBM)
+
+
+def _eltwise_f32_time(elems: int, n_in: int = 1) -> float:
+    """A MISC-core f32 elementwise pass: n_in reads + 1 write."""
+    return (n_in + 1) * elems * 4 / HBM
+
+
+OURS = EngineModel()                       # compiled static-int8 pipeline
+OURS_DYNAMIC = EngineModel(static_act=False)
+BASELINE = EngineModel(dwc_mode="dense", use_low_channel=False,
+                       fused_epilogue=False)
+TPU_NATIVE = EngineModel(dwc_mode="vpu", use_low_channel=False,
+                         fused_epilogue=False)
+NO_LOWPE = EngineModel(use_low_channel=False)
+NO_DWC = EngineModel(dwc_mode="dense")
+
+
+# ---------------------------------------------------------------------------
+# CNN program node times: the GRAPH walk (prices fused programs)
+# ---------------------------------------------------------------------------
+
+def _shape_of(schema, path):
+    from repro.compiler.graph import get_param
+    return get_param(schema, path).shape
+
+
+def _pool_hw(h: int, pool: str, k: int, stride: int) -> int:
+    """VALID-window output size -- the math the executor and the fused
+    kernels actually run (kernels/_epilogue.pooled_hw)."""
+    if pool == "global":
+        return 1
+    return max((h - k) // max(stride, 1) + 1, 1)
+
+
+def cnn_node_times(graph, cfg, eng: Optional[EngineModel] = None
+                   ) -> Dict[int, float]:
+    """Modeled seconds per op of a CNN program graph ({node_id: seconds}).
+
+    Walks the compiled graph itself (not the CNNConfig), so epilogue-fused
+    programs are priced as what they execute: a fused node costs its
+    conv/dwc launch plus the residual operand read, while the absorbed MISC
+    add/pool passes (their read-read-write HBM traffic) disappear.  Feeds
+    compiler.time_weighted_occupancy and the cost-driven scheduler.
+
+    Channel/spatial shapes come from the model schema (cnn_schema) + stride
+    propagation, so the walk needs no parameter values.
+    """
+    from repro.compiler import graph as G
+    from repro.models.cnn import cnn_schema
+
+    eng = eng or OURS
+    schema = cnn_schema(cfg)
+    hw: dict = {}
+    ch: dict = {}
+    out: Dict[int, float] = {}
+    for n in graph.nodes:
+        if isinstance(n, G.InputOp):
+            hw[n.id], ch[n.id] = cfg.input_hw, cfg.input_ch
+            out[n.id] = 0.0
+            continue
+        src = n.inputs[0] if n.inputs else None
+        if isinstance(n, G.ConvOp):
+            k, _, ic, oc = _shape_of(schema, n.w)
+            h = -(-hw[src] // n.stride)
+            px = h * h
+            t = _conv_time(px, ic, oc, k, eng, first_layer=n.first_layer)
+            ep = n.epilogue
+            if ep is not None and ep.add:
+                t += px * oc * eng.act_bytes / HBM     # residual operand read
+            hw[n.id], ch[n.id] = h, oc
+            if ep is not None and ep.pool != "none":
+                hw[n.id] = _pool_hw(h, ep.pool, ep.pool_kernel,
+                                    ep.pool_stride)
+            out[n.id] = t
+        elif isinstance(n, G.DwcOp):
+            k, _, c = _shape_of(schema, n.w)
+            h = -(-hw[src] // n.stride)
+            px = h * h
+            t = _dwc_time(px, c, k, eng)
+            ep = n.epilogue
+            if ep is not None and ep.add:
+                t += px * c * eng.act_bytes / HBM
+            hw[n.id], ch[n.id] = h, c
+            if ep is not None and ep.pool != "none":
+                hw[n.id] = _pool_hw(h, ep.pool, ep.pool_kernel,
+                                    ep.pool_stride)
+            out[n.id] = t
+        elif isinstance(n, G.AddOp):
+            px = hw[src] * hw[src]
+            c = ch[src]
+            # a standalone MISC add is a read-read-write pass at the
+            # pipeline's activation width (what fusion eliminates)
+            out[n.id] = 3.0 * px * c * eng.act_bytes / HBM
+            hw[n.id], ch[n.id] = hw[src], c
+        elif isinstance(n, G.PoolOp):
+            h_out = _pool_hw(hw[src], n.pool, n.kernel, n.stride)
+            c = ch[src]
+            out[n.id] = ((hw[src] * hw[src] + h_out * h_out)
+                         * c * eng.act_bytes / HBM)
+            hw[n.id], ch[n.id] = h_out, c
+        elif isinstance(n, G.ConcatOp):
+            hw[n.id] = hw[src]
+            ch[n.id] = sum(ch[i] for i in n.inputs)
+            out[n.id] = 0.0                    # bank interleave
+        elif isinstance(n, G.LinearOp):
+            ci, co = _shape_of(schema, n.w)
+            out[n.id] = 2.0 * ci * co / PEAK_INT8
+            hw[n.id], ch[n.id] = 1, co
+        else:
+            out[n.id] = 0.0
+            hw[n.id], ch[n.id] = hw.get(src, 1), ch.get(src, 1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# LM program node times
+# ---------------------------------------------------------------------------
+
+def lm_node_times(graph, arch, batch: int, seq: int,
+                  cache_len: int = 0) -> Dict[int, float]:
+    """Modeled seconds per op of an LM program graph.
+
+    `seq` is the query length (1 for a DecodeStep program); `cache_len` the
+    ACTUAL cached length attention reads for decode (the slots' mean
+    position, NOT max_seq -- pricing update-mode by the worst-case envelope
+    overstated attention cost for short sequences).  Block-paged AttnOps
+    (n.page_size > 0) round that span up to a page multiple: a request
+    occupies -- and the gather moves -- whole blocks.  Linear dims come
+    from the param-path suffix the lowering wrote (wq/wk/wv/wo/wg/wu/wd),
+    so the same walk prices prefill and decode.
+    """
+    from repro.compiler import graph as G
+
+    d, ff, v = arch.d_model, arch.d_ff, arch.vocab_size
+    nh, nkv, hd = arch.n_heads, arch.n_kv_heads, arch.head_dim
+    span = cache_len if cache_len else seq
+    m = batch * seq
+    dims = {"wq": (d, nh * hd), "wk": (d, nkv * hd), "wv": (d, nkv * hd),
+            "wo": (nh * hd, d), "wg": (d, ff), "wu": (d, ff), "wd": (ff, d)}
+    out: Dict[int, float] = {}
+    for n in graph.nodes:
+        if isinstance(n, G.LinearGroupOp):
+            # One fused launch over the N-concatenated members: same MACs
+            # and A-read as the members, one A-fetch instead of len(ws)
+            kns = [dims.get(p[-1] if p else "", (d, d)) for p in n.ws]
+            out[n.id] = _gemm_time(m, kns[0][0], sum(kn[1] for kn in kns))
+        elif isinstance(n, G.LinearOp):
+            kn = dims.get(n.w[-1] if n.w else "", (d, d))
+            out[n.id] = _gemm_time(m, *kn)
+        elif isinstance(n, G.HeadOp):
+            rows = batch * (1 if n.last_only else seq)
+            out[n.id] = _gemm_time(rows, d, v, act_bytes=4)
+        elif isinstance(n, G.AttnOp):
+            aspan = span
+            if n.mode == "update" and n.page_size:
+                aspan = -(-aspan // n.page_size) * n.page_size
+            window = min(n.window, aspan) if n.window else aspan
+            flops = 4.0 * batch * seq * window * nh * hd    # qk + pv
+            byts = (2 * batch * window * nkv * hd * 2        # kv reads (bf16)
+                    + 3 * m * nh * hd * 4)                   # q in, ctx out
+            out[n.id] = max(flops / PEAK_F32_VPU, byts / HBM)
+        elif isinstance(n, (G.NormOp, G.MulOp, G.AddOp)):
+            out[n.id] = _eltwise_f32_time(m * d, n_in=len(n.inputs))
+        elif isinstance(n, G.EmbedOp):
+            out[n.id] = m * d * 4 / HBM                      # row gather
+        else:                                               # InputOp etc.
+            out[n.id] = 0.0
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher: price any program's graph from its frontend config
+# ---------------------------------------------------------------------------
+
+# Nominal shapes the cost-driven scheduler prices programs at when the
+# caller doesn't thread explicit times: what matters to placement is the
+# RATIO between ops (a decode GEMM vs a norm), which is shape-stable.
+DEFAULT_LM_BATCH = 1
+DEFAULT_PREFILL_SEQ = 128
+DEFAULT_DECODE_CACHE = 128
+
+
+def default_node_times(graph, cfg, kind: str = "forward"
+                       ) -> Dict[int, float]:
+    """{node_id: seconds} for any compiled program, dispatched on its
+    frontend config type (CNNConfig -> cnn walk, ArchConfig -> lm walk).
+    Unknown config types price every node at 0.0 (the cost policy then
+    degenerates to its earliest-level tie-break, i.e. ASAP)."""
+    from repro.core.config import ArchConfig, CNNConfig
+
+    if isinstance(cfg, CNNConfig):
+        return cnn_node_times(graph, cfg)
+    if isinstance(cfg, ArchConfig):
+        if kind == "decode":
+            return lm_node_times(graph, cfg, DEFAULT_LM_BATCH, 1,
+                                 cache_len=DEFAULT_DECODE_CACHE)
+        return lm_node_times(graph, cfg, DEFAULT_LM_BATCH,
+                             DEFAULT_PREFILL_SEQ)
+    return {n.id: 0.0 for n in graph.nodes}

@@ -57,7 +57,8 @@ from repro.compiler.graph import (AddOp, AttnOp, ConcatOp, ConvOp, DwcOp,
                                   OpNode, PoolOp, ViewOp, build_graph,
                                   get_param, lower_transformer)
 from repro.compiler.passes import QuantPlan, fold_requant
-from repro.compiler.schedule import Schedule, level_schedule
+from repro.compiler.schedule import (MergedSchedule, Schedule,
+                                     level_schedule, merge_schedules)
 from repro.core.config import ArchConfig, CNNConfig, EngineConfig
 from repro.core.quant import (Q4Tensor, QTensor, quantize_act_dynamic,
                               quantize_static)
@@ -224,7 +225,16 @@ def _finish_program(g: Graph, cfg, scales, scheduled: bool,
                     granularity: str = "per_tensor") -> Program:
     plan = (fold_requant(g, scales, granularity=granularity)
             if scales is not None else None)
-    sched = level_schedule(g, policy) if scheduled else None
+    sched = None
+    if scheduled:
+        times = None
+        if policy in ("cost", "slack"):
+            # Time-aware policies price each node with the analytic tile
+            # model (compiler/cost.py); count-based behavior is preserved
+            # when callers invoke level_schedule directly without times.
+            from repro.compiler import cost as cost_lib
+            times = cost_lib.default_node_times(g, cfg, kind)
+        sched = level_schedule(g, policy, node_times=times)
     return Program(g, cfg, plan, sched, kind)
 
 
@@ -607,9 +617,13 @@ def _head_eval(n: HeadOp, x: jax.Array, params) -> jax.Array:
 # Dynamic mode (eager-equivalent; also the calibration vehicle)
 # ---------------------------------------------------------------------------
 
-def _execute_dynamic(program: Program, params, images, eng: EngineConfig,
-                     observer=None, collect: Optional[dict] = None,
-                     decode: Optional[_DecodeCtx] = None) -> jax.Array:
+def _dynamic_eval(program: Program, params, images, eng: EngineConfig,
+                  collect: Optional[dict] = None,
+                  decode: Optional[_DecodeCtx] = None):
+    """The dynamic-mode eval_node closure for one program invocation.
+
+    Factored out of _execute_dynamic so execute_interleaved can drive two
+    programs' evaluators on one merged tick stream."""
     rope = _rope_table
     rope_d = _rope_decode_memo(decode.pos) if decode is not None else None
 
@@ -683,6 +697,13 @@ def _execute_dynamic(program: Program, params, images, eng: EngineConfig,
             return _head_eval(n, vals[n.inputs[0]], params)
         raise TypeError(f"unknown op {type(n).__name__}")
 
+    return eval_node
+
+
+def _execute_dynamic(program: Program, params, images, eng: EngineConfig,
+                     observer=None, collect: Optional[dict] = None,
+                     decode: Optional[_DecodeCtx] = None) -> jax.Array:
+    eval_node = _dynamic_eval(program, params, images, eng, collect, decode)
     return _run_scheduled(program, eval_node, observer)
 
 
@@ -700,10 +721,13 @@ def _require_qtensor(w, n: OpNode, path=None):
     return w
 
 
-def _execute_static(program: Program, params, images,
-                    eng: EngineConfig, collect: Optional[dict] = None,
-                    decode: Optional[_DecodeCtx] = None) -> jax.Array:
-    g, plan = program.graph, program.plan
+def _static_eval(program: Program, params, images,
+                 eng: EngineConfig, collect: Optional[dict] = None,
+                 decode: Optional[_DecodeCtx] = None):
+    """The static-mode eval_node closure for one program invocation (the
+    counterpart of _dynamic_eval; shared by _execute_static and
+    execute_interleaved)."""
+    plan = program.plan
     scale_of = plan.out_scale
     rope = _rope_table
     rope_d = _rope_decode_memo(decode.pos) if decode is not None else None
@@ -849,6 +873,13 @@ def _execute_static(program: Program, params, images,
             return _head_eval(n, _raw(vals[n.inputs[0]]), params)
         raise TypeError(f"unknown op {type(n).__name__}")
 
+    return eval_node
+
+
+def _execute_static(program: Program, params, images,
+                    eng: EngineConfig, collect: Optional[dict] = None,
+                    decode: Optional[_DecodeCtx] = None) -> jax.Array:
+    eval_node = _static_eval(program, params, images, eng, collect, decode)
     out = _run_scheduled(program, eval_node)
     return out.dequant() if isinstance(out, QTensor) else out
 
@@ -859,3 +890,86 @@ def _rescale_int8(q: jax.Array, s_in: float, s_out: float) -> jax.Array:
     r = jnp.clip(jnp.round(q.astype(jnp.float32) * (s_in / s_out)),
                  -127, 127)
     return r.astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Fabric-interleaved execution (multi-tenant co-mapping, f-CNNx style)
+# ---------------------------------------------------------------------------
+
+def _eval_for(program: Program, params, inputs, eng: EngineConfig,
+              collect: Optional[dict] = None,
+              decode: Optional[_DecodeCtx] = None):
+    if program.static:
+        return _static_eval(program, params, inputs, eng, collect, decode)
+    return _dynamic_eval(program, params, inputs, eng, collect, decode)
+
+
+class _Lane:
+    """One program's value environment advancing level-by-level under an
+    external tick driver (execute_interleaved).  Same wave semantics as
+    _run_scheduled: a level's ops read only earlier levels' values, merged
+    after the whole wave, with last-consumer release."""
+
+    def __init__(self, program: Program, eval_node):
+        self.g = program.graph
+        self.eval_node = eval_node
+        self.counts = _refcounts(self.g)
+        self.vals: Dict[int, object] = {}
+        self.waves = tuple(_dispatch_waves(program))
+
+    def step(self, k: int) -> None:
+        produced = [(n, self.eval_node(n, self.vals))
+                    for n in self.waves[k]]
+        for n, v in produced:
+            self.vals[n.id] = v
+        for n, _ in produced:
+            _release(self.vals, self.counts, n, self.g)
+
+    def result(self):
+        out = self.vals[self.g.output]
+        return out.dequant() if isinstance(out, QTensor) else out
+
+
+def execute_interleaved(program_a: Program, params_a, inputs_a,
+                        program_b: Program, params_b, cache_b,
+                        tokens_b, eng_a: EngineConfig,
+                        eng_b: Optional[EngineConfig] = None,
+                        merged: Optional[MergedSchedule] = None,
+                        collect_a: Optional[dict] = None):
+    """Run a forward program (lane A: CNN wave or LM prefill) and a
+    DecodeStep program (lane B) on ONE fabric tick stream.
+
+    Each merged tick evaluates at most one level of each lane, aligned by
+    merge_schedules: a conv-heavy CNN level rides alongside a MISC-heavy
+    LM decode level, so the units one tenant leaves idle are filled by the
+    other (the f-CNNx co-mapping).  The lanes keep separate value
+    environments and share no dataflow, so outputs are bit-identical to
+    isolated execution -- what is shared is the dispatch stream (and,
+    under jit, the fused per-tick computation).
+
+    Returns (logits_a, logits_b, new_cache_b)."""
+    if program_a.kind != "forward":
+        raise ValueError(f"lane A must be a forward program, got "
+                         f"kind={program_a.kind!r}")
+    if program_b.kind != "decode":
+        raise ValueError(f"lane B must be a decode program, got "
+                         f"kind={program_b.kind!r}")
+    if program_a.schedule is None or program_b.schedule is None:
+        raise ValueError("execute_interleaved needs scheduled programs "
+                         "(compile with scheduled=True)")
+    eng_b = eng_b if eng_b is not None else eng_a
+    ctx = _DecodeCtx(cache_b)
+    lane_a = _Lane(program_a, _eval_for(program_a, params_a, inputs_a,
+                                        eng_a, collect=collect_a))
+    lane_b = _Lane(program_b, _eval_for(program_b, params_b, tokens_b,
+                                        eng_b, decode=ctx))
+    if merged is None:
+        merged = merge_schedules(program_a.graph, program_a.schedule,
+                                 program_b.graph, program_b.schedule,
+                                 policy="asap")
+    for ia, ib in merged.ticks:
+        if ia is not None:
+            lane_a.step(ia)
+        if ib is not None:
+            lane_b.step(ib)
+    return lane_a.result(), lane_b.result(), ctx.finish()

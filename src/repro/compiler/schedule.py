@@ -25,9 +25,26 @@ hybrid: each op slides anywhere within its [ASAP, ALAP] slack window to
 the level where its own engine unit is least contended (two Conv-PE ops in
 one wave time-share the Conv PE; a Conv-PE op next to a DWC-PE or MISC op
 genuinely overlaps), capped so it never exceeds ASAP's worst same-unit
-width.  All policies produce valid levelings with identical results (the
-parity suite pins that); per-level engine occupancy (engine_occupancy) is
-the comparison metric the serving benchmark reports.
+width.  With `node_times` ({node_id: modeled seconds}, compiler/cost.py)
+slack contention is weighed in SECONDS instead of op counts.
+`policy="cost"` is the fully cost-driven variant: each op slides within
+its window to the level that minimizes the modeled per-level makespan
+(sum over levels of the busiest unit's summed seconds -- same-unit ops
+time-share their engine, distinct units overlap), with a property-tested
+never-worse-than-ASAP guarantee (a placement whose modeled makespan
+exceeds ASAP's falls back to the plain ASAP assignment).  All policies
+produce valid levelings with identical results (the parity suite pins
+that); per-level engine occupancy (engine_occupancy) and the
+time-weighted makespan/occupancy are the comparison metrics the serving
+benchmark reports.
+
+`merge_schedules` goes one step further, per f-CNNx: it zips TWO compiled
+programs' levels onto one fabric tick stream, so the MISC-heavy levels of
+an LM decode burst are filled by a co-resident CNN wave's conv levels.
+The cost policy aligns the two level sequences by dynamic programming
+over the joint per-tick makespan; executor.execute_interleaved consumes
+the merged ticks with one environment per program (no cross-program
+dataflow, so outputs stay bit-identical to isolated execution).
 
 LM graphs level through the same pass: on an unfused graph the three QKV
 projections of a block co-level on the Conv PE (and the gate/up GEMMs of a
@@ -37,7 +54,7 @@ Conv PE launch followed by free memory-level views.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, Tuple
+from typing import Dict, Iterable, Optional, Tuple
 
 from repro.compiler.graph import (AddOp, AttnOp, ConcatOp, ConvOp, DwcOp,
                                   EmbedOp, Graph, HeadOp, InputOp,
@@ -90,7 +107,9 @@ class Schedule:
         return len(self.levels)
 
 
-def level_schedule(graph: Graph, policy: str = "asap") -> Schedule:
+def level_schedule(graph: Graph, policy: str = "asap",
+                   node_times: Optional[Dict[int, float]] = None
+                   ) -> Schedule:
     """Level the graph into concurrent dispatch waves.
 
     policy="asap": level(n) = 1 + max(level(inputs)) -- ops fire as soon as
@@ -101,8 +120,16 @@ def level_schedule(graph: Graph, policy: str = "asap") -> Schedule:
     [ASAP, ALAP] slack window at the level where its own engine unit is
     LEAST contended (same-unit ops in one level time-share the unit;
     cross-unit ops genuinely overlap), never exceeding ASAP's worst
-    same-unit width.  All policies keep the critical-path level count and
-    produce valid levelings with bit-identical execution.
+    same-unit width.  policy="cost": cost-driven -- each op lands at the
+    window level that minimizes the modeled makespan (`modeled_makespan`
+    over `node_times`), never worse than ASAP's (fallback guarantee).
+
+    `node_times` ({node_id: modeled seconds}, e.g. compiler/cost.py's
+    cnn_node_times / lm_node_times) turns the slack contention measure and
+    the cost objective from op counts into seconds; without it the cost
+    policy prices every op at 1.0 (count-makespan) and slack keeps its
+    historical count behavior.  All policies keep the critical-path level
+    count and produce valid levelings with bit-identical execution.
     """
     asap: Dict[int, int] = {}
     for n in graph.nodes:
@@ -113,15 +140,22 @@ def level_schedule(graph: Graph, policy: str = "asap") -> Schedule:
     elif policy == "alap":
         level = _alap_levels(graph, n_levels)
     elif policy == "slack":
-        level = _slack_levels(graph, asap, n_levels)
+        level = _slack_levels(graph, asap, n_levels, node_times)
+    elif policy == "cost":
+        level = _cost_levels(graph, asap, n_levels, node_times)
     else:
         raise ValueError(f"unknown leveling policy {policy!r} "
-                         "(want 'asap', 'alap' or 'slack')")
+                         "(want 'asap', 'alap', 'slack' or 'cost')")
     levels = [[] for _ in range(n_levels)]
     for n in graph.nodes:                  # nodes are id-ordered already
         levels[level[n.id]].append(n.id)
     lvls = tuple(tuple(lv) for lv in levels if lv)
-    return Schedule(lvls, stats=_levels_stats(graph, lvls))
+    stats = _levels_stats(graph, lvls)
+    if node_times is not None or policy == "cost":
+        times = node_times if node_times is not None else \
+            {n.id: 1.0 for n in graph.nodes}
+        stats["modeled_makespan"] = modeled_makespan(graph, lvls, times)
+    return Schedule(lvls, stats=stats)
 
 
 def _alap_levels(graph: Graph, n_levels: int) -> Dict[int, int]:
@@ -144,18 +178,22 @@ def _unit_widths(graph: Graph, level: Dict[int, int], n_levels: int):
     return counts
 
 
-def _slack_levels(graph: Graph, asap: Dict[int, int],
-                  n_levels: int) -> Dict[int, int]:
+def _slack_levels(graph: Graph, asap: Dict[int, int], n_levels: int,
+                  node_times: Optional[Dict[int, float]] = None
+                  ) -> Dict[int, int]:
     """Contention-aware slack leveling (the bounded-ALAP hybrid).
 
     Walk the nodes in topological order; each op's feasible window is
     [1 + max(placed inputs), ALAP(op)] -- every placement keeps the graph's
     critical-path level count, since an op placed at most at its ALAP level
     leaves all its consumers a non-empty window.  Within the window the op
-    lands on the level where its own engine unit has the fewest ops already
+    lands on the level where its own engine unit is least contended
     (same-unit ops time-share the unit -- the contention the policy
     minimizes), preferring levels already busy on OTHER compute units (the
     cross-engine pairing that raises occupancy), earliest level on ties.
+    Contention is measured in op counts, or -- with `node_times` -- in
+    modeled SECONDS, so a 1us norm no longer repels placement the way a
+    1ms GEMM does.
 
     ASAP's worst per-unit same-level width is the hard cap: levels already
     at the cap for the op's unit are avoided while any other level in the
@@ -169,7 +207,15 @@ def _slack_levels(graph: Graph, asap: Dict[int, int],
         for u, k in c.items():
             cap[u] = max(cap.get(u, 0), k)
     counts = [dict() for _ in range(n_levels)]
+    loads = [dict() for _ in range(n_levels)]   # per-unit modeled seconds
+    times = node_times or {}
     compute = set(_COMPUTE_UNITS)
+
+    def _put(lv: int, n: OpNode) -> None:
+        u = engine_unit(n)
+        counts[lv][u] = counts[lv].get(u, 0) + 1
+        loads[lv][u] = loads[lv].get(u, 0.0) + float(times.get(n.id, 0.0))
+
     # Pin the zero-slack (critical-path) ops first: they can never move --
     # every predecessor's ALAP is strictly below them, so no slack placement
     # can push them -- and seeding their unit load lets the movable ops see
@@ -178,9 +224,7 @@ def _slack_levels(graph: Graph, asap: Dict[int, int],
     for n in graph.nodes:
         if asap[n.id] == alap[n.id]:
             placed[n.id] = asap[n.id]
-            c = counts[asap[n.id]]
-            u = engine_unit(n)
-            c[u] = c.get(u, 0) + 1
+            _put(asap[n.id], n)
     for n in graph.nodes:
         if n.id in placed:
             continue
@@ -193,16 +237,110 @@ def _slack_levels(graph: Graph, asap: Dict[int, int],
         def goodness(lv: int):
             others = sum(1 for uu, k in counts[lv].items()
                          if k and uu != u and uu in compute)
-            return (counts[lv].get(u, 0), -others, lv)
+            own = (loads[lv].get(u, 0.0) if node_times is not None
+                   else counts[lv].get(u, 0))
+            return (own, -others, lv)
 
         best = min(cands, key=goodness)
         placed[n.id] = best
-        counts[best][u] = counts[best].get(u, 0) + 1
+        _put(best, n)
     for c in counts:
         for u, k in c.items():
             if k > cap.get(u, 0):
                 return dict(asap)          # cap breached: fall back
     return placed
+
+
+def _unit_loads(graph: Graph, level: Dict[int, int], n_levels: int,
+                times: Dict[int, float]):
+    """Per-level per-unit summed modeled seconds of an assignment."""
+    loads = [dict() for _ in range(n_levels)]
+    for n in graph.nodes:
+        u = engine_unit(n)
+        c = loads[level[n.id]]
+        c[u] = c.get(u, 0.0) + float(times.get(n.id, 0.0))
+    return loads
+
+
+def _loads_makespan(loads) -> float:
+    """Makespan of per-level unit loads: each level takes as long as its
+    busiest unit (same-unit ops time-share; distinct units overlap)."""
+    return sum(max(c.values(), default=0.0) for c in loads)
+
+
+def _cost_levels(graph: Graph, asap: Dict[int, int], n_levels: int,
+                 node_times: Optional[Dict[int, float]] = None
+                 ) -> Dict[int, int]:
+    """Cost-driven leveling: minimize the modeled makespan.
+
+    Same window discipline as `_slack_levels` (zero-slack ops pinned
+    first, then each movable op placed greedily inside
+    [1 + max(placed inputs), ALAP]), but the objective is the modeled
+    per-level makespan itself: an op lands at the level where it grows
+    `max(unit seconds in level)` the least -- sliding a Conv-PE GEMM into
+    a MISC-dominated level costs nothing until the Conv PE becomes that
+    level's critical unit.  Ties break toward the level with the least
+    same-unit load, then earliest.
+
+    The never-worse-than-ASAP guarantee is checked, not assumed: if the
+    greedy placement's total makespan exceeds ASAP's (possible in theory,
+    since greedy placement is not optimal), the policy returns the plain
+    ASAP assignment (property-tested on random DAGs).
+    """
+    alap = _alap_levels(graph, n_levels)
+    times = (node_times if node_times is not None
+             else {n.id: 1.0 for n in graph.nodes})
+    loads = [dict() for _ in range(n_levels)]
+
+    def _put(lv: int, n: OpNode) -> None:
+        u = engine_unit(n)
+        loads[lv][u] = loads[lv].get(u, 0.0) + float(times.get(n.id, 0.0))
+
+    placed: Dict[int, int] = {}
+    for n in graph.nodes:
+        if asap[n.id] == alap[n.id]:
+            placed[n.id] = asap[n.id]
+            _put(asap[n.id], n)
+    for n in graph.nodes:
+        if n.id in placed:
+            continue
+        u = engine_unit(n)
+        t = float(times.get(n.id, 0.0))
+        lo = 1 + max((placed[i] for i in n.inputs), default=-1)
+        best, best_key = None, None
+        for lv in range(lo, alap[n.id] + 1):
+            span0 = max(loads[lv].values(), default=0.0)
+            own = loads[lv].get(u, 0.0)
+            grow = max(span0, own + t) - span0    # makespan increment
+            key = (grow, own, lv)
+            if best_key is None or key < best_key:
+                best, best_key = lv, key
+        placed[n.id] = best
+        _put(best, n)
+    asap_span = _loads_makespan(_unit_loads(graph, asap, n_levels, times))
+    if _loads_makespan(loads) > asap_span + 1e-12:
+        return dict(asap)              # guarantee: never worse than ASAP
+    return placed
+
+
+def modeled_makespan(graph: Graph, levels, node_times: Dict[int, float]
+                     ) -> float:
+    """Modeled seconds of a leveling: sum over levels of the busiest
+    unit's summed node seconds (same-unit ops time-share their engine,
+    distinct units run concurrently).  `levels` is a Schedule or its raw
+    levels tuple; `node_times` maps node id -> modeled seconds
+    (compiler/cost.py).  This is the objective `policy="cost"` minimizes
+    and the `modeled_makespan` stat the Schedule carries."""
+    if isinstance(levels, Schedule):
+        levels = levels.levels
+    total = 0.0
+    for lv in levels:
+        per_unit: Dict[str, float] = {}
+        for i in lv:
+            u = engine_unit(graph.nodes[i])
+            per_unit[u] = per_unit.get(u, 0.0) + float(node_times.get(i, 0.0))
+        total += max(per_unit.values(), default=0.0)
+    return total
 
 
 def schedule_stats(graph: Graph, sched: Schedule) -> Dict[str, int]:
@@ -309,6 +447,180 @@ def time_weighted_occupancy(graph: Graph, sched: Schedule,
     out["occupancy"] = (sum(busy[u] for u in used) / (span * len(used))
                         if span > 0 and used else 0.0)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant fabric interleaving (f-CNNx): zip two programs' levels onto
+# one tick stream
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MergedSchedule:
+    """A fabric tick stream over TWO programs' schedules.
+
+    ticks[t] = (ia, ib): at fabric tick t, program A dispatches its level
+    `ia` (None = A idles this tick) and program B its level `ib`.  Each
+    program's own level order is preserved (its non-None indices appear
+    exactly once, ascending), so per-program execution is just its normal
+    wave-by-wave dispatch -- interleaving changes WHEN levels fire, never
+    what they compute (executor.execute_interleaved keeps one value
+    environment per program; bit-identity to isolated execution is pinned
+    in tests).
+    """
+    ticks: Tuple[Tuple[Optional[int], Optional[int]], ...]
+    stats: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def n_ticks(self) -> int:
+        return len(self.ticks)
+
+
+def _level_unit_times(graph: Graph, levels, node_times: Dict[int, float]):
+    """Per-level {unit: summed seconds} of one schedule."""
+    out = []
+    for lv in levels:
+        per: Dict[str, float] = {}
+        for i in lv:
+            u = engine_unit(graph.nodes[i])
+            per[u] = per.get(u, 0.0) + float(node_times.get(i, 0.0))
+        out.append(per)
+    return out
+
+
+def _merged_stats(graph_a: Graph, graph_b: Graph, la, lb, ticks
+                  ) -> Dict[str, float]:
+    """Time-weighted stats of a merged tick stream: makespan (sum of tick
+    spans, each tick as long as its busiest unit across BOTH programs),
+    the serialized makespan it replaces, and the fabric occupancy
+    (compute-unit busy seconds over makespan x used units -- the
+    time_weighted_occupancy convention applied to the joint stream)."""
+    makespan = 0.0
+    for ia, ib in ticks:
+        per: Dict[str, float] = {}
+        for src, idx in ((la, ia), (lb, ib)):
+            if idx is None:
+                continue
+            for u, t in src[idx].items():
+                per[u] = per.get(u, 0.0) + t
+        makespan += max(per.values(), default=0.0)
+    serialized = (sum(max(p.values(), default=0.0) for p in la)
+                  + sum(max(p.values(), default=0.0) for p in lb))
+    used = {u for g in (graph_a, graph_b) for n in g.nodes
+            for u in [engine_unit(n)] if u in _COMPUTE_UNITS}
+    busy = {u: 0.0 for u in used}
+    for src in (la, lb):
+        for per in src:
+            for u, t in per.items():
+                if u in busy:
+                    busy[u] += t
+    out: Dict[str, float] = {
+        "ticks": float(len(ticks)),
+        "makespan": makespan,
+        "serialized_makespan": serialized,
+        "occupancy": (sum(busy.values()) / (makespan * len(used))
+                      if makespan > 0 and used else 0.0),
+    }
+    for u in sorted(used):
+        out[u] = busy[u] / makespan if makespan > 0 else 0.0
+    return out
+
+
+def merge_schedules(graph_a: Graph, sched_a: Schedule,
+                    graph_b: Graph, sched_b: Schedule,
+                    times_a: Optional[Dict[int, float]] = None,
+                    times_b: Optional[Dict[int, float]] = None,
+                    policy: str = "cost") -> MergedSchedule:
+    """Zip two programs' level schedules onto one fabric tick stream.
+
+    policy="asap" is the naive in-order zip: tick t runs A's level t next
+    to B's level t until one program runs dry -- the baseline a co-tenant
+    fabric gets with no alignment at all.  policy="cost" aligns the two
+    level sequences by dynamic programming over the modeled joint
+    makespan: at each tick the fabric may advance A alone, B alone, or
+    both together, where a joint tick costs `max` over units of the
+    COMBINED summed seconds -- so a MISC-heavy LM level is paired with a
+    Conv-PE-heavy CNN level (their costs hide under each other) while two
+    Conv-PE-heavy levels are kept apart.  The in-order zip and the fully
+    serialized stream are both paths in the DP lattice, so the cost
+    alignment's makespan is never worse than either (the strict win the
+    serving benchmark records).
+
+    `times_a`/`times_b` are each program's {node_id: seconds}
+    (compiler/cost.py); omitted, ops are priced at 1.0.  Both programs'
+    internal level orders are always preserved -- the merge only chooses
+    the pairing -- which is what keeps interleaved execution bit-identical
+    to isolated.  Stats carry the modeled makespan, the serialized
+    makespan it replaces, and the joint time-weighted fabric occupancy.
+    """
+    ta = (times_a if times_a is not None
+          else {n.id: 1.0 for n in graph_a.nodes})
+    tb = (times_b if times_b is not None
+          else {n.id: 1.0 for n in graph_b.nodes})
+    la = _level_unit_times(graph_a, sched_a.levels, ta)
+    lb = _level_unit_times(graph_b, sched_b.levels, tb)
+    na, nb = len(la), len(lb)
+    if policy == "asap":
+        ticks = tuple((i if i < na else None, i if i < nb else None)
+                      for i in range(max(na, nb)))
+    elif policy == "cost":
+        span_a = [max(p.values(), default=0.0) for p in la]
+        span_b = [max(p.values(), default=0.0) for p in lb]
+
+        def joint(i: int, j: int) -> float:
+            per = dict(la[i])
+            for u, t in lb[j].items():
+                per[u] = per.get(u, 0.0) + t
+            return max(per.values(), default=0.0)
+
+        inf = float("inf")
+        cost = [[inf] * (nb + 1) for _ in range(na + 1)]
+        back = [[None] * (nb + 1) for _ in range(na + 1)]
+        cost[0][0] = 0.0
+        for i in range(na + 1):
+            for j in range(nb + 1):
+                if i == 0 and j == 0:
+                    continue
+                # prefer the joint step on ties: same makespan, fewer ticks
+                best, step = inf, None
+                if i > 0 and j > 0:
+                    best, step = cost[i - 1][j - 1] + joint(i - 1, j - 1), "ab"
+                if i > 0 and cost[i - 1][j] + span_a[i - 1] < best:
+                    best, step = cost[i - 1][j] + span_a[i - 1], "a"
+                if j > 0 and cost[i][j - 1] + span_b[j - 1] < best:
+                    best, step = cost[i][j - 1] + span_b[j - 1], "b"
+                cost[i][j], back[i][j] = best, step
+        rev = []
+        i, j = na, nb
+        while i or j:
+            step = back[i][j]
+            if step == "ab":
+                i, j = i - 1, j - 1
+                rev.append((i, j))
+            elif step == "a":
+                i = i - 1
+                rev.append((i, None))
+            else:
+                j = j - 1
+                rev.append((None, j))
+        ticks = tuple(reversed(rev))
+    else:
+        raise ValueError(f"unknown merge policy {policy!r} "
+                         "(want 'asap' or 'cost')")
+    return MergedSchedule(ticks, stats=_merged_stats(graph_a, graph_b,
+                                                     la, lb, ticks))
+
+
+def validate_merged(sched_a: Schedule, sched_b: Schedule,
+                    merged: MergedSchedule) -> None:
+    """Raise unless the merged ticks dispatch each program's levels exactly
+    once, in its own order -- the invariant that makes interleaved
+    execution bit-identical to isolated."""
+    for name, sched, lane in (("A", sched_a, 0), ("B", sched_b, 1)):
+        seq = [t[lane] for t in merged.ticks if t[lane] is not None]
+        if seq != list(range(sched.n_levels)):
+            raise ValueError(
+                f"merged ticks break program {name}'s level order: "
+                f"{seq} != {list(range(sched.n_levels))}")
 
 
 def validate_schedule(graph: Graph, sched: Schedule) -> None:

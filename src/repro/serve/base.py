@@ -28,9 +28,12 @@ from dataclasses import dataclass
 from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.compiler.executor import Program, schedule_variant
+from repro.compiler.executor import (Program, execute_interleaved,
+                                     schedule_variant)
+from repro.compiler.schedule import merge_schedules
 from repro.core.config import EngineConfig
 from repro.core.program_cache import ProgramCache, ProgramKey
 from repro.serve.mesh_exec import MeshExecutor
@@ -360,3 +363,296 @@ class ProgramServeBase:
             "cache_hit_rate": c.hit_rate,
             "programs_cached": len(self.cache),
         }
+
+
+# ---------------------------------------------------------------------------
+# FabricPump: cross-engine multi-tenant tick stream (f-CNNx co-mapping)
+# ---------------------------------------------------------------------------
+
+class FabricPump:
+    """Drive a CNNServeEngine wave lane and a (dense) LM ServeEngine decode
+    lane on ONE fabric tick stream.
+
+    Each fabric tick advances both tenants: one CNN wave buffer and one LM
+    decode step.  With `interleave=True` the tick is a SINGLE fused jitted
+    call of executor.execute_interleaved -- the two programs' levels are
+    zipped by schedule.merge_schedules (`merge_policy`), so the conv-heavy
+    CNN levels fill the units the MISC-heavy LM decode levels leave idle
+    and the host pays one dispatch instead of two.  With
+    `interleave=False` the same tick issues the two programs as separate
+    jitted calls -- identical work, serialized dispatch: the baseline leg
+    of benchmarks/serve_mixed.py.  Outputs are bit-identical between the
+    two modes and to isolated per-engine execution (the lanes share the
+    dispatch stream, never dataflow).
+
+    Served path: the LM lane replicates ServeEngine.run's dense
+    continuous-batching loop (masked prefill + slot refill + decode
+    bursts).  Paged-KV and speculative engines are rejected -- their steps
+    are fused host-side loops of their own; only the plain DecodeStep
+    program zips levels with a CNN wave.  Prefill ticks run un-fused (a
+    prefill is a full forward program, not a per-tick recurrence)."""
+
+    def __init__(self, cnn_engine, lm_engine, merge_policy: str = "cost",
+                 interleave: bool = True):
+        self.cnn = cnn_engine
+        self.lm = lm_engine
+        self.merge_policy = merge_policy
+        self.interleave = interleave
+        self.latency = LatencyTracker()
+        self._fused = None    # (cnn program, lm program, jitted step, merged)
+        self.ticks = 0
+        self.fused_ticks = 0
+        self.solo_cnn_ticks = 0
+        self.solo_lm_ticks = 0
+
+    # -- merged schedule / fused step ----------------------------------------
+
+    def merged_schedule(self, name: str, policy: Optional[str] = None):
+        """The MergedSchedule aligning the named CNN program's levels with
+        the LM DecodeStep program's (cost-priced; stats carry the modeled
+        makespan and combined occupancy the mixed benchmark reports)."""
+        from repro.compiler import cost as cost_lib
+        prog_a = self.cnn.program_for(name)
+        prog_b = self.lm.decode_program()
+        times_a = cost_lib.default_node_times(prog_a.graph, prog_a.cfg,
+                                              prog_a.kind)
+        times_b = cost_lib.default_node_times(prog_b.graph, prog_b.cfg,
+                                              prog_b.kind)
+        return merge_schedules(prog_a.graph, prog_a.schedule,
+                               prog_b.graph, prog_b.schedule,
+                               times_a, times_b,
+                               policy=policy or self.merge_policy)
+
+    def _fused_step(self, name: str):
+        """One jitted (CNN wave + LM decode step) executable, traced once
+        per program pair (the _spec_jit pairing pattern), LM cache
+        donated like the engine's own decode step."""
+        prog_a = self.cnn.program_for(name)
+        prog_b = self.lm.decode_program()
+        if (self._fused is None or self._fused[0] is not prog_a
+                or self._fused[1] is not prog_b):
+            merged = self.merged_schedule(name)
+            eng_a, eng_b = self.cnn.eng, self.lm.eng
+
+            def step(qparams, buf, lparams, cache, cur):
+                return execute_interleaved(prog_a, qparams, buf,
+                                           prog_b, lparams, cache, cur,
+                                           eng_a, eng_b, merged=merged)
+
+            self._fused = (prog_a, prog_b,
+                           jax.jit(step, donate_argnums=(3,)), merged)
+        return self._fused[2]
+
+    # -- the pump ------------------------------------------------------------
+
+    def run(self, cnn_name: str, images: Sequence[np.ndarray],
+            prompts: Sequence, max_new_tokens: int = 8
+            ) -> Tuple[List[np.ndarray], Dict[int, np.ndarray]]:
+        """Serve a CNN image trace and an LM prompt trace to completion on
+        one tick stream.  Returns (cnn logits in submission order,
+        {lm ticket: greedy token ids})."""
+        cnn, lm = self.cnn, self.lm
+        if getattr(lm, "paged", False):
+            raise ValueError("FabricPump serves the dense KV path; paged "
+                             "engines fuse their own prefill+merge steps")
+        if getattr(lm, "draft_len", 0):
+            raise ValueError("FabricPump serves plain decode; speculative "
+                             "bursts are their own fused verify step")
+        if not (lm.compiled and lm.compiled_decode):
+            raise ValueError("FabricPump needs compiled LM programs "
+                             "(lowering blockers: "
+                             f"{lm.lowering_blockers()})")
+        if cnn.mexec is not None or lm.mexec is not None:
+            raise ValueError("FabricPump is single-device; drop mesh=")
+
+        # -- submit both tenants' traces -------------------------------------
+        cnn_tickets = [cnn.submit(cnn_name, img) for img in images]
+        lm_tickets = []
+        for p in prompts:
+            t = lm.submit(p, max_new_tokens)
+            if not t and t != 0:
+                raise ValueError(f"LM request rejected: {t}")
+            lm_tickets.append(t)
+
+        # -- CNN lane: pre-pack the wave buffers (zero-padded tail) ----------
+        cfg = cnn._models[cnn_name].cfg
+        shape = (cfg.input_hw, cfg.input_hw, cfg.input_ch)
+        waves: List[Tuple[jax.Array, List[Tuple[int, int]]]] = []
+        while True:
+            wave = cnn._sched.take_wave(shape, force=True)
+            if wave is None:
+                break
+            buf = np.zeros((cnn.wave_rows,) + shape, np.float32)
+            slots = []
+            for slot, (ticket, (name, img)) in enumerate(wave):
+                buf[slot] = img
+                slots.append((slot, ticket))
+            waves.append((jnp.asarray(buf), slots))
+            cnn.wave_stats.requests += len(wave)
+            cnn.wave_stats.waves += 1
+            cnn.wave_stats.padded += cnn.wave_rows - len(wave)
+        cnn._sched.next_epoch()
+        cnn_run, qparams = cnn._executor_for(cnn_name)
+        in_flight: List[Tuple[object, List[Tuple[int, int]]]] = []
+        wave_i = 0
+
+        # -- LM lane state (ServeEngine.run's dense loop) --------------------
+        results: Dict[int, np.ndarray] = {}
+        sched, B = lm._sched, lm.batch
+        plen = lm.prefill_len
+        if plen is None and sched.pending("lm"):
+            plen = max(len(p) for p, _ in sched.peek("lm"))
+        prefill_exec = lm._prefill_exec()
+        decode_exec = lm._decode_exec()
+        cache = lm._empty_cache()
+        cache["pos"] = jnp.zeros((B,), jnp.int32)
+        cur = jnp.zeros((B, 1), jnp.int32)
+        tickets: List[Optional[int]] = [None] * B
+        remaining = np.zeros(B, np.int64)
+        start = np.zeros(B, np.int64)
+        step = 0
+        blocks: List[List] = []           # [start step, [B, w] device toks]
+        block_np: Dict[int, np.ndarray] = {}
+
+        def tokens_for(slot: int, lo: int, hi: int) -> np.ndarray:
+            parts = []
+            for s0, blk in blocks:
+                w = blk.shape[1]
+                if s0 + w <= lo or s0 >= hi:
+                    continue
+                arr = block_np.get(id(blk))
+                if arr is None:
+                    arr = block_np[id(blk)] = np.asarray(blk)
+                parts.append(arr[slot, max(lo - s0, 0):min(hi - s0, w)])
+            return (np.concatenate(parts).astype(np.int32) if parts
+                    else np.zeros(0, np.int32))
+
+        def decode_tick(cur, cache):
+            """One fabric tick: one LM decode step, co-scheduled with the
+            next CNN wave when one is pending."""
+            nonlocal wave_i
+            self.ticks += 1
+            if wave_i < len(waves):
+                buf, slots = waves[wave_i]
+                wave_i += 1
+                cnn.wave_stats.program_execs += 1
+                cnn.execs_by_model[cnn_name] = (
+                    cnn.execs_by_model.get(cnn_name, 0) + 1)
+                if self.interleave:
+                    logits_a, logits_b, cache = self._fused_step(cnn_name)(
+                        qparams, buf, lm.params, cache, cur)
+                    in_flight.append((logits_a, slots))
+                    self.fused_ticks += 1
+                    return logits_b, cache
+                in_flight.append((cnn_run(qparams, buf), slots))
+            else:
+                self.solo_lm_ticks += 1
+            logits_b, cache = decode_exec(lm.params, cache, cur)
+            return logits_b, cache
+
+        # -- continuous batching over fabric ticks ---------------------------
+        while True:
+            free = [i for i in range(B) if remaining[i] == 0]
+            if free and sched.pending("lm"):
+                taken = sched.take("lm", limit=len(free))
+                if taken:
+                    toks = np.zeros((B, plen), np.int32)
+                    mask = np.zeros(B, bool)
+                    for slot, (ticket, (prompt, mnt)) in zip(free, taken):
+                        if len(prompt) > plen:
+                            raise ValueError(
+                                f"prompt of length {len(prompt)} exceeds "
+                                f"the run's fixed prefill width {plen}")
+                        toks[slot, plen - len(prompt):] = prompt
+                        mask[slot] = True
+                        if tickets[slot] is not None:
+                            lm.serve_stats.slot_refills += 1
+                        tickets[slot] = ticket
+                        remaining[slot] = mnt
+                        start[slot] = step
+                    jmask = jnp.asarray(mask)
+                    logits, fresh = prefill_exec(
+                        lm.params, lm._empty_cache(),
+                        {"tokens": jnp.asarray(toks)})
+                    cache = lm.jmerge(cache, fresh, jmask)
+                    first = jnp.argmax(logits[:, -1, :], axis=-1)
+                    cur = jnp.where(jmask[:, None], first[:, None], cur
+                                    ).astype(jnp.int32)
+                    lm.serve_stats.prefill_calls += 1
+                    lm.serve_stats.requests += len(taken)
+                    sched.next_epoch()
+                    self.ticks += 1
+
+            act = [i for i in range(B) if remaining[i] > 0]
+            if not act:
+                if sched.pending("lm"):
+                    continue
+                break
+            burst = int(min(lm.decode_burst,
+                            min(remaining[i] for i in act)))
+            cols = []
+            for _ in range(burst):
+                cols.append(cur)
+                logits, cache = decode_tick(cur, cache)
+                cur = jnp.argmax(logits[:, -1, :], axis=-1)[:, None
+                                                            ].astype(jnp.int32)
+                lm.serve_stats.decode_steps += 1
+                lm.serve_stats.active_slot_steps += len(act)
+            blocks.append([step, cols[0] if burst == 1
+                           else jnp.concatenate(cols, axis=1)])
+            step += burst
+            finished = False
+            for i in act:
+                remaining[i] -= burst
+                if remaining[i] == 0:     # response edge for this ticket
+                    results[tickets[i]] = tokens_for(i, int(start[i]), step)
+                    lm.latency.completed(tickets[i])
+                    self.latency.samples_ms.append(
+                        lm.latency.samples_ms[-1])
+                    finished = True
+            if finished:
+                live = [int(start[i]) for i in range(B) if remaining[i] > 0]
+                lo = min(live) if live else step
+                keep = [b for b in blocks if b[0] + b[1].shape[1] > lo]
+                kept_ids = {id(b[1]) for b in keep}
+                for b in blocks:
+                    if id(b[1]) not in kept_ids:
+                        block_np.pop(id(b[1]), None)
+                blocks = keep
+
+        # -- drain leftover CNN waves (LM lane dry) --------------------------
+        while wave_i < len(waves):
+            buf, slots = waves[wave_i]
+            wave_i += 1
+            in_flight.append((cnn_run(qparams, buf), slots))
+            cnn.wave_stats.program_execs += 1
+            cnn.execs_by_model[cnn_name] = (
+                cnn.execs_by_model.get(cnn_name, 0) + 1)
+            self.ticks += 1
+            self.solo_cnn_ticks += 1
+
+        # -- CNN response edge: one host sync per wave execution -------------
+        cnn_results: Dict[int, np.ndarray] = {}
+        for dev_logits, slots in in_flight:
+            logits = np.asarray(dev_logits)
+            for slot, ticket in slots:
+                cnn_results[ticket] = logits[slot]
+                cnn.latency.completed(ticket)
+                self.latency.samples_ms.append(
+                    cnn.latency.samples_ms[-1])
+        return ([cnn_results[t] for t in cnn_tickets],
+                {t: results[t] for t in lm_tickets})
+
+    def stats(self) -> Dict[str, object]:
+        out = {
+            "ticks": self.ticks,
+            "fused_ticks": self.fused_ticks,
+            "solo_cnn_ticks": self.solo_cnn_ticks,
+            "solo_lm_ticks": self.solo_lm_ticks,
+            "interleave": self.interleave,
+            "merge_policy": self.merge_policy,
+            "latency_ms": self.latency.percentiles(),
+        }
+        if self._fused is not None:
+            out["merged"] = dict(self._fused[3].stats)
+        return out

@@ -1,0 +1,323 @@
+"""Multi-tenant fabric interleaving: merge_schedules structure + cost
+properties, execute_interleaved bit-identity to isolated execution across
+backends, and the FabricPump serving contract (interleaved == serialized ==
+isolated, on CNN logits AND LM token ids).
+
+The invariant under test is the one MergedSchedule documents: interleaving
+changes WHEN levels fire, never what they compute -- each lane keeps its own
+value environment, so co-tenancy is free of cross-tenant numerics."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+import jax.tree_util as jtu
+
+from repro import compiler, configs
+from repro.compiler import cost as cost_lib
+from repro.compiler.schedule import MergedSchedule
+from repro.configs.cnn_zoo import CNN_ZOO
+from repro.core import engine as eng_lib
+from repro.core.config import EngineConfig
+from repro.models import cnn as cnn_lib
+from repro.models import transformer as T
+from repro.models.params import init_params, is_spec
+
+B, PLEN, MAX_SEQ, STEPS = 2, 8, 32, 3
+
+
+def _cnn_setup(name="squeezenet", hw=32, batch=2, seed=0):
+    cfg = dataclasses.replace(CNN_ZOO[name], input_hw=hw)
+    params = init_params(cnn_lib.cnn_schema(cfg), jax.random.PRNGKey(0))
+    x = jnp.asarray(np.random.default_rng(seed).normal(
+        size=(batch, hw, hw, cfg.input_ch)).astype(np.float32) * 0.5)
+    return cfg, params, x
+
+
+def _lm_setup(name="qwen2-1.5b", seed=0):
+    arch = configs.reduced(configs.get_arch(name))
+    params = init_params(T.lm_schema(arch), jax.random.PRNGKey(1))
+    toks = jnp.asarray(np.random.default_rng(seed).integers(
+        0, arch.vocab_size, (B, PLEN)).astype(np.int32))
+    return arch, params, toks
+
+
+def _cache(arch, batch, seq, eng):
+    return jtu.tree_map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        T.cache_schema(arch, batch, seq, eng),
+                        is_leaf=is_spec)
+
+
+def _decode_pair(arch):
+    """(decode program, its cost node_times) -- lane B of every merge."""
+    prog = compiler.compile_lm(arch, mode="decode")
+    times = cost_lib.lm_node_times(prog.graph, arch, B, 1, cache_len=PLEN)
+    return prog, times
+
+
+# ---------------------------------------------------------------------------
+# merge_schedules: structure + the cost DP's never-worse guarantees
+# ---------------------------------------------------------------------------
+
+class TestMergeSchedules:
+    @pytest.mark.parametrize("name", ["squeezenet", "resnet50",
+                                      "mobilenetv2"])
+    def test_merged_preserves_both_orders(self, name):
+        """Both policies dispatch each program's levels exactly once, in
+        order (validate_merged's invariant -- what makes interleaved
+        execution bit-identical), and every tick fires at least one lane."""
+        arch, _, _ = _lm_setup()
+        dec, times_b = _decode_pair(arch)
+        cfg = CNN_ZOO[name]
+        prog = compiler.compile_cnn(cfg, policy="cost")
+        times_a = cost_lib.cnn_node_times(prog.graph, cfg)
+        for policy in ("asap", "cost"):
+            m = compiler.merge_schedules(prog.graph, prog.schedule,
+                                         dec.graph, dec.schedule,
+                                         times_a, times_b, policy=policy)
+            compiler.validate_merged(prog.schedule, dec.schedule, m)
+            assert all(ia is not None or ib is not None
+                       for ia, ib in m.ticks)
+            assert m.n_ticks == len(m.ticks)
+            assert m.n_ticks <= (prog.schedule.n_levels
+                                 + dec.schedule.n_levels)
+
+    def test_cost_merge_never_worse_zoo_wide(self):
+        """Modeled makespans order as the DP promises on every zoo model:
+        cost DP <= naive in-order zip <= fully serialized."""
+        arch, _, _ = _lm_setup()
+        dec, times_b = _decode_pair(arch)
+        for name, cfg in CNN_ZOO.items():
+            prog = compiler.compile_cnn(cfg, policy="cost")
+            times_a = cost_lib.cnn_node_times(prog.graph, cfg)
+            ms = {}
+            for policy in ("asap", "cost"):
+                m = compiler.merge_schedules(prog.graph, prog.schedule,
+                                             dec.graph, dec.schedule,
+                                             times_a, times_b,
+                                             policy=policy)
+                ms[policy] = m.stats["makespan"]
+                assert m.stats["makespan"] <= (m.stats["serialized_makespan"]
+                                               + 1e-12), name
+                assert 0.0 < m.stats["occupancy"] <= 1.0, name
+            assert ms["cost"] <= ms["asap"] + 1e-12, name
+
+    def test_unknown_merge_policy_rejected(self):
+        arch, _, _ = _lm_setup()
+        dec, _ = _decode_pair(arch)
+        prog = compiler.compile_cnn(CNN_ZOO["squeezenet"])
+        with pytest.raises(ValueError, match="policy"):
+            compiler.merge_schedules(prog.graph, prog.schedule,
+                                     dec.graph, dec.schedule,
+                                     policy="greedy")
+
+    def test_validate_merged_rejects_broken_streams(self):
+        arch, _, _ = _lm_setup()
+        dec, _ = _decode_pair(arch)
+        prog = compiler.compile_cnn(CNN_ZOO["squeezenet"])
+        m = compiler.merge_schedules(prog.graph, prog.schedule,
+                                     dec.graph, dec.schedule)
+        # drop the last tick: lane coverage breaks
+        broken = MergedSchedule(ticks=m.ticks[:-1], stats=m.stats)
+        with pytest.raises(ValueError):
+            compiler.validate_merged(prog.schedule, dec.schedule, broken)
+        # swap two of lane A's levels: order breaks
+        ia = [t for t, (a, _) in enumerate(m.ticks) if a is not None]
+        ticks = list(m.ticks)
+        t0, t1 = ia[0], ia[1]
+        ticks[t0] = (m.ticks[t1][0], ticks[t0][1])
+        ticks[t1] = (m.ticks[t0][0], ticks[t1][1])
+        swapped = MergedSchedule(ticks=tuple(ticks), stats=m.stats)
+        with pytest.raises(ValueError):
+            compiler.validate_merged(prog.schedule, dec.schedule, swapped)
+
+
+# ---------------------------------------------------------------------------
+# execute_interleaved: bit-identity to isolated execution
+# ---------------------------------------------------------------------------
+
+class TestInterleavedExecution:
+    @pytest.mark.parametrize("backend", ["ref", "pallas"])
+    def test_bit_identical_to_isolated(self, backend):
+        """A static-int8 CNN wave interleaved with greedy LM decode steps:
+        CNN logits, LM logits, token ids AND the KV cache match isolated
+        execution bitwise on both backends, under both merge policies."""
+        cfg, params, x = _cnn_setup()
+        arch, lm_params, toks = _lm_setup()
+        eng_a = EngineConfig(quant="w8a8", backend=backend)
+        eng_b = EngineConfig(quant="none", backend=backend)
+        qparams = eng_lib.quantize_params(params, eng_a)
+        prog = compiler.compile_calibrated(cfg, params, [x], policy="cost")
+        dec, times_b = _decode_pair(arch)
+        times_a = cost_lib.cnn_node_times(prog.graph, cfg)
+
+        def prefilled():
+            cache = _cache(arch, B, MAX_SEQ, eng_b)
+            logits, cache = T.prefill(lm_params, cache, {"tokens": toks},
+                                      arch, eng_b)
+            cur = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+            return cache, cur
+
+        # isolated: CNN alone, then the greedy decode loop alone
+        iso_cnn = np.asarray(compiler.execute(prog, qparams, x, eng_a))
+        cache, cur = prefilled()
+        iso_ids, iso_logits = [], []
+        for _ in range(STEPS):
+            ld, cache = compiler.execute_decode(dec, lm_params, cache, cur,
+                                                eng_b)
+            iso_logits.append(np.asarray(ld))
+            cur = jnp.argmax(ld[:, -1], -1)[:, None].astype(jnp.int32)
+            iso_ids.append(np.asarray(cur))
+        iso_cache = cache
+
+        for policy in ("asap", "cost"):
+            merged = compiler.merge_schedules(
+                prog.graph, prog.schedule, dec.graph, dec.schedule,
+                times_a, times_b, policy=policy)
+            cache, cur = prefilled()
+            for step in range(STEPS):
+                la, ld, cache = compiler.execute_interleaved(
+                    prog, qparams, x, dec, lm_params, cache, cur,
+                    eng_a, eng_b=eng_b, merged=merged)
+                np.testing.assert_array_equal(np.asarray(la), iso_cnn)
+                np.testing.assert_array_equal(np.asarray(ld),
+                                              iso_logits[step])
+                cur = jnp.argmax(ld[:, -1], -1)[:, None].astype(jnp.int32)
+                np.testing.assert_array_equal(np.asarray(cur),
+                                              iso_ids[step])
+            for got, want in zip(jtu.tree_leaves(cache),
+                                 jtu.tree_leaves(iso_cache)):
+                np.testing.assert_array_equal(np.asarray(got),
+                                              np.asarray(want))
+
+    def test_bit_identical_under_jit(self):
+        """The fused-tick path FabricPump jits: one jitted call running both
+        lanes returns the same CNN logits / LM logits / cache as the
+        isolated JITTED calls the serving engines dispatch (static int8
+        programs on both lanes -- the pump's serving configuration)."""
+        cfg, params, x = _cnn_setup()
+        arch, lm_params, toks = _lm_setup()
+        eng = EngineConfig(quant="w8a8", backend="ref")
+        qparams = eng_lib.quantize_params(params, eng)
+        qlm = eng_lib.quantize_params(lm_params, eng)
+        prog = compiler.compile_calibrated(cfg, params, [x], policy="cost")
+        dec = compiler.compile_lm_calibrated(arch, lm_params, [toks],
+                                             mode="decode", policy="cost")
+        times_a = cost_lib.cnn_node_times(prog.graph, cfg)
+        times_b = cost_lib.lm_node_times(dec.graph, arch, B, 1,
+                                         cache_len=PLEN)
+        merged = compiler.merge_schedules(prog.graph, prog.schedule,
+                                          dec.graph, dec.schedule,
+                                          times_a, times_b, policy="cost")
+        # a fresh cache at pos 0 keeps the setup prefill-free: bit-identity
+        # of the decode step does not care how the history got there
+        cache = _cache(arch, B, MAX_SEQ, eng)
+        cur = toks[:, :1]
+
+        iso_cnn = np.asarray(jax.jit(
+            lambda qp, im: compiler.execute(prog, qp, im, eng))(qparams, x))
+        iso_ld, iso_cache = jax.jit(
+            lambda lp, c, t: compiler.execute_decode(dec, lp, c, t, eng)
+        )(qlm, dict(cache), cur)
+
+        step = jax.jit(lambda qp, im, lp, c, t: compiler.execute_interleaved(
+            prog, qp, im, dec, lp, c, t, eng, merged=merged))
+        la, ld, new_cache = step(qparams, x, qlm, dict(cache), cur)
+        np.testing.assert_array_equal(np.asarray(la), iso_cnn)
+        np.testing.assert_array_equal(np.asarray(ld), np.asarray(iso_ld))
+        for got, want in zip(jtu.tree_leaves(new_cache),
+                             jtu.tree_leaves(iso_cache)):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_lane_kind_validation(self):
+        cfg, params, x = _cnn_setup()
+        arch, lm_params, _ = _lm_setup()
+        eng = EngineConfig(quant="none", backend="ref")
+        fwd = compiler.compile_cnn(cfg)
+        dec, _ = _decode_pair(arch)
+        cache = _cache(arch, B, MAX_SEQ, eng)
+        cur = jnp.zeros((B, 1), jnp.int32)
+        with pytest.raises(ValueError, match="forward"):
+            compiler.execute_interleaved(dec, lm_params, cur, dec, lm_params,
+                                         cache, cur, eng)
+        with pytest.raises(ValueError, match="decode"):
+            compiler.execute_interleaved(fwd, params, x, fwd, params,
+                                         cache, cur, eng)
+
+
+# ---------------------------------------------------------------------------
+# FabricPump: the serving-layer contract
+# ---------------------------------------------------------------------------
+
+N_IMAGES, N_PROMPTS, NEW_TOKENS, WAVE = 6, 2, 4, 4
+
+
+def _pump(interleave: bool):
+    from repro.serve.base import FabricPump
+    from repro.serve.cnn_engine import CNNServeEngine
+    from repro.serve.engine import ServeEngine
+
+    cfg, params, x = _cnn_setup(batch=2)
+    arch, lm_params, toks = _lm_setup()
+    cnn = CNNServeEngine(eng_lib.paper_engine(), wave_size=WAVE)
+    cnn.register(cfg, params, calib_batches=[x])
+    lm = ServeEngine(arch, lm_params, EngineConfig(quant="w8a8",
+                                                   backend="ref"),
+                     batch_size=B, max_seq=MAX_SEQ, calib_batches=[toks],
+                     prefill_len=PLEN)
+    return FabricPump(cnn, lm, interleave=interleave), cfg, arch
+
+
+def _workload(cfg, arch, seed=0):
+    rng = np.random.default_rng(seed)
+    images = [rng.normal(size=(cfg.input_hw, cfg.input_hw, cfg.input_ch)
+                         ).astype(np.float32) for _ in range(N_IMAGES)]
+    prompts = [rng.integers(0, arch.vocab_size, size=PLEN).astype(np.int32)
+               for _ in range(N_PROMPTS)]
+    return images, prompts
+
+
+class TestFabricPump:
+    def test_interleaved_matches_serialized_and_isolated(self):
+        """The acceptance contract: the pump's interleaved run, its
+        serialized run, and isolated per-engine execution all return
+        bit-identical CNN logits and LM token ids."""
+        pump, cfg, arch = _pump(interleave=True)
+        images, prompts = _workload(cfg, arch)
+        il_logits, il_tokens = pump.run(cfg.name, images, prompts,
+                                        max_new_tokens=NEW_TOKENS)
+        st = pump.stats()
+        assert st["ticks"] > 0 and st["fused_ticks"] > 0
+        assert "merged" in st and st["merged"]["ticks"] > 0
+
+        sp, _, _ = _pump(interleave=False)
+        sr_logits, sr_tokens = sp.run(cfg.name, images, prompts,
+                                      max_new_tokens=NEW_TOKENS)
+        assert sp.stats()["fused_ticks"] == 0
+
+        iso, _, _ = _pump(interleave=True)
+        iso_logits = [np.asarray(r) for r in
+                      iso.cnn.infer(cfg.name, np.stack(images))]
+        iso_tokens = list(iso.lm.generate(list(prompts),
+                                          max_new_tokens=NEW_TOKENS))
+
+        assert len(il_logits) == len(sr_logits) == N_IMAGES
+        assert len(il_tokens) == len(sr_tokens) == N_PROMPTS
+        for a, b, c in zip(iso_logits, il_logits, sr_logits):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+        for a, b, c in zip(iso_tokens, list(il_tokens.values()),
+                           list(sr_tokens.values())):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+    def test_latency_tracking(self):
+        """Every request leaves a submit->response latency sample in the
+        pump tracker (the serve_mixed p50/p99 evidence path)."""
+        pump, cfg, arch = _pump(interleave=True)
+        images, prompts = _workload(cfg, arch)
+        pump.run(cfg.name, images, prompts, max_new_tokens=NEW_TOKENS)
+        pct = pump.latency.percentiles()
+        assert pct["n"] == N_IMAGES + N_PROMPTS
+        assert pct["p99_ms"] >= pct["p50_ms"] >= 0.0
