@@ -39,6 +39,10 @@ GUARDED = [
     ("lm spec tokens/s", ("lm_decode", "tokens_per_s_spec"), "higher"),
     ("lm dense tokens/s", ("lm_decode", "tokens_per_s_dense"), "higher"),
     ("lm spec p99 ms", ("lm_decode", "latency_ms", "p99_ms"), "lower"),
+    ("lm prefix-share tokens/s",
+     ("lm_decode", "prefix_sharing", "tokens_per_s"), "higher"),
+    ("lm prefix-share blocks/request",
+     ("lm_decode", "prefix_sharing", "blocks_per_request"), "lower"),
     ("mixed interleaved ops/s", ("mixed_fast", "interleaved", "ops_per_s"),
      "higher"),
     ("mixed interleaved tok/s",

@@ -27,10 +27,15 @@ echo "== decode throughput (compiled vs eager, w4 vs w8) =="
 # "lm_decode" block (merge-preserving; serve_cnn/serve_fleet keys survive)
 python -m benchmarks.serve_lm --decode-summary
 
-echo "== paged KV + speculative decode smoke =="
-# dense vs paged vs paged+speculative on one arch: asserts bit-identical
-# token ids, merges accepted-draft rate / tokens-per-burst / KV bytes-per-
-# slot / p50-p99 latency into BENCH_serve.json's "lm_decode" block
+echo "== paged KV + speculative decode + prefix sharing smoke =="
+# dense vs paged vs paged+speculative on one arch (random AND repetitive-
+# token acceptance legs): asserts bit-identical token ids, merges accepted-
+# draft rate / tokens-per-burst / KV bytes-per-slot / p50-p99 latency into
+# BENCH_serve.json's "lm_decode" block; then the prefix-sharing shared-
+# prompt trace: 8 concurrent requests over one page-aligned system prompt,
+# asserting <=0.6x fresh blocks/request and <=0.5x prefill tokens/request
+# vs a no-sharing baseline, merged under "lm_decode"."prefix_sharing"
+# (blocks/request + tokens/s guarded by bench_guard below)
 python -m benchmarks.serve_lm --fast
 
 echo "== fleet scaling smoke (forced 8 host devices) =="

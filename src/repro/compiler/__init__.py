@@ -25,8 +25,9 @@ from repro.compiler.calibrate import (ChannelCalibrator, PercentileCalibrator,
                                       calibrate, make_calibrator)
 from repro.compiler.executor import (Program, compile_cnn, compile_lm,
                                      execute, execute_decode,
-                                     execute_interleaved, program_cache,
-                                     rope_table_stats, schedule_variant)
+                                     execute_interleaved, prefill_from,
+                                     program_cache, rope_table_stats,
+                                     schedule_variant)
 from repro.compiler.graph import (AddOp, AttnOp, ConcatOp, ConvOp, DwcOp,
                                   EmbedOp, Epilogue, Graph, HeadOp, InputOp,
                                   LinearGroupOp, LinearOp, MulOp, NormOp,
@@ -115,7 +116,7 @@ __all__ = [
     "fuse_projections", "fusion_stats", "get_param", "launch_count",
     "level_schedule", "lower_transformer", "lowering_blockers",
     "make_calibrator", "merge_schedules", "modeled_makespan",
-    "program_cache", "residual_chains",
+    "prefill_from", "program_cache", "residual_chains",
     "rope_table_stats", "schedule_stats", "schedule_variant", "set_param",
     "time_weighted_occupancy", "validate_merged", "validate_schedule",
 ]

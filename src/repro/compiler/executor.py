@@ -77,7 +77,9 @@ class Program:
     kind="forward": stateless (image or token batch) -> logits; run it with
     `execute`.  kind="decode": a DecodeStep program -- the cache-state
     recurrence with signature (params, cache, tokens) -> (logits, cache);
-    run it with `execute_decode`."""
+    run it with `execute_decode`.  kind="chunk": a chunked partial-prefill
+    program over a paged cache (prefix sharing) -- run it with
+    `prefill_from(program, params, cache, tokens, eng, start=...)`."""
     graph: Graph
     cfg: Hashable
     plan: Optional[QuantPlan] = None
@@ -185,24 +187,31 @@ def compile_lm(arch: ArchConfig,
     twins stay node-aligned).  fuse=False keeps the one-op-per-launch
     graph -- the fused-vs-unfused parity baseline.
 
-    `page_size` > 0 (decode mode only) compiles the block-paged DecodeStep
+    `page_size` > 0 (decode / chunk modes) compiles the block-paged
     variant: global-layer AttnOps index cache["tables"] instead of a dense
     [B, max_seq] cache.  The page size rides the program variant (":pN"),
     so paged and dense programs hold distinct ProgramCache lines.
+
+    mode="chunk" is the prefix-sharing partial-prefill program (run with
+    `prefill_from`): a [B, T] prompt TAIL attends the paged cache at a
+    query offset and stores only the slot's owned tail pages.  It
+    requires page_size > 0 and an all-global arch.
     """
     mode = mode or ("prefill" if prefill else "full")
-    if mode not in ("full", "prefill", "decode"):
+    if mode not in ("full", "prefill", "decode", "chunk"):
         raise ValueError(f"unknown LM program mode {mode!r}")
-    if page_size and mode != "decode":
-        raise ValueError("page_size applies to decode programs only")
+    if page_size and mode not in ("decode", "chunk"):
+        raise ValueError("page_size applies to decode/chunk programs only")
+    if mode == "chunk" and page_size <= 0:
+        raise ValueError("chunk programs need page_size > 0")
     variant = (schedule_variant(scheduled, policy) + f":{mode}"
                + (f":p{page_size}" if page_size else "")
                + ("" if fuse else ":nofuse"))
-    kind = "decode" if mode == "decode" else "forward"
+    kind = mode if mode in ("decode", "chunk") else "forward"
 
     def lower(sc=None):
-        if mode == "decode":
-            g = lower_transformer(arch, mode="decode", page_size=page_size)
+        if mode in ("decode", "chunk"):
+            g = lower_transformer(arch, mode=mode, page_size=page_size)
         else:
             g = lower_transformer(arch, last_only=(mode == "prefill"))
         if fuse:
@@ -251,6 +260,10 @@ def execute(program: Program, params, inputs: jax.Array,
         raise ValueError("decode programs carry cache state; run them "
                          "through execute_decode(program, params, cache, "
                          "tokens, eng)")
+    if program.kind == "chunk":
+        raise ValueError("chunk programs carry cache state; run them "
+                         "through prefill_from(program, params, cache, "
+                         "tokens, eng, start=...)")
     if program.static:
         return _execute_static(program, params, inputs, eng, collect)
     return _execute_dynamic(program, params, inputs, eng, observer, collect)
@@ -371,6 +384,76 @@ def commit_decode_kv(program: Program, cache: dict,
     if tables is not None:
         out["tables"] = tables
     return out
+
+
+class _ChunkCtx:
+    """Paged-cache state threaded through a chunk (partial-prefill)
+    program's AttnOps.
+
+    `start` is the STATIC absolute position of the tail's first token
+    (uniform across rows -- sharing pins the padded prompt width, so
+    every admitted row's tail occupies positions [start, start+T)).
+    `row_starts` [B] is each row's first NON-SHARED position: stores
+    below it are dropped (those pages belong to the prefix index and
+    possibly other tables -- the copy-on-write boundary), but the row
+    still RECOMPUTES [start, row_starts) so one fused wave can mix
+    match lengths; recomputed values are bit-identical to the shared
+    pages' content, so skipping their store changes nothing.
+    `mask` [B] gates rows being (re)filled, like _run_paged_prefill."""
+
+    def __init__(self, cache: dict, start: int, row_starts, mask):
+        self.cache = cache
+        self.tables = cache["tables"]
+        self.start = start
+        self.row_starts = row_starts
+        self.mask = mask
+        self.new_layers: Dict[int, dict] = {}
+
+    def entry(self, layer: int) -> dict:
+        return self.cache["layers"][layer]
+
+    def finish(self, width: int) -> dict:
+        layers = [self.new_layers.get(i, e)
+                  for i, e in enumerate(self.cache["layers"])]
+        pos = jnp.where(self.mask, self.start + width, self.cache["pos"])
+        return {"layers": layers, "pos": pos, "tables": self.tables}
+
+
+def prefill_from(program: Program, params, cache: dict, tokens: jax.Array,
+                 eng: EngineConfig, *, start: int, row_starts, mask
+                 ) -> Tuple[jax.Array, dict]:
+    """Run a chunk program: prefill the TAIL of a prompt whose first
+    `start` positions already sit in the paged cache (shared prefix
+    pages matched by the engine's prefix index).
+
+    tokens: [B, T] int32, the tail span (absolute positions
+    [start, start+T)); cache: T.paged_cache_schema layout with "tables"
+    bound.  row_starts [B] is each row's first position NOT covered by
+    its matched prefix (start <= row_starts[b] <= start+T); mask [B]
+    gates the rows being filled.  Returns (last-position logits
+    [B, 1, V], new cache) -- masked rows' cache entries and positions
+    are untouched, matching `_run_paged_prefill` semantics.
+
+    start == 0 with row_starts == 0 reproduces a whole-prompt paged
+    prefill through the same program, which is what makes any
+    page-aligned split point bit-identical: the attended k/v ALWAYS
+    round-trips the cache dtype, whether it came from a shared page or
+    the fresh tail."""
+    if program.kind != "chunk":
+        raise ValueError(f"prefill_from needs a chunk program, got "
+                         f"kind={program.kind!r}")
+    b = tokens.shape[0]
+    row_starts = jnp.broadcast_to(
+        jnp.asarray(row_starts, jnp.int32), (b,))
+    mask = jnp.broadcast_to(jnp.asarray(mask, bool), (b,))
+    ctx = _ChunkCtx(cache, jnp.asarray(start, jnp.int32), row_starts, mask)
+    if program.static:
+        logits = _execute_static(program, params, tokens, eng, None,
+                                 chunk=ctx)
+    else:
+        logits = _execute_dynamic(program, params, tokens, eng, None, None,
+                                  chunk=ctx)
+    return logits, ctx.finish(tokens.shape[1])
 
 
 # ---------------------------------------------------------------------------
@@ -580,6 +663,40 @@ def _attn_update_eval(n: AttnOp, q: jax.Array, k: jax.Array, v: jax.Array,
     return out.reshape(b, 1, n.n_heads * n.head_dim).astype(jnp.float32)
 
 
+def _attn_chunk_eval(n: AttnOp, q: jax.Array, k: jax.Array, v: jax.Array,
+                     rope_c, ctx: "_ChunkCtx", eng: EngineConfig
+                     ) -> jax.Array:
+    """AttnOp in `chunk` mode: the prefix-sharing partial prefill.
+
+    The tail's fresh (k, v) is RoPE'd at its absolute positions
+    (start + j), scattered through the block table into the slot's OWNED
+    tail pages only (positions < row_starts[b] drop -- those pages are
+    shared, read-only), then the tail queries attend the gathered cache
+    view at q_offset=start.  Reading back AFTER the store means every
+    attended key -- shared prefix and fresh tail alike -- has
+    round-tripped the cache dtype, so logits are invariant to WHERE the
+    page-aligned split fell (the bit-identity contract the golden test
+    pins).  Rows whose match extends past `start` recompute those
+    positions; the recomputed bits equal the shared pages' content, and
+    their store is masked off, so nothing shared is ever written."""
+    b, t = q.shape[0], q.shape[1]
+    g = n.n_heads // n.n_kv_heads
+    q = q.reshape(b, t, n.n_kv_heads, g, n.head_dim)
+    k = k.reshape(b, t, n.n_kv_heads, n.head_dim)
+    v = v.reshape(b, t, n.n_kv_heads, n.head_dim)
+    cos, sin = rope_c(b, t, n.head_dim, n.rope_theta)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    entry = ctx.entry(n.layer)
+    entry = T._paged_tail_store(entry, k, v, ctx.tables, ctx.mask, eng,
+                                n.page_size, ctx.start, ctx.row_starts)
+    ctx.new_layers[n.layer] = entry
+    kc, vc = T._paged_kv_read(entry, ctx.tables, eng)
+    out = L.flash_attention(q, kc, vc, causal=True, window=n.window,
+                            logit_softcap=n.softcap, q_offset=ctx.start)
+    return out.reshape(b, t, n.n_heads * n.head_dim).astype(jnp.float32)
+
+
 def _attn_eval(n: AttnOp, q: jax.Array, k: jax.Array, v: jax.Array,
                rope, collect: Optional[dict]) -> jax.Array:
     b, l = q.shape[0], q.shape[1]
@@ -619,13 +736,16 @@ def _head_eval(n: HeadOp, x: jax.Array, params) -> jax.Array:
 
 def _dynamic_eval(program: Program, params, images, eng: EngineConfig,
                   collect: Optional[dict] = None,
-                  decode: Optional[_DecodeCtx] = None):
+                  decode: Optional[_DecodeCtx] = None,
+                  chunk: Optional["_ChunkCtx"] = None):
     """The dynamic-mode eval_node closure for one program invocation.
 
     Factored out of _execute_dynamic so execute_interleaved can drive two
     programs' evaluators on one merged tick stream."""
     rope = _rope_table
     rope_d = _rope_decode_memo(decode.pos) if decode is not None else None
+    rope_c = (_rope_decode_memo(jnp.asarray(chunk.start, jnp.int32))
+              if chunk is not None else None)
 
     def eval_node(n: OpNode, vals: Dict[int, jax.Array]) -> jax.Array:
         if isinstance(n, InputOp):
@@ -691,6 +811,10 @@ def _dynamic_eval(program: Program, params, images, eng: EngineConfig,
                 return _attn_update_eval(n, vals[n.inputs[0]],
                                          vals[n.inputs[1]], vals[n.inputs[2]],
                                          rope_d, decode, eng)
+            if n.mode == "chunk":
+                return _attn_chunk_eval(n, vals[n.inputs[0]],
+                                        vals[n.inputs[1]], vals[n.inputs[2]],
+                                        rope_c, chunk, eng)
             return _attn_eval(n, vals[n.inputs[0]], vals[n.inputs[1]],
                               vals[n.inputs[2]], rope, collect)
         if isinstance(n, HeadOp):
@@ -702,8 +826,10 @@ def _dynamic_eval(program: Program, params, images, eng: EngineConfig,
 
 def _execute_dynamic(program: Program, params, images, eng: EngineConfig,
                      observer=None, collect: Optional[dict] = None,
-                     decode: Optional[_DecodeCtx] = None) -> jax.Array:
-    eval_node = _dynamic_eval(program, params, images, eng, collect, decode)
+                     decode: Optional[_DecodeCtx] = None,
+                     chunk: Optional["_ChunkCtx"] = None) -> jax.Array:
+    eval_node = _dynamic_eval(program, params, images, eng, collect, decode,
+                              chunk)
     return _run_scheduled(program, eval_node, observer)
 
 
@@ -723,7 +849,8 @@ def _require_qtensor(w, n: OpNode, path=None):
 
 def _static_eval(program: Program, params, images,
                  eng: EngineConfig, collect: Optional[dict] = None,
-                 decode: Optional[_DecodeCtx] = None):
+                 decode: Optional[_DecodeCtx] = None,
+                 chunk: Optional["_ChunkCtx"] = None):
     """The static-mode eval_node closure for one program invocation (the
     counterpart of _dynamic_eval; shared by _execute_static and
     execute_interleaved)."""
@@ -731,6 +858,8 @@ def _static_eval(program: Program, params, images,
     scale_of = plan.out_scale
     rope = _rope_table
     rope_d = _rope_decode_memo(decode.pos) if decode is not None else None
+    rope_c = (_rope_decode_memo(jnp.asarray(chunk.start, jnp.int32))
+              if chunk is not None else None)
 
     def out_scale_for(n: OpNode):
         return scale_of[n.id] if plan.emit_int8[n.id] else None
@@ -864,6 +993,11 @@ def _static_eval(program: Program, params, images,
                                       _raw(vals[n.inputs[1]]),
                                       _raw(vals[n.inputs[2]]),
                                       rope_d, decode, eng)
+            elif n.mode == "chunk":
+                r = _attn_chunk_eval(n, _raw(vals[n.inputs[0]]),
+                                     _raw(vals[n.inputs[1]]),
+                                     _raw(vals[n.inputs[2]]),
+                                     rope_c, chunk, eng)
             else:
                 r = _attn_eval(n, _raw(vals[n.inputs[0]]),
                                _raw(vals[n.inputs[1]]),
@@ -878,8 +1012,10 @@ def _static_eval(program: Program, params, images,
 
 def _execute_static(program: Program, params, images,
                     eng: EngineConfig, collect: Optional[dict] = None,
-                    decode: Optional[_DecodeCtx] = None) -> jax.Array:
-    eval_node = _static_eval(program, params, images, eng, collect, decode)
+                    decode: Optional[_DecodeCtx] = None,
+                    chunk: Optional["_ChunkCtx"] = None) -> jax.Array:
+    eval_node = _static_eval(program, params, images, eng, collect, decode,
+                             chunk)
     out = _run_scheduled(program, eval_node)
     return out.dequant() if isinstance(out, QTensor) else out
 

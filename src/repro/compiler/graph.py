@@ -214,6 +214,15 @@ class AttnOp(OpNode):
     `layer` keys the collected (k, v) pair for serving-cache fill.
 
     mode="full":   full-sequence causal attention (prefill / training).
+    mode="chunk":  chunked (partial) prefill over a block-paged cache --
+      the program input is the TAIL [B, T] of a prompt whose first
+      `start` positions already sit in shared prefix pages.  The op
+      roundtrips the fresh tail k/v through the cache dtype (so any
+      page-aligned split point yields bit-identical logits to running
+      the whole prompt through this program), scatters it into the
+      slot's OWNED tail pages (`_paged_tail_store`; shared prefix pages
+      are never written -- the copy-on-write boundary), and attends the
+      tail queries at offset `start` against the gathered cache view.
     mode="update": the cache-state recurrence of a DecodeStep program --
       the new (k, v) pairs are written into the serving KV cache at the
       slot's position index (ring-indexed for local layers), then the
@@ -235,8 +244,8 @@ class AttnOp(OpNode):
     rope_theta: float = 10000.0
     softcap: float = 0.0
     window: int = 0                  # >0: local attention window
-    mode: str = "full"               # full | update (decode cache step)
-    page_size: int = 0               # >0: block-paged cache (update mode)
+    mode: str = "full"               # full | chunk | update (cache step)
+    page_size: int = 0               # >0: block-paged cache (chunk/update)
 
 
 @dataclass(frozen=True)
@@ -400,9 +409,20 @@ def lower_transformer(arch: ArchConfig, last_only: bool = False,
     scales recorded on the full graph transfer to the decode graph by node
     id -- one calibration run statically quantizes both programs.
 
-    page_size > 0 (decode mode only) marks the global-layer AttnOps
-    block-paged: their cache state is a shared block pool indexed through
-    cache["tables"] (see AttnOp docstring).  The node sequence is
+    mode="chunk" (prefix-sharing prefill): the same node sequence over a
+    [B, T] tail input, every global AttnOp in `chunk` mode (attend the
+    paged cache view at a query offset, store only the slot's owned tail
+    pages).  The executor runs it through `prefill_from(program, params,
+    cache, tokens, eng, start, ...)`.  Node order is identical to the
+    full graph's, so calibration scales transfer by node id here too.
+    Local (ring) layers are not chunkable -- their dense window state has
+    no page boundary to share at -- so chunk lowering requires an
+    all-global arch (the serving engine falls back to whole-prompt
+    prefill for archs with local layers).
+
+    page_size > 0 (decode / chunk modes only) marks the global-layer
+    AttnOps block-paged: their cache state is a shared block pool indexed
+    through cache["tables"] (see AttnOp docstring).  The node sequence is
     unchanged, so calibration scales still transfer by node id and paged
     programs reuse the dense calibration run.
 
@@ -410,12 +430,15 @@ def lower_transformer(arch: ArchConfig, last_only: bool = False,
     the SwiGLU gate and the attention core run on the MISC core, mirroring
     the paper's non-convolution operator mapping.
     """
-    if mode not in ("full", "decode"):
+    if mode not in ("full", "decode", "chunk"):
         raise ValueError(f"unknown lowering mode {mode!r} "
-                         "(want 'full' or 'decode')")
-    if page_size and mode != "decode":
-        raise ValueError("page_size applies to decode programs only "
+                         "(want 'full', 'decode' or 'chunk')")
+    if page_size and mode == "full":
+        raise ValueError("page_size applies to decode/chunk programs only "
                          "(prefill fills the cache through `collect`)")
+    if mode == "chunk" and page_size <= 0:
+        raise ValueError("chunk lowering needs page_size > 0 "
+                         "(it stores through the block table)")
     if page_size < 0:
         raise ValueError(f"page_size must be >= 0, got {page_size}")
     blockers = lowering_blockers(arch)
@@ -423,7 +446,12 @@ def lower_transformer(arch: ArchConfig, last_only: bool = False,
         raise NotImplementedError(
             f"{arch.name}: cannot lower to the engine IR "
             f"({'; '.join(blockers)}); serve it eagerly")
-    attn_mode = "update" if mode == "decode" else "full"
+    if mode == "chunk" and any(arch.layer_kind(i) == "local"
+                               for i in range(arch.n_layers)):
+        raise NotImplementedError(
+            f"{arch.name}: chunk lowering requires all-global attention "
+            "(local ring layers have no page boundary to share at)")
+    attn_mode = {"full": "full", "decode": "update", "chunk": "chunk"}[mode]
     b = _Builder()
     tokens = b.add(InputOp, [])
     x = b.add(EmbedOp, [tokens], w=("embed",),
@@ -470,9 +498,10 @@ def lower_transformer(arch: ArchConfig, last_only: bool = False,
     x = b.add(HeadOp, [x],
               w=("embed",) if arch.tie_embeddings else ("head",),
               tied=arch.tie_embeddings, softcap=arch.final_softcap,
-              last_only=last_only and mode == "full")
+              last_only=(last_only and mode == "full") or mode == "chunk")
     if mode == "full":
         name = arch.name
     else:
-        name = f"{arch.name}:decode" + (f":p{page_size}" if page_size else "")
+        name = (f"{arch.name}:{mode}"
+                + (f":p{page_size}" if page_size else ""))
     return Graph(tuple(b.nodes), output=x, name=name)

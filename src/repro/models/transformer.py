@@ -591,6 +591,45 @@ def _paged_prefill_store(entry: dict, k, v, tables: jax.Array,
     return entry
 
 
+def _paged_tail_store(entry: dict, k, v, tables: jax.Array,
+                      mask: jax.Array, eng: EngineConfig, page: int,
+                      base, row_starts: jax.Array) -> dict:
+    """Scatter a chunked prefill's TAIL span [B, T, Hkv, D] into the block
+    pool through the table.  Column j of the span sits at absolute cache
+    position `base + j`; a row writes only positions `>= row_starts[r]`
+    (its first non-shared token), so pages matched out of the prefix index
+    -- owned by other tables too -- are never written (the copy-on-write
+    boundary).  Rows gated by `mask` [B] as in _paged_prefill_store."""
+    entry = dict(entry)
+    b, t = k.shape[0], k.shape[1]
+    pidx = base + jnp.arange(t)                         # absolute positions
+    blk = jnp.take_along_axis(
+        tables, jnp.broadcast_to((pidx // page)[None, :], (b, t)), axis=1)
+    flat = blk * page + (pidx % page)[None, :]          # [B, T]
+    oob = entry["k"].shape[0] * page                    # mode="drop" target
+    write = mask[:, None] & (pidx[None, :] >= row_starts[:, None])
+    flat = jnp.where(write, flat, oob)                  # shared pages drop
+
+    def store(pool, val):
+        fp = pool.reshape((-1,) + pool.shape[2:])
+        fp = fp.at[flat.reshape(-1)].set(
+            val.reshape((-1,) + val.shape[2:]).astype(pool.dtype),
+            mode="drop")
+        return fp.reshape(pool.shape)
+
+    if eng.kv_cache_dtype == "int8":
+        kq = quantize_act_dynamic(k, per_token=True)
+        vq = quantize_act_dynamic(v, per_token=True)
+        entry["k"] = store(entry["k"], kq.q)
+        entry["v"] = store(entry["v"], vq.q)
+        entry["k_scale"] = store(entry["k_scale"], kq.scale[..., 0])
+        entry["v_scale"] = store(entry["v_scale"], vq.scale[..., 0])
+        return entry
+    entry["k"] = store(entry["k"], k)
+    entry["v"] = store(entry["v"], v)
+    return entry
+
+
 # ---------------------------------------------------------------------------
 # Prefill
 # ---------------------------------------------------------------------------

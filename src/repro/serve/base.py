@@ -399,7 +399,11 @@ class FabricPump:
         self.merge_policy = merge_policy
         self.interleave = interleave
         self.latency = LatencyTracker()
-        self._fused = None    # (cnn program, lm program, jitted step, merged)
+        # per CNN model: (cnn program, lm program, jitted step, merged) --
+        # each registered model fuses its own program pair with the LM
+        # decode step, so a multi-model run round-robins fused ticks
+        # without re-tracing
+        self._fused: Dict[str, tuple] = {}
         self.ticks = 0
         self.fused_ticks = 0
         self.solo_cnn_ticks = 0
@@ -429,8 +433,8 @@ class FabricPump:
         donated like the engine's own decode step."""
         prog_a = self.cnn.program_for(name)
         prog_b = self.lm.decode_program()
-        if (self._fused is None or self._fused[0] is not prog_a
-                or self._fused[1] is not prog_b):
+        ent = self._fused.get(name)
+        if (ent is None or ent[0] is not prog_a or ent[1] is not prog_b):
             merged = self.merged_schedule(name)
             eng_a, eng_b = self.cnn.eng, self.lm.eng
 
@@ -439,19 +443,38 @@ class FabricPump:
                                            prog_b, lparams, cache, cur,
                                            eng_a, eng_b, merged=merged)
 
-            self._fused = (prog_a, prog_b,
-                           jax.jit(step, donate_argnums=(3,)), merged)
-        return self._fused[2]
+            ent = (prog_a, prog_b,
+                   jax.jit(step, donate_argnums=(3,)), merged)
+            self._fused[name] = ent
+        return ent[2]
 
     # -- the pump ------------------------------------------------------------
 
-    def run(self, cnn_name: str, images: Sequence[np.ndarray],
-            prompts: Sequence, max_new_tokens: int = 8
+    def run(self, submissions, images: Optional[Sequence[np.ndarray]] = None,
+            prompts: Optional[Sequence] = None, max_new_tokens: int = 8
             ) -> Tuple[List[np.ndarray], Dict[int, np.ndarray]]:
-        """Serve a CNN image trace and an LM prompt trace to completion on
+        """Serve CNN image traces and an LM prompt trace to completion on
         one tick stream.  Returns (cnn logits in submission order,
-        {lm ticket: greedy token ids})."""
+        {lm ticket: greedy token ids}).
+
+        `submissions` is either a single model name (the legacy form:
+        `run(name, images, prompts)`) or a {model name: [images...]} dict
+        spanning several registered CNNs (`run({...}, prompts)`).  The
+        dict form packs waves per input shape -- same-shape models share
+        wave buffers, engine-style -- and drains the shape groups
+        round-robin, so every tenant's waves interleave with the LM lane
+        instead of one model monopolizing the early fused ticks.  Each
+        model's program pair fuses with the LM decode step under its own
+        merged schedule, cached across runs."""
         cnn, lm = self.cnn, self.lm
+        if isinstance(submissions, str):
+            subs = {submissions: list(images) if images is not None else []}
+        else:
+            subs = {name: list(imgs) for name, imgs in submissions.items()}
+            if prompts is None:
+                # dict form shifts the positionals: run(subs, prompts, ...)
+                prompts = images
+        prompts = list(prompts) if prompts is not None else []
         if getattr(lm, "paged", False):
             raise ValueError("FabricPump serves the dense KV path; paged "
                              "engines fuse their own prefill+merge steps")
@@ -466,7 +489,8 @@ class FabricPump:
             raise ValueError("FabricPump is single-device; drop mesh=")
 
         # -- submit both tenants' traces -------------------------------------
-        cnn_tickets = [cnn.submit(cnn_name, img) for img in images]
+        cnn_tickets = [cnn.submit(name, img)
+                       for name, imgs in subs.items() for img in imgs]
         lm_tickets = []
         for p in prompts:
             t = lm.submit(p, max_new_tokens)
@@ -475,24 +499,43 @@ class FabricPump:
             lm_tickets.append(t)
 
         # -- CNN lane: pre-pack the wave buffers (zero-padded tail) ----------
-        cfg = cnn._models[cnn_name].cfg
-        shape = (cfg.input_hw, cfg.input_hw, cfg.input_ch)
-        waves: List[Tuple[jax.Array, List[Tuple[int, int]]]] = []
-        while True:
-            wave = cnn._sched.take_wave(shape, force=True)
-            if wave is None:
-                break
-            buf = np.zeros((cnn.wave_rows,) + shape, np.float32)
-            slots = []
-            for slot, (ticket, (name, img)) in enumerate(wave):
-                buf[slot] = img
-                slots.append((slot, ticket))
-            waves.append((jnp.asarray(buf), slots))
-            cnn.wave_stats.requests += len(wave)
-            cnn.wave_stats.waves += 1
-            cnn.wave_stats.padded += cnn.wave_rows - len(wave)
+        # Waves are keyed by INPUT SHAPE (the scheduler's grouping: models
+        # with one shape share buffers) and drained ROUND-ROBIN across the
+        # shape groups, so a multi-model trace alternates tenants on the
+        # fused tick stream rather than finishing one model first.
+        shapes: List[Tuple[int, int, int]] = []
+        for name in subs:
+            cfg = cnn._models[name].cfg
+            shape = (cfg.input_hw, cfg.input_hw, cfg.input_ch)
+            if shape not in shapes:
+                shapes.append(shape)
+        waves: List[Tuple[jax.Array,
+                          Dict[str, List[Tuple[int, int]]]]] = []
+        live = list(shapes)
+        while live:
+            for shape in list(live):     # one wave per live group per pass
+                wave = cnn._sched.take_wave(shape, force=True)
+                if wave is None:
+                    live.remove(shape)
+                    continue
+                buf = np.zeros((cnn.wave_rows,) + shape, np.float32)
+                slots_of: Dict[str, List[Tuple[int, int]]] = {}
+                for slot, (ticket, (name, img)) in enumerate(wave):
+                    buf[slot] = img
+                    slots_of.setdefault(name, []).append((slot, ticket))
+                waves.append((jnp.asarray(buf), slots_of))
+                cnn.wave_stats.requests += len(wave)
+                cnn.wave_stats.waves += 1
+                cnn.wave_stats.padded += cnn.wave_rows - len(wave)
         cnn._sched.next_epoch()
-        cnn_run, qparams = cnn._executor_for(cnn_name)
+        executors = {name: cnn._executor_for(name) for name in subs}
+
+        def launch_model(name, buf, slots, in_flight):
+            run_fn, qp = executors[name]
+            in_flight.append((run_fn(qp, buf), slots))
+            cnn.wave_stats.program_execs += 1
+            cnn.execs_by_model[name] = cnn.execs_by_model.get(name, 0) + 1
+
         in_flight: List[Tuple[object, List[Tuple[int, int]]]] = []
         wave_i = 0
 
@@ -529,22 +572,33 @@ class FabricPump:
 
         def decode_tick(cur, cache):
             """One fabric tick: one LM decode step, co-scheduled with the
-            next CNN wave when one is pending."""
+            next CNN wave when one is pending.  A multi-model wave fuses
+            ONE model's execution with the decode step (the fused call zips
+            exactly one program pair); the wave's same-shape foreign models
+            launch solo on the same tick, engine-style."""
             nonlocal wave_i
             self.ticks += 1
             if wave_i < len(waves):
-                buf, slots = waves[wave_i]
+                buf, slots_of = waves[wave_i]
                 wave_i += 1
-                cnn.wave_stats.program_execs += 1
-                cnn.execs_by_model[cnn_name] = (
-                    cnn.execs_by_model.get(cnn_name, 0) + 1)
+                names = list(slots_of)
+                fused_with = None
+                logits_b = None
                 if self.interleave:
-                    logits_a, logits_b, cache = self._fused_step(cnn_name)(
-                        qparams, buf, lm.params, cache, cur)
-                    in_flight.append((logits_a, slots))
+                    fused_with = names[0]
+                    run_fn, qp = executors[fused_with]
+                    logits_a, logits_b, cache = self._fused_step(fused_with)(
+                        qp, buf, lm.params, cache, cur)
+                    in_flight.append((logits_a, slots_of[fused_with]))
+                    cnn.wave_stats.program_execs += 1
+                    cnn.execs_by_model[fused_with] = (
+                        cnn.execs_by_model.get(fused_with, 0) + 1)
                     self.fused_ticks += 1
+                for name in names:
+                    if name != fused_with:
+                        launch_model(name, buf, slots_of[name], in_flight)
+                if logits_b is not None:
                     return logits_b, cache
-                in_flight.append((cnn_run(qparams, buf), slots))
             else:
                 self.solo_lm_ticks += 1
             logits_b, cache = decode_exec(lm.params, cache, cur)
@@ -622,12 +676,10 @@ class FabricPump:
 
         # -- drain leftover CNN waves (LM lane dry) --------------------------
         while wave_i < len(waves):
-            buf, slots = waves[wave_i]
+            buf, slots_of = waves[wave_i]
             wave_i += 1
-            in_flight.append((cnn_run(qparams, buf), slots))
-            cnn.wave_stats.program_execs += 1
-            cnn.execs_by_model[cnn_name] = (
-                cnn.execs_by_model.get(cnn_name, 0) + 1)
+            for name, slots in slots_of.items():
+                launch_model(name, buf, slots, in_flight)
             self.ticks += 1
             self.solo_cnn_ticks += 1
 
@@ -653,6 +705,11 @@ class FabricPump:
             "merge_policy": self.merge_policy,
             "latency_ms": self.latency.percentiles(),
         }
-        if self._fused is not None:
-            out["merged"] = dict(self._fused[3].stats)
+        if self._fused:
+            # legacy single-model key: the first fused pair's merged stats;
+            # the per-model dict carries every tenant's schedule evidence
+            first = next(iter(self._fused.values()))
+            out["merged"] = dict(first[3].stats)
+            out["merged_by_model"] = {name: dict(ent[3].stats)
+                                      for name, ent in self._fused.items()}
         return out

@@ -46,6 +46,31 @@ follows the measured request footprint (the paper's bandwidth thesis
 applied to cache capacity).  Paged decode is bit-identical to dense: the
 gather is a pure copy and masked positions exp-underflow to exactly zero.
 
+With `prefix_sharing=True` (paged only, pinned `prefill_len`) requests that
+share a page-aligned prompt PREFIX share the physical KV blocks holding it:
+a hash-chain prefix index over page-sized token chunks (keyed by the
+engine's (calibration-id, page_size)) maps each admitted request's padded
+row to the longest already-cached prefix, the allocator refcounts those
+blocks instead of allocating new ones (`BlockAllocator.share`), and
+prefill runs a CHUNK program over only the unshared tail
+(`compiler.prefill_from`): shared pages are read-only (stores below a
+row's matched length drop -- copy-on-write at the page boundary), decode
+writes always land in freshly owned pages, and release decrements
+refcounts, freeing a block only when its last owner leaves.  The chunk
+program ALWAYS round-trips attended k/v through the cache dtype (it
+stores the fresh tail, then attends the gathered view), so a request's
+token ids are a pure function of its padded row -- invariant to where
+the page-aligned split falls and to index warmth.  When the compute
+dtype equals the cache dtype (quant="none", bf16 cache: store-cast is
+the identity) that makes shared serving bit-identical to non-shared
+serving; with f32 attention inputs (static int8 programs) or an int8 KV
+cache, non-shared PREFILL attends pre-roundtrip values the shared prefix
+cannot reproduce, so sharing stays deterministic and split-invariant but
+may round differently than the isolated engine.  Archs with local (ring)
+attention layers fall back to whole-prompt prefill (the dense ring has no
+page boundary to share at); `stats()["prefix_sharing"]` records the
+blocker.
+
 With `draft_len=k` decode runs SPECULATIVE bursts: each step teacher-forces
 the current token plus k self-speculative n-gram drafts (no second model)
 through ONE [B, 1+k]-wide DecodeStep execution (`execute_verify`), accepts
@@ -84,6 +109,110 @@ from repro.serve.program_cache import ProgramCache
 _LM = "lm"                            # the scheduler's single slot group
 
 
+class PrefixIndex:
+    """Hash-chain index over page-aligned token chunks -> physical blocks.
+
+    Each node keys one page-sized chunk of a padded prompt by the CHAIN of
+    chunks before it (the node key is the tuple of chunk byte-strings from
+    the root), so `match()` walks the longest indexed prefix in O(pages)
+    dict lookups -- a radix tree flattened into a dict.  The index holds
+    its OWN refcount on every registered block (`alloc.share`), so a block
+    stays warm for future matches after its last request leaves; under
+    allocation pressure `evict_for()` drops leaf nodes nobody but the
+    index references (refcount == 1), children before parents.
+
+    `key` records the (calibration-id, page_size) the index is valid for:
+    cached KV bits are a function of both, so an engine never matches
+    pages produced under a different quantization or page geometry.
+    """
+
+    def __init__(self, page_size: int, alloc: BlockAllocator,
+                 key=None):
+        self.page = int(page_size)
+        self.alloc = alloc
+        self.key = key
+        # chain-key tuple -> {"block": id, "children": set of chain keys}
+        self._nodes: Dict[tuple, dict] = {}
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._nodes)
+
+    def _chunk(self, row: np.ndarray, i: int) -> bytes:
+        return np.ascontiguousarray(
+            row[i * self.page:(i + 1) * self.page], np.int32).tobytes()
+
+    def match(self, row: np.ndarray, max_pages: int) -> List[int]:
+        """Block ids of the longest indexed page-aligned prefix of `row`
+        (the PADDED prompt -- pad tokens are ordinary context, so cached
+        bits are a function of the padded row).  Pure: no refcounts move;
+        callers `alloc.share()` the result when they bind it."""
+        key, blocks = (), []
+        for i in range(min(max_pages, len(row) // self.page)):
+            nkey = key + (self._chunk(row, i),)
+            node = self._nodes.get(nkey)
+            if node is None:
+                break
+            blocks.append(node["block"])
+            key = nkey
+        return blocks
+
+    def register(self, row: np.ndarray, blocks: List[int],
+                 pages: int) -> int:
+        """Index the first `pages` chunks of `row` against `blocks`.  Pages
+        already indexed keep their existing node (the caller matched them,
+        so blocks[i] IS that node's block); new nodes take an index-owned
+        refcount.  Returns how many new nodes were added."""
+        key, added = (), 0
+        for i in range(min(pages, len(row) // self.page, len(blocks))):
+            nkey = key + (self._chunk(row, i),)
+            if nkey not in self._nodes:
+                self.alloc.share([blocks[i]])        # the index's own ref
+                self._nodes[nkey] = {"block": blocks[i], "children": set()}
+                if key in self._nodes:
+                    self._nodes[key]["children"].add(nkey)
+                added += 1
+            key = nkey
+        return added
+
+    def held_only(self) -> int:
+        """Blocks the index alone still references (refcount == 1) --
+        reclaimable by eviction, and excluded from 'active' occupancy."""
+        return sum(1 for n in self._nodes.values()
+                   if self.alloc.refcount(n["block"]) == 1)
+
+    def evict_for(self, need: int, protected=frozenset()) -> int:
+        """Free index-only leaf nodes (children first) until `need` blocks
+        are free or nothing evictable remains.  `protected` blocks (a
+        candidate request's matched chain) are never victims.  Returns the
+        number of nodes evicted."""
+        evicted = 0
+        while self.alloc.free_blocks < need:
+            victim = next(
+                (k for k, n in self._nodes.items()
+                 if not n["children"]
+                 and n["block"] not in protected
+                 and self.alloc.refcount(n["block"]) == 1), None)
+            if victim is None:
+                break
+            node = self._nodes.pop(victim)
+            parent = victim[:-1]
+            if parent in self._nodes:
+                self._nodes[parent]["children"].discard(victim)
+            self.alloc.free([node["block"]])
+            self.evictions += 1
+            evicted += 1
+        return evicted
+
+    def reset(self) -> None:
+        """Drop every node and its ref -- for when the pool backing the
+        indexed bits is discarded (the chains would otherwise resolve to
+        blocks whose contents no longer exist)."""
+        for node in self._nodes.values():
+            self.alloc.free([node["block"]])
+        self._nodes.clear()
+
+
 @dataclasses.dataclass
 class Request:
     prompt: np.ndarray              # [L] int32
@@ -119,6 +248,12 @@ class LMServeStats:
     drafted_tokens: int = 0           # draft tokens eligible for acceptance
     accepted_drafts: int = 0          # drafts that matched greedy decode
     committed_tokens: int = 0         # tokens emitted by spec bursts
+    prefill_tokens_computed: int = 0  # prompt tokens actually run through
+                                      # a prefill program (tail-only under
+                                      # prefix sharing)
+    prefix_hits: int = 0              # requests that matched >= 1 page
+    prefix_misses: int = 0            # requests that matched nothing
+    prefix_shared_blocks: int = 0     # blocks joined via refcount bumps
     batch: int = 0
 
     @property
@@ -164,7 +299,8 @@ class ServeEngine(ProgramServeBase):
                  kv_layout: str = "dense",
                  page_size: int = 8,
                  kv_blocks: Optional[int] = None,
-                 draft_len: int = 0):
+                 draft_len: int = 0,
+                 prefix_sharing: bool = False):
         super().__init__(eng, cache_capacity=cache_capacity,
                          scheduled=scheduled, cache=cache,
                          schedule_policy=schedule_policy, mesh=mesh)
@@ -232,7 +368,31 @@ class ServeEngine(ProgramServeBase):
                                         np.int32)
             self._slot_blocks: List[List[int]] = [[] for _ in
                                                   range(batch_size)]
+        # -- prefix sharing (refcounted copy-on-write blocks) --------------
+        self.prefix_sharing = bool(prefix_sharing)
+        self.prefix_sharing_blockers: List[str] = []
+        self.prefix_index: Optional[PrefixIndex] = None
+        if self.prefix_sharing:
+            if not self.paged:
+                raise ValueError("prefix_sharing requires kv_layout='paged' "
+                                 "(it shares physical KV pages)")
+            if prefill_len is None:
+                raise ValueError(
+                    "prefix_sharing requires a pinned prefill_len: cached "
+                    "KV bits are a function of the PADDED row, so the pad "
+                    "width must not depend on queue composition")
+            if any(arch.layer_kind(i) == "local"
+                   for i in range(arch.n_layers)):
+                # documented fallback (not an error): the dense ring KV of
+                # local layers has no page boundary to share at, so these
+                # archs serve with private whole-prompt prefill
+                self.prefix_sharing_blockers.append(
+                    "local attention layers (dense ring KV has no page "
+                    "boundary)")
+                self.prefix_sharing = False
         self._paged_jit = None        # (program, jitted paged prefill+merge)
+        self._chunk_jit = None        # (program, jitted chunk prefill)
+        self._pool_cache = None       # paged pool persisted across runs
         self._spec_jit = None         # (program, jitted verify+commit step)
         # calibration only feeds the compiled static programs; skip the
         # (whole-param-tree) digest when both paths stay eager.  w4a8
@@ -251,6 +411,12 @@ class ServeEngine(ProgramServeBase):
         self.calibrator = calibrator
         self.granularity = granularity
         self._scales = None           # one calibration run, both programs
+        if self.prefix_sharing:
+            # the index is only valid for KV bits produced under THIS
+            # quantization + page geometry, so it carries both as its key
+            self.prefix_index = PrefixIndex(self.page_size, self.alloc,
+                                            key=(self.calib_id,
+                                                 self.page_size))
         self._sched = SlotScheduler(batch_size)
         self.serve_stats = LMServeStats(batch=batch_size)
 
@@ -306,8 +472,15 @@ class ServeEngine(ProgramServeBase):
                + (f":k{self.draft_len}" if self.draft_len else ""))
         return self._program_key(self.arch, self.calib_id, tag=tag)
 
+    def _chunk_key(self):
+        # the chunk (prefix-sharing partial-prefill) program variant; page
+        # size rides the tag like the decode key's
+        return self._program_key(self.arch, self.calib_id,
+                                 tag=f"chunk:p{self.page_size}")
+
     def _compile_mode(self, mode: str) -> ex.Program:
-        page = self.page_size if (self.paged and mode == "decode") else 0
+        page = (self.page_size
+                if (self.paged and mode in ("decode", "chunk")) else 0)
         if self.calib_batches is None:
             return compiler.compile_lm(self.arch, scheduled=self.scheduled,
                                        policy=self.schedule_policy,
@@ -327,6 +500,14 @@ class ServeEngine(ProgramServeBase):
         """The compiled DecodeStep program: ProgramCache hit, or compile."""
         return self._cached_program(self._decode_key(),
                                     lambda: self._compile_mode("decode"))
+
+    def chunk_program(self) -> ex.Program:
+        """The compiled chunk (prefill-tail) program: ProgramCache hit, or
+        compile.  Used for EVERY prefill when prefix sharing is on --
+        start=0 on an index miss -- so logits are invariant to where the
+        page-aligned split falls (see compiler.prefill_from)."""
+        return self._cached_program(self._chunk_key(),
+                                    lambda: self._compile_mode("chunk"))
 
     def _run_program_prefill(self, program: ex.Program, params, cache,
                              batch):
@@ -418,6 +599,39 @@ class ServeEngine(ProgramServeBase):
             self._paged_jit = (program, fn)
         return self._paged_jit[1]
 
+    def _chunk_prefill_exec(self):
+        """Jitted chunk prefill (one trace per tail width; `start` and the
+        per-row match lengths are traced operands, so every width-T wave
+        shares one executable regardless of which pages matched)."""
+        program = self.chunk_program()
+        if self._chunk_jit is None or self._chunk_jit[0] is not program:
+            def run(params, cache, tokens, start, row_starts, mask):
+                return ex.prefill_from(program, params, cache, tokens,
+                                       self.eng, start=start,
+                                       row_starts=row_starts, mask=mask)
+            self._chunk_jit = (program, jax.jit(run, donate_argnums=(1,)))
+        return self._chunk_jit[1]
+
+    def _shared_prefill(self, cache, toks: np.ndarray, mask: np.ndarray,
+                        matched: np.ndarray):
+        """One admission wave's chunked prefill: run the chunk program on
+        the tail past the wave's SHORTEST match.  Rows whose own match
+        extends further recompute those positions (bit-identical to the
+        shared pages' content; their stores drop below `matched[row]`), so
+        one fused wave serves mixed match lengths.  Accounts the tokens
+        actually computed."""
+        plen = toks.shape[1]
+        admitted = matched[mask]
+        start = int(admitted.min()) if admitted.size else 0
+        tail = toks[:, start:]
+        logits, cache = self._chunk_prefill_exec()(
+            self.params, cache, jnp.asarray(tail),
+            jnp.asarray(start, jnp.int32),
+            jnp.asarray(matched, jnp.int32), jnp.asarray(mask))
+        self.serve_stats.prefill_tokens_computed += \
+            int(mask.sum()) * (plen - start)
+        return logits, cache
+
     def _spec_exec(self):
         """The jitted speculative step: ONE [B, 1+k]-wide verify execution,
         greedy acceptance, masked commit -- a single device round-trip per
@@ -462,6 +676,27 @@ class ServeEngine(ProgramServeBase):
             cache = self.mexec.replicate(cache)   # KV cache stays replicated
         return cache
 
+    def _run_cache(self, B: int):
+        """The cache a run() starts from.  Plain serving builds a fresh
+        zeroed pool per run; prefix sharing must NOT -- the index maps
+        token prefixes to block ids whose *contents* live in the pool, so
+        the pool persists across runs (stashed at run exit, reclaimed
+        here).  If the pool is gone (first run, or a prior run aborted
+        mid-donation) any surviving index nodes point at bits that no
+        longer exist, so the index resets rather than serve zeros."""
+        if self.prefix_sharing:
+            if self._pool_cache is not None:
+                cache = self._pool_cache
+                self._pool_cache = None   # donated into this run's execs
+            else:
+                if len(self.prefix_index):
+                    self.prefix_index.reset()
+                cache = self._empty_cache()
+        else:
+            cache = self._empty_cache()
+        cache["pos"] = jnp.zeros((B,), jnp.int32)   # per-slot positions
+        return cache
+
     def submit(self, prompt, max_new_tokens: int = 16):
         """Queue one prompt; returns its ticket (the key of its decoded
         token ids in run()'s results), or a falsy `SubmitRejection` when
@@ -504,11 +739,38 @@ class ServeEngine(ProgramServeBase):
         paged sentinel reproduces the same drop)."""
         return T.num_pages(min(plen + mnt, self.max_seq), self.page_size)
 
+    def _padded_row(self, prompt: np.ndarray, plen: int) -> np.ndarray:
+        """The left-padded token row prefix matching operates on (pad
+        tokens are ordinary context, so cached KV bits are a function of
+        the PADDED row, not the raw prompt)."""
+        row = np.zeros(plen, np.int32)
+        row[plen - len(prompt):] = prompt
+        return row
+
+    def _max_match_pages(self, plen: int) -> int:
+        """Matching leaves the tail at least ONE token: prefill must run a
+        non-empty span to emit the last position's logits."""
+        return (plen - 1) // self.page_size
+
+    def _fresh_needed(self, prompt: np.ndarray, plen: int, mnt: int) -> int:
+        """Blocks this request must ALLOCATE (not share), given the current
+        index state: total need minus its matched-prefix pages.  Shared
+        pages are accounted once -- joining them costs no free blocks."""
+        need = self._blocks_needed(plen, mnt)
+        if not self.prefix_sharing or len(prompt) > plen:
+            return need           # over-long prompts fail loudly in run()
+        row = self._padded_row(np.asarray(prompt, np.int32), plen)
+        m = len(self.prefix_index.match(row, self._max_match_pages(plen)))
+        return need - m
+
     def _admit(self, nfree: int, plen: int):
         """FIFO admission: dense takes up to `nfree` queued requests; paged
         additionally gates each on free blocks, head-of-line (no
         reordering -- arrival order is the serving contract), allocating
-        the request's blocks and writing its host table row."""
+        the request's blocks and writing its host table row.  Under prefix
+        sharing the gate counts only the FRESH blocks a request needs --
+        matched pages are shared, not allocated, so a wave of same-prefix
+        requests admits where private allocation would backpressure."""
         if not self.paged:
             return self._sched.take(_LM, limit=nfree)
         taken, reserved = [], 0
@@ -516,24 +778,87 @@ class ServeEngine(ProgramServeBase):
             prompt, mnt = self._sched.peek(_LM)[0]
             # gate on free minus what THIS wave already reserved: the
             # actual allocs happen later in _bind_blocks, so probing each
-            # request against the raw free count would over-admit
-            need = self._blocks_needed(plen, mnt)
+            # request against the raw free count would over-admit.  (The
+            # binding's own match can only be LONGER than this probe's --
+            # same-wave registrations add nodes, evictions never run
+            # mid-wave -- so the reservation is an upper bound.)
+            need = self._fresh_needed(prompt, plen, mnt)
             if not self.alloc.can_allocate(reserved + need):
                 break                 # backpressure: wait for frees
             reserved += need
             taken.extend(self._sched.take(_LM, limit=1))
         return taken
 
-    def _bind_blocks(self, slot: int, plen: int, mnt: int) -> None:
-        """Allocate an admitted request's blocks into its slot's table row
+    def _bind_blocks(self, slot: int, plen: int, mnt: int,
+                     row: Optional[np.ndarray] = None) -> int:
+        """Bind an admitted request's blocks into its slot's table row
         (host mirror; pushed to device at the admission edge, the only
-        point where freed blocks may be reassigned)."""
+        point where freed blocks may be reassigned).
+
+        With prefix sharing (`row` = the padded prompt), the longest
+        indexed prefix is JOINED -- refcounts bump instead of allocating
+        -- and only the remaining pages come from the free list; the
+        prompt's full pages are then registered so later arrivals can
+        match them (including same-wave ones: the wave's prefill writes
+        every admitted row's owned pages before any of them decodes).
+        Returns the matched prefix length in tokens (0 without sharing)."""
         need = self._blocks_needed(plen, mnt)
-        blocks = self.alloc.alloc(need)
+        matched: List[int] = []
+        if self.prefix_sharing and row is not None:
+            matched = self.prefix_index.match(row,
+                                              self._max_match_pages(plen))
+            if matched:
+                self.alloc.share(matched)
+                self.serve_stats.prefix_hits += 1
+                self.serve_stats.prefix_shared_blocks += len(matched)
+            else:
+                self.serve_stats.prefix_misses += 1
+        blocks = matched + self.alloc.alloc(need - len(matched))
         self._slot_blocks[slot] = blocks
-        row = np.full(self.kv_pages, self.alloc.num_blocks, np.int32)
-        row[:need] = blocks
-        self._host_tables[slot] = row
+        trow = np.full(self.kv_pages, self.alloc.num_blocks, np.int32)
+        trow[:need] = blocks
+        self._host_tables[slot] = trow
+        if self.prefix_sharing and row is not None:
+            # register only pages FULLY covered by the prompt: a partial
+            # last page is decode-writable, so it stays request-private
+            self.prefix_index.register(row, blocks,
+                                       plen // self.page_size)
+        return len(matched) * self.page_size
+
+    def _ensure_admissible(self, plen: int) -> None:
+        """Called when the queue is non-empty but no slot is active and
+        admission produced nothing.  Without sharing that means the pool
+        itself is too small (nothing in flight will ever free blocks), so
+        raise.  With sharing the prefix index may be what is holding
+        blocks: this is the quiescent point -- no slot owns a table row --
+        so leaf index nodes can be evicted without invalidating any bound
+        table, and admission retries after eviction."""
+        if not self.paged:
+            return
+        prompt, mnt = self._sched.peek(_LM)[0]
+        need = self._blocks_needed(plen, mnt)
+        if self.prefix_sharing:
+            fresh = need
+            protected: set = set()
+            if len(prompt) <= plen:
+                row = self._padded_row(np.asarray(prompt, np.int32), plen)
+                mblocks = self.prefix_index.match(
+                    row, self._max_match_pages(plen))
+                fresh = need - len(mblocks)
+                protected = set(mblocks)
+            self.prefix_index.evict_for(fresh, protected=protected)
+            if self.alloc.free_blocks >= fresh:
+                return                # admission will succeed next pass
+            raise RuntimeError(
+                f"queued request needs {fresh} fresh KV blocks beyond its "
+                f"shared prefix but only {self.alloc.free_blocks} of "
+                f"{self.alloc.num_blocks} are free after evicting unshared "
+                "prefixes; raise kv_blocks or shrink the request")
+        if self.alloc.in_use == 0:
+            raise RuntimeError(
+                f"queued request needs {need} KV blocks "
+                f"but the pool holds {self.alloc.num_blocks} "
+                "total; raise kv_blocks or shrink the request")
 
     def _release_blocks(self, slot: int) -> None:
         """Response edge: return the slot's blocks and clear its row to the
@@ -584,8 +909,7 @@ class ServeEngine(ProgramServeBase):
                         else self._prefill_exec())
         decode_exec = self._decode_exec()
 
-        cache = self._empty_cache()
-        cache["pos"] = jnp.zeros((B,), jnp.int32)   # per-slot positions
+        cache = self._run_cache(B)
         cur = jnp.zeros((B, 1), jnp.int32)
         tickets: List[Optional[int]] = [None] * B
         remaining = np.zeros(B, np.int64)
@@ -616,6 +940,7 @@ class ServeEngine(ProgramServeBase):
                 if taken:
                     toks = np.zeros((B, plen), np.int32)
                     mask = np.zeros(B, bool)
+                    matched = np.full(B, plen, np.int32)
                     for slot, (ticket, (prompt, mnt)) in zip(free, taken):
                         if len(prompt) > plen:
                             raise ValueError(
@@ -630,7 +955,10 @@ class ServeEngine(ProgramServeBase):
                         remaining[slot] = mnt
                         start[slot] = step
                         if self.paged:
-                            self._bind_blocks(slot, plen, mnt)
+                            matched[slot] = self._bind_blocks(
+                                slot, plen, mnt,
+                                row=(toks[slot] if self.prefix_sharing
+                                     else None))
                     jmask = jnp.asarray(mask)
                     # batched prefill of the refill slots only; foreign rows
                     # compute garbage that the masked merge throws away
@@ -638,14 +966,22 @@ class ServeEngine(ProgramServeBase):
                         # admission edge: push the host table (new rows AND
                         # rows cleared at response edges) before any writes
                         cache["tables"] = jnp.asarray(self._host_tables)
-                        logits, cache = prefill_exec(
-                            self.params, cache,
-                            {"tokens": jnp.asarray(toks)}, jmask)
+                        if self.prefix_sharing:
+                            logits, cache = self._shared_prefill(
+                                cache, toks, mask, matched)
+                        else:
+                            logits, cache = prefill_exec(
+                                self.params, cache,
+                                {"tokens": jnp.asarray(toks)}, jmask)
+                            self.serve_stats.prefill_tokens_computed += (
+                                len(taken) * plen)
                     else:
                         logits, fresh = prefill_exec(
                             self.params, self._empty_cache(),
                             {"tokens": jnp.asarray(toks)})
                         cache = self.jmerge(cache, fresh, jmask)
+                        self.serve_stats.prefill_tokens_computed += (
+                            len(taken) * plen)
                     first = jnp.argmax(logits[:, -1, :], axis=-1)
                     cur = jnp.where(jmask[:, None], first[:, None], cur
                                     ).astype(jnp.int32)
@@ -656,13 +992,7 @@ class ServeEngine(ProgramServeBase):
             act = [i for i in range(B) if remaining[i] > 0]
             if not act:
                 if sched.pending(_LM):
-                    if self.paged and self.alloc.in_use == 0:
-                        prompt, mnt = sched.peek(_LM)[0]
-                        raise RuntimeError(
-                            f"queued request needs "
-                            f"{self._blocks_needed(plen, mnt)} KV blocks "
-                            f"but the pool holds {self.alloc.num_blocks} "
-                            "total; raise kv_blocks or shrink the request")
+                    self._ensure_admissible(plen)
                     continue
                 break
             burst = int(min(self.decode_burst,
@@ -697,6 +1027,8 @@ class ServeEngine(ProgramServeBase):
                     if id(b[1]) not in kept_ids:
                         block_np.pop(id(b[1]), None)
                 blocks = keep
+        if self.prefix_sharing:
+            self._pool_cache = cache   # warm prefix bits survive the run
         return results
 
     @staticmethod
@@ -741,8 +1073,7 @@ class ServeEngine(ProgramServeBase):
                         else self._prefill_exec())
         spec_exec = self._spec_exec()
 
-        cache = self._empty_cache()
-        cache["pos"] = jnp.zeros((B,), jnp.int32)
+        cache = self._run_cache(B)
         cur = np.zeros(B, np.int32)
         tickets: List[Optional[int]] = [None] * B
         remaining = np.zeros(B, np.int64)
@@ -756,6 +1087,7 @@ class ServeEngine(ProgramServeBase):
                 if taken:
                     toks = np.zeros((B, plen), np.int32)
                     mask = np.zeros(B, bool)
+                    matched = np.full(B, plen, np.int32)
                     for slot, (ticket, (prompt, mnt)) in zip(free, taken):
                         if len(prompt) > plen:
                             raise ValueError(
@@ -771,18 +1103,29 @@ class ServeEngine(ProgramServeBase):
                         hist[slot] = [int(t) for t in prompt]
                         out[slot] = []
                         if self.paged:
-                            self._bind_blocks(slot, plen, mnt)
+                            matched[slot] = self._bind_blocks(
+                                slot, plen, mnt,
+                                row=(toks[slot] if self.prefix_sharing
+                                     else None))
                     jmask = jnp.asarray(mask)
                     if self.paged:
                         cache["tables"] = jnp.asarray(self._host_tables)
-                        logits, cache = prefill_exec(
-                            self.params, cache,
-                            {"tokens": jnp.asarray(toks)}, jmask)
+                        if self.prefix_sharing:
+                            logits, cache = self._shared_prefill(
+                                cache, toks, mask, matched)
+                        else:
+                            logits, cache = prefill_exec(
+                                self.params, cache,
+                                {"tokens": jnp.asarray(toks)}, jmask)
+                            self.serve_stats.prefill_tokens_computed += (
+                                len(taken) * plen)
                     else:
                         logits, fresh = prefill_exec(
                             self.params, self._empty_cache(),
                             {"tokens": jnp.asarray(toks)})
                         cache = self.jmerge(cache, fresh, jmask)
+                        self.serve_stats.prefill_tokens_computed += (
+                            len(taken) * plen)
                     first = np.asarray(jnp.argmax(logits[:, -1, :], -1))
                     for slot in free[:len(taken)]:
                         cur[slot] = first[slot]
@@ -793,13 +1136,7 @@ class ServeEngine(ProgramServeBase):
             act = [i for i in range(B) if remaining[i] > 0]
             if not act:
                 if sched.pending(_LM):
-                    if self.paged and self.alloc.in_use == 0:
-                        prompt, mnt = sched.peek(_LM)[0]
-                        raise RuntimeError(
-                            f"queued request needs "
-                            f"{self._blocks_needed(plen, mnt)} KV blocks "
-                            f"but the pool holds {self.alloc.num_blocks} "
-                            "total; raise kv_blocks or shrink the request")
+                    self._ensure_admissible(plen)
                     continue
                 break
 
@@ -834,6 +1171,8 @@ class ServeEngine(ProgramServeBase):
                     self.latency.completed(tickets[i])
                     if self.paged:
                         self._release_blocks(i)
+        if self.prefix_sharing:
+            self._pool_cache = cache   # warm prefix bits survive the run
         return results
 
     # -- generation ----------------------------------------------------------
@@ -927,12 +1266,26 @@ class ServeEngine(ProgramServeBase):
             "slot_refill_rate": s.refill_rate,
             "slot_occupancy": s.slot_occupancy,
             "rejected_requests": s.rejected_requests,
+            "prefill_tokens_computed": s.prefill_tokens_computed,
             "latency_ms": self.latency.percentiles(),
         })
         out.update(self._kv_memory())
         if self.paged:
             out["page_size"] = self.page_size
             out["kv_blocks"] = self.alloc.describe()
+        if self.prefix_sharing or self.prefix_sharing_blockers:
+            ps = {"enabled": self.prefix_sharing,
+                  "blockers": list(self.prefix_sharing_blockers)}
+            if self.prefix_index is not None:
+                ps.update({
+                    "hits": s.prefix_hits,
+                    "misses": s.prefix_misses,
+                    "shared_blocks": s.prefix_shared_blocks,
+                    "evictions": self.prefix_index.evictions,
+                    "index_nodes": len(self.prefix_index),
+                    "held_only": self.prefix_index.held_only(),
+                })
+            out["prefix_sharing"] = ps
         if self.draft_len:
             out.update({
                 "spec_steps": s.spec_steps,

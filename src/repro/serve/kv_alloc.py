@@ -13,6 +13,14 @@ A free-list allocator is enough: all blocks are interchangeable (one page
 of every global layer's pool), so there is no external fragmentation --
 any `n <= len(free)` request is satisfiable.  The free list is LIFO, which
 keeps the working set of hot blocks dense.
+
+Blocks are REFCOUNTED so one physical block can back many block tables
+(prefix sharing): `alloc()` hands out blocks at refcount 1, `share()`
+bumps an in-use block's count, and `free()` decrements -- a block returns
+to the free list only when its count reaches zero.  Shared blocks are
+read-only by convention (the engine writes a request's KV only into pages
+it allocated itself -- copy-on-write at the page boundary), so the
+allocator needs no copy machinery, just ownership counting.
 """
 from __future__ import annotations
 
@@ -28,6 +36,8 @@ class AllocStats:
     blocks_served: int = 0     # total blocks handed out
     denied: int = 0            # can_allocate=False probes (backpressure)
     peak_in_use: int = 0
+    shares: int = 0            # share() calls (prefix-sharing joins)
+    shared_blocks: int = 0     # total refcount bumps across share() calls
 
 
 class BlockAllocator:
@@ -38,6 +48,9 @@ class BlockAllocator:
             raise ValueError(f"num_blocks must be >= 1, got {num_blocks}")
         self.num_blocks = num_blocks
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        # per-block owner count: 0 = on the free list, >= 1 = in use by
+        # that many block tables (or the prefix index)
+        self._refs: List[int] = [0] * num_blocks
         self.stats = AllocStats()
 
     @property
@@ -51,6 +64,13 @@ class BlockAllocator:
     def utilization(self) -> float:
         return self.in_use / self.num_blocks
 
+    def refcount(self, block: int) -> int:
+        """Current owner count of one block (0 = free)."""
+        if not 0 <= block < self.num_blocks:
+            raise ValueError(f"block id {block} out of range "
+                             f"[0, {self.num_blocks})")
+        return self._refs[block]
+
     def can_allocate(self, n: int) -> bool:
         """Admission probe; a False result is counted as backpressure."""
         ok = n <= len(self._free)
@@ -59,7 +79,8 @@ class BlockAllocator:
         return ok
 
     def alloc(self, n: int) -> List[int]:
-        """Pop `n` block ids, or raise -- callers gate on can_allocate."""
+        """Pop `n` block ids at refcount 1, or raise -- callers gate on
+        can_allocate."""
         if n < 0:
             raise ValueError(f"cannot allocate {n} blocks")
         if n > len(self._free):
@@ -68,20 +89,47 @@ class BlockAllocator:
                 f"of {self.num_blocks} (admission must gate on "
                 "can_allocate)")
         out = [self._free.pop() for _ in range(n)]
+        for b in out:
+            self._refs[b] = 1
         self.stats.allocs += 1
         self.stats.blocks_served += n
         self.stats.peak_in_use = max(self.stats.peak_in_use, self.in_use)
         return out
 
-    def free(self, blocks: List[int]) -> None:
-        """Return a request's blocks to the pool (double-free is a bug)."""
+    def share(self, blocks: List[int]) -> List[int]:
+        """Add one owner to each in-use block (prefix-sharing join).
+
+        Returns the same ids so call sites can bind the result like an
+        alloc.  Sharing a free block is a bug: the caller's prefix index
+        held a stale pointer."""
         for b in blocks:
             if not 0 <= b < self.num_blocks:
                 raise ValueError(f"block id {b} out of range "
                                  f"[0, {self.num_blocks})")
-            if b in self._free:
+            if self._refs[b] == 0:
+                raise ValueError(f"cannot share free block {b}")
+        for b in blocks:
+            self._refs[b] += 1
+        if blocks:
+            self.stats.shares += 1
+            self.stats.shared_blocks += len(blocks)
+        return list(blocks)
+
+    def free(self, blocks: List[int]) -> None:
+        """Drop one owner per block; blocks reaching refcount zero return
+        to the pool (releasing an already-free block is a bug)."""
+        for b in blocks:
+            if not 0 <= b < self.num_blocks:
+                raise ValueError(f"block id {b} out of range "
+                                 f"[0, {self.num_blocks})")
+            if self._refs[b] == 0:
                 raise ValueError(f"double free of block {b}")
-        self._free.extend(blocks)
+        released = []
+        for b in blocks:
+            self._refs[b] -= 1
+            if self._refs[b] == 0:
+                released.append(b)
+        self._free.extend(released)
         if blocks:
             self.stats.frees += 1
 
@@ -95,4 +143,6 @@ class BlockAllocator:
             "allocs": self.stats.allocs,
             "frees": self.stats.frees,
             "denied": self.stats.denied,
+            "shares": self.stats.shares,
+            "shared_blocks": self.stats.shared_blocks,
         }

@@ -312,6 +312,90 @@ class TestFabricPump:
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
             np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
 
+    def test_multi_model_dict_round_robin(self):
+        """The per-model submission dict: two registered CNNs with DIFFERENT
+        input shapes serve through one pump.run({name: imgs}, prompts) call.
+        Waves drain round-robin across the shape groups, each model fuses
+        its own program pair with the LM decode lane, and every output is
+        bit-identical to serialized and isolated execution."""
+        def build(interleave):
+            from repro.serve.base import FabricPump
+            from repro.serve.cnn_engine import CNNServeEngine
+            from repro.serve.engine import ServeEngine
+            cfg_a, params_a, xa = _cnn_setup("squeezenet", hw=32)
+            cfg_b = dataclasses.replace(CNN_ZOO["squeezenet"], input_hw=64,
+                                        name="squeezenet64")
+            params_b = init_params(cnn_lib.cnn_schema(cfg_b),
+                                   jax.random.PRNGKey(2))
+            xb = jnp.asarray(np.random.default_rng(3).normal(
+                size=(2, 64, 64, cfg_b.input_ch)).astype(np.float32) * 0.5)
+            arch, lm_params, toks = _lm_setup()
+            cnn = CNNServeEngine(eng_lib.paper_engine(), wave_size=WAVE)
+            cnn.register(cfg_a, params_a, calib_batches=[xa])
+            cnn.register(cfg_b, params_b, calib_batches=[xb])
+            lm = ServeEngine(arch, lm_params,
+                             EngineConfig(quant="w8a8", backend="ref"),
+                             batch_size=B, max_seq=MAX_SEQ,
+                             calib_batches=[toks], prefill_len=PLEN)
+            return FabricPump(cnn, lm, interleave=interleave), cfg_a, cfg_b, arch
+
+        rng = np.random.default_rng(7)
+        imgs_a = [rng.normal(size=(32, 32, 3)).astype(np.float32)
+                  for _ in range(5)]
+        imgs_b = [rng.normal(size=(64, 64, 3)).astype(np.float32)
+                  for _ in range(3)]
+        pump, cfg_a, cfg_b, arch = build(interleave=True)
+        prompts = [rng.integers(0, arch.vocab_size, size=PLEN
+                                ).astype(np.int32) for _ in range(N_PROMPTS)]
+        subs = {cfg_a.name: imgs_a, cfg_b.name: imgs_b}
+        il_logits, il_tokens = pump.run(subs, prompts,
+                                        max_new_tokens=NEW_TOKENS)
+        st = pump.stats()
+        assert st["fused_ticks"] > 0
+        assert set(st["merged_by_model"]) == {cfg_a.name, cfg_b.name}
+        assert pump.cnn.execs_by_model[cfg_a.name] == 2   # 5 imgs / wave 4
+        assert pump.cnn.execs_by_model[cfg_b.name] == 1   # 3 imgs / wave 4
+        assert pump.cnn.wave_stats.waves == 3
+
+        sp, _, _, _ = build(interleave=False)
+        sr_logits, sr_tokens = sp.run(subs, prompts,
+                                      max_new_tokens=NEW_TOKENS)
+        assert sp.stats()["fused_ticks"] == 0
+
+        iso, _, _, _ = build(interleave=True)
+        iso_logits = ([np.asarray(r) for r in
+                       iso.cnn.infer(cfg_a.name, np.stack(imgs_a))]
+                      + [np.asarray(r) for r in
+                         iso.cnn.infer(cfg_b.name, np.stack(imgs_b))])
+        iso_tokens = list(iso.lm.generate(list(prompts),
+                                          max_new_tokens=NEW_TOKENS))
+
+        assert len(il_logits) == len(sr_logits) == len(imgs_a) + len(imgs_b)
+        for a, b, c in zip(iso_logits, il_logits, sr_logits):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+        for a, b, c in zip(iso_tokens, list(il_tokens.values()),
+                           list(sr_tokens.values())):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+    def test_dict_form_matches_legacy_single_model(self):
+        """run({name: imgs}, prompts) and the legacy run(name, imgs,
+        prompts) positional form return identical results (same pump, so
+        the second run rides the cached programs and fused trace)."""
+        pump, cfg, arch = _pump(interleave=True)
+        images, prompts = _workload(cfg, arch)
+        leg_logits, leg_tokens = pump.run(cfg.name, images, prompts,
+                                          max_new_tokens=NEW_TOKENS)
+        new_logits, new_tokens = pump.run({cfg.name: images}, prompts,
+                                          max_new_tokens=NEW_TOKENS)
+        assert len(leg_logits) == len(new_logits) == N_IMAGES
+        for a, b in zip(leg_logits, new_logits):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(list(leg_tokens.values()),
+                        list(new_tokens.values())):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
     def test_latency_tracking(self):
         """Every request leaves a submit->response latency sample in the
         pump tracker (the serve_mixed p50/p99 evidence path)."""
